@@ -1,0 +1,140 @@
+"""Ablations extending the paper's evaluation.
+
+1. **Future-leak ablation** (the paper's core motivation): replace the DDS
+   graph with a static *undirected* order<->entity graph — entities aggregate
+   ALL linked orders including future ones, exactly the condition DDS is
+   designed to prevent.  Since our `past_chargebacks` feature is
+   label-derived (with reporting delay), future information flowing through
+   entities is genuine leakage: expect inflated fit on seen time ranges and
+   a larger generalization gap vs DDS.
+2. **Partition size** — the paper: "It would be interesting to further
+   explore how could the partition size impact our model performance."  We
+   sweep community_size and answer.
+3. **Entity history** — 'all' past snapshots vs 'consecutive' chaining.
+
+Run: PYTHONPATH=src python -m benchmarks.ablations
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+
+def _make_leaky_batches(static, community_size=256, max_deg=24, seed=0):
+    """Static undirected graph per community: order<->entity both directions,
+    no snapshots, no shadows.  Entities see the future."""
+    from repro.core.dds import DDSGraph
+    from repro.core.graph import COOGraph, EdgeType, NodeType, pad_graph
+    from repro.core.partition import partition_transactions
+    from repro.data.pipeline import CommunityBatch
+    from repro.utils.padding import pad_to_multiple
+
+    comm = partition_transactions(static.num_orders, static.num_entities,
+                                  static.edges, community_size=community_size,
+                                  seed=seed)
+    order_comm, entity_comm = comm[: static.num_orders], comm[static.num_orders:]
+    raw = []
+    for c in np.unique(comm):
+        lo = np.nonzero(order_comm == c)[0]
+        le = np.nonzero(entity_comm == c)[0]
+        if lo.size < 4:
+            continue
+        keep = (order_comm[static.edges[:, 0]] == c) & (entity_comm[static.edges[:, 1]] == c)
+        kept = static.edges[keep]
+        if kept.size == 0:
+            continue
+        o_lut = np.full(static.num_orders, -1, np.int64)
+        o_lut[lo] = np.arange(lo.size)
+        e_lut = np.full(static.num_entities, -1, np.int64)
+        e_lut[le] = np.arange(le.size)
+        o_local = o_lut[kept[:, 0]]
+        e_local = e_lut[kept[:, 1]] + lo.size          # entities after orders
+        n = lo.size + le.size
+        # undirected: order->entity (SHADOW_TO_ENTITY role) and
+        # entity->order tagged as the final-hop type so the LNN head applies
+        src = np.concatenate([o_local, e_local])
+        dst = np.concatenate([e_local, o_local])
+        et = np.concatenate([
+            np.full(o_local.size, EdgeType.SHADOW_TO_ENTITY, np.int32),
+            np.full(o_local.size, EdgeType.ENTITY_TO_ORDER, np.int32),
+        ])
+        feats = np.zeros((n, static.order_features.shape[1]), np.float32)
+        feats[: lo.size] = static.order_features[lo]
+        ntype = np.full(n, NodeType.ENTITY, np.int32)
+        ntype[: lo.size] = NodeType.ORDER
+        label = np.zeros(n, np.float32)
+        label[: lo.size] = static.labels[lo]
+        lmask = np.zeros(n, np.float32)
+        lmask[: lo.size] = 1.0
+        coo = COOGraph(num_nodes=n, src=src, dst=dst, etype=et, features=feats,
+                       node_type=ntype, snapshot=np.zeros(n, np.int32),
+                       label=label, label_mask=lmask)
+        raw.append((coo, lo))
+    budget = pad_to_multiple(max(c.num_nodes for c, _ in raw), 8)
+    out = []
+    for coo, lo in raw:
+        pg = pad_graph(coo, num_nodes=budget, max_deg=max_deg)
+        dds = DDSGraph(coo=coo, num_orders=lo.size, entity_snap_ids={}, last_hop={})
+        out.append(CommunityBatch(graph=pg, global_order_ids=lo, dds=dds))
+    return out
+
+
+def run_ablations(seed: int = 0, epochs: int = 25):
+    import jax
+
+    from repro.core import LNNConfig
+    from repro.data import (SynthConfig, build_communities,
+                            generate_transactions, make_split_masks)
+    from repro.data.pipeline import standardize_features
+    from repro.train.loop import collect_scores, evaluate_lnn, train_lnn
+    from repro.train.metrics import average_precision, roc_auc
+    from repro.core.lnn import lnn_forward
+
+    g, _ = generate_transactions(SynthConfig(num_users=400, num_rings=6,
+                                             feature_noise=0.8, seed=seed))
+    split = make_split_masks(g.order_snapshot)
+    feats, _ = standardize_features(g.order_features, split == 0)
+    g.order_features = feats
+    results = {}
+
+    def fit_eval(batches, name):
+        cfg = LNNConfig(gnn_type="gcn", num_gnn_layers=3, hidden_dim=64,
+                        feat_dim=feats.shape[1], pos_weight=3.0)
+        res = train_lnn(batches, split, cfg, epochs=epochs, patience=6, seed=seed)
+        fwd = jax.jit(lambda p, gg: lnn_forward(p, cfg, gg))
+        out = {}
+        for which, nm in ((0, "train"), (1, "val"), (2, "test")):
+            y, s = collect_scores(res.params, cfg, batches, split, which, fwd)
+            out[nm] = {"auc": roc_auc(y, s), "ap": average_precision(y, s)}
+        out["gap_auc"] = out["train"]["auc"] - out["test"]["auc"]
+        results[name] = out
+        print(f"  {name:28s} train AUC {out['train']['auc']:.4f}  "
+              f"test AUC {out['test']['auc']:.4f}  gap {out['gap_auc']:+.4f}  "
+              f"test AP {out['test']['ap']:.4f}")
+        return out
+
+    print("== 1. future-leak ablation (DDS vs static undirected) ==")
+    fit_eval(build_communities(g, community_size=256, max_deg=24, seed=seed),
+             "DDS (no future info)")
+    fit_eval(_make_leaky_batches(g, community_size=256, seed=seed),
+             "static undirected (leaky)")
+
+    print("== 2. partition size (paper's open question) ==")
+    for cs in (64, 256, 1024):
+        fit_eval(build_communities(g, community_size=cs, max_deg=24, seed=seed),
+                 f"community_size={cs}")
+
+    print("== 3. entity history ==")
+    for hist in ("all", "consecutive"):
+        fit_eval(build_communities(g, community_size=256, max_deg=24,
+                                   entity_history=hist, seed=seed),
+                 f"entity_history={hist}")
+    return results
+
+
+if __name__ == "__main__":
+    import os
+    os.makedirs("experiments", exist_ok=True)
+    res = run_ablations()
+    json.dump(res, open("experiments/ablations.json", "w"), indent=1, default=float)

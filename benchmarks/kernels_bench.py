@@ -1,0 +1,117 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (a
+correctness vehicle, not a perf number), so the timed path is the XLA
+reference implementation; for each kernel we also report its arithmetic
+intensity and the projected v5e time from the roofline model — the number
+the Pallas kernel is designed to approach on hardware.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _time(fn, *args, iters=20):
+    import jax
+
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6          # us
+
+
+def run_kernel_bench():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # csr_spmm: community-scale graph aggregation
+    n, deg, h = 1024, 24, 128
+    x = jnp.asarray(rng.normal(size=(n, h)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, (n, deg)), jnp.int32)
+    w = jnp.asarray(rng.uniform(size=(n, deg)), jnp.float32)
+    ref = jax.jit(ops.csr_spmm_ref)
+    us = _time(ref, x, idx, w)
+    flops = 2 * n * deg * h
+    bytes_ = (n * h + n * deg * (4 + 4) / 4 + n * h) * 4
+    rows.append(("csr_spmm_1024x24x128", us, flops, bytes_))
+
+    # edge_softmax
+    ref = jax.jit(ops.edge_softmax_agg_ref)
+    ss = jnp.asarray(rng.normal(size=n), jnp.float32)
+    sd = jnp.asarray(rng.normal(size=n), jnp.float32)
+    m = jnp.ones((n, deg), jnp.float32)
+    eb = jnp.zeros((n, deg), jnp.float32)
+    us = _time(ref, x, ss, sd, idx, m, eb)
+    rows.append(("edge_softmax_1024x24x128", us, 2 * n * deg * h + 6 * n * deg, bytes_))
+
+    # flash attention prefill tile (the XLA blockwise path it replaces)
+    from repro.models.common import blockwise_attention
+    b, hq, hkv, s, dh = 1, 8, 2, 2048, 128
+    q = jnp.asarray(rng.normal(size=(b, hq, s, dh)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, dh)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, dh)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: blockwise_attention(q, k, v, causal=True, block_k=512))
+    us = _time(f, q, k, v, iters=5)
+    flops = 2 * 2 * b * hq * s * s * dh // 2          # causal half
+    rows.append((f"blockwise_attn_{s}", us, flops, b * (hq + 2 * hkv) * s * dh * 2))
+
+    # gqa decode against a 32k cache
+    s = 32768
+    q1 = jnp.asarray(rng.normal(size=(b, hq, dh)), jnp.bfloat16)
+    kc = jnp.asarray(rng.normal(size=(b, hkv, s, dh)), jnp.bfloat16)
+    vc = jnp.asarray(rng.normal(size=(b, hkv, s, dh)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ops.gqa_decode_ref(q, k, v))
+    us = _time(f, q1, kc, vc, iters=5)
+    rows.append((f"gqa_decode_{s}", us, 2 * 2 * b * hq * s * dh,
+                 b * 2 * hkv * s * dh * 2))
+
+    # ssd chunked scan
+    from repro.kernels.ref import ssd_chunked_ref
+    b2, s2, hh, p, nst = 2, 2048, 8, 64, 64
+    xs = jnp.asarray(rng.normal(size=(b2, s2, hh, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (b2, s2, hh)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.5, 2, hh), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b2, s2, nst)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b2, s2, nst)), jnp.float32)
+    f = jax.jit(lambda *t: ssd_chunked_ref(*t, chunk=128))
+    us = _time(f, xs, dt, a, bm, cm, iters=3)
+    q = 128
+    flops = b2 * s2 * hh * (2 * q * nst + 2 * q * p + 4 * nst * p)
+    rows.append((f"ssd_chunk_{s2}", us, flops, xs.size * 4 * 3))
+
+    out = []
+    for name, us, flops, bytes_ in rows:
+        v5e_us = max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW) * 1e6
+        out.append({
+            "name": name, "us_per_call_cpu_xla": us,
+            "gflops": flops / 1e9,
+            "arith_intensity": flops / max(bytes_, 1),
+            "v5e_roofline_us": v5e_us,
+        })
+    return out
+
+
+def main():
+    rows = run_kernel_bench()
+    print("\n# Kernel micro-bench (XLA ref timed on CPU; v5e roofline projected)")
+    print(f"{'name':<26} {'us/call(cpu)':>12} {'GFLOP':>8} {'AI':>8} {'v5e_us':>9}")
+    for r in rows:
+        print(f"{r['name']:<26} {r['us_per_call_cpu_xla']:>12.1f} "
+              f"{r['gflops']:>8.2f} {r['arith_intensity']:>8.1f} "
+              f"{r['v5e_roofline_us']:>9.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

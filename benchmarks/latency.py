@@ -1,0 +1,92 @@
+"""Paper claim 3: LNN + DDS needs only a 1-hop KV lookup at inference.
+
+Benchmarks the speed layer (KV lookups + stage-2 jit) against the
+"monolithic" alternative (re-running the full GNN over the order's whole
+community per checkout — what serving without the lambda split would do).
+Reports per-request latency and the speedup (the paper's "hundreds of
+milliseconds" graph-DB query becomes a key-value fetch).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def run_latency(n_requests: int = 200):
+    import jax
+
+    from repro.core import LNNConfig, lnn_forward, lnn_init
+    from repro.data import SynthConfig, build_communities, generate_transactions, make_split_masks
+    from repro.data.pipeline import standardize_features
+    from repro.serve import LambdaPipeline
+    from repro.serve.lambda_pipeline import BatchLayer
+
+    scfg = SynthConfig(num_users=300, num_rings=6, feature_noise=0.8, seed=0)
+    g, _ = generate_transactions(scfg)
+    split = make_split_masks(g.order_snapshot)
+    feats, _ = standardize_features(g.order_features, split == 0)
+    g.order_features = feats
+    batches = build_communities(g, community_size=256, max_deg=24)
+    cfg = LNNConfig(num_gnn_layers=3, hidden_dim=64, feat_dim=feats.shape[1])
+    params = lnn_init(jax.random.PRNGKey(0), cfg)
+
+    pipe = LambdaPipeline(params, cfg, k_max=8)
+    refresh_stats = pipe.refresh(batches)
+
+    # build request stream from real orders
+    requests, owners = [], []
+    for b in batches:
+        for o, hops in b.dds.last_hop.items():
+            keys = [(BatchLayer._global_entity(b, ent), t) for ent, t, _ in hops]
+            requests.append({"features": np.asarray(b.graph.features[o]),
+                             "entity_keys": keys})
+            owners.append(b)
+            if len(requests) >= n_requests:
+                break
+        if len(requests) >= n_requests:
+            break
+
+    # --- speed layer (lambda path), single-request latency -----------------
+    pipe.score(requests[:1])                       # warm the jit
+    t0 = time.time()
+    for r in requests:
+        pipe.score([r])
+    lam_ms = (time.time() - t0) / len(requests) * 1e3
+
+    # --- batched speed layer ------------------------------------------------
+    pipe.score(requests)                           # warm the batch-shape jit
+    t0 = time.time()
+    pipe.score(requests)
+    lam_batch_ms = (time.time() - t0) / len(requests) * 1e3
+
+    # --- monolithic: full community forward per request ---------------------
+    fwd = jax.jit(lambda p, gg: lnn_forward(p, cfg, gg))
+    fwd(params, owners[0].graph)                   # warm
+    t0 = time.time()
+    for b in owners:
+        fwd(params, b.graph).block_until_ready()
+    mono_ms = (time.time() - t0) / len(owners) * 1e3
+
+    return {
+        "refresh_seconds": refresh_stats["seconds"],
+        "store_entities": refresh_stats["store_size"],
+        "lambda_ms_per_request": lam_ms,
+        "lambda_batched_ms_per_request": lam_batch_ms,
+        "monolithic_ms_per_request": mono_ms,
+        "speedup_single": mono_ms / lam_ms,
+        "speedup_batched": mono_ms / lam_batch_ms,
+        "n_requests": len(requests),
+    }
+
+
+def main():
+    r = run_latency()
+    print("\n# Lambda serving latency (paper claim 3)")
+    for k, v in r.items():
+        print(f"  {k}: {v:.3f}" if isinstance(v, float) else f"  {k}: {v}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

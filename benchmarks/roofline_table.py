@@ -1,0 +1,67 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_records(mesh: str = "single", tag: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if len(parts) < 3:
+            continue
+        mesh_part = parts[2]
+        has_tag = "_" in mesh_part
+        if tag is None and has_tag:
+            continue
+        if tag is not None and mesh_part != f"{mesh}_{tag}":
+            continue
+        if tag is None and mesh_part != mesh:
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.1f}"
+
+
+def make_table(mesh: str = "single", tag: str | None = None) -> str:
+    recs = load_records(mesh, tag)
+    by_key = {(r.get("arch"), r.get("shape")): r for r in recs}
+    archs = sorted({r.get("arch") for r in recs if r.get("arch")})
+    lines = [
+        "| arch | shape | Tc (ms) | Tm (ms) | Tcoll (ms) | bottleneck | "
+        "HLO GFLOP/chip | useful | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in archs:
+        for shape in SHAPE_ORDER:
+            r = by_key.get((arch, shape))
+            if r is None:
+                continue
+            if r.get("status") == "skip":
+                lines.append(f"| {arch} | {shape} | — | — | — | SKIP | — | — | "
+                             f"{r.get('reason','')} |")
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {fmt_ms(r['t_compute'])} | "
+                f"{fmt_ms(r['t_memory'])} | {fmt_ms(r['t_collective'])} | "
+                f"**{r['bottleneck']}** | {r['hlo_gflops']/r['chips']:.0f} | "
+                f"{r['useful_ratio']:.2f} | {r.get('note','')} |"
+            )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(make_table(mesh))

@@ -1,0 +1,65 @@
+"""Benchmark harness — one section per paper table/figure + framework extras.
+
+  table3    paper Table 3 (MLP / LGB / LNN-GAT / LNN-GCN, ROC-AUC + AP)
+  latency   paper claim 3 (lambda 1-hop KV inference vs monolithic GNN)
+  kernels   Pallas-kernel micro-bench (XLA ref timing + v5e roofline projection)
+  roofline  aggregated dry-run roofline table (if dry-run records exist)
+
+Prints ``name,us_per_call,derived`` CSV at the end for machine consumption.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    csv_rows = [("name", "us_per_call", "derived")]
+    os.makedirs("experiments", exist_ok=True)
+
+    from benchmarks.table3 import main as table3_main
+    seeds = (0, 1, 2) if os.environ.get("BENCH_FULL") else (0, 1)
+    table = table3_main(seeds=seeds)
+    json.dump(table, open("experiments/table3.json", "w"), indent=1)
+    for name, r in table.items():
+        csv_rows.append((f"table3/{name.replace(' ', '')}/auc",
+                         f"{r['train_seconds']*1e6:.0f}", f"{r['roc_auc_mean']:.4f}"))
+        csv_rows.append((f"table3/{name.replace(' ', '')}/ap",
+                         f"{r['train_seconds']*1e6:.0f}", f"{r['ap_mean']:.4f}"))
+
+    from benchmarks.latency import main as latency_main
+    lat = latency_main()
+    json.dump(lat, open("experiments/latency.json", "w"), indent=1)
+    csv_rows.append(("latency/lambda_single", f"{lat['lambda_ms_per_request']*1e3:.1f}",
+                     f"speedup={lat['speedup_single']:.1f}x"))
+    csv_rows.append(("latency/lambda_batched", f"{lat['lambda_batched_ms_per_request']*1e3:.1f}",
+                     f"speedup={lat['speedup_batched']:.1f}x"))
+    csv_rows.append(("latency/monolithic", f"{lat['monolithic_ms_per_request']*1e3:.1f}", ""))
+
+    from benchmarks.kernels_bench import main as kernels_main
+    ker = kernels_main()
+    json.dump(ker, open("experiments/kernels.json", "w"), indent=1)
+    for r in ker:
+        csv_rows.append((f"kernel/{r['name']}", f"{r['us_per_call_cpu_xla']:.1f}",
+                         f"v5e_roofline_us={r['v5e_roofline_us']:.2f}"))
+
+    from benchmarks.roofline_table import load_records
+    recs = load_records("single")
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if ok:
+        print(f"\n# Roofline: {len(ok)} dry-run records (see EXPERIMENTS.md §Roofline)")
+        for r in ok[:5]:
+            csv_rows.append((f"roofline/{r['arch']}/{r['shape']}",
+                             f"{max(r['t_compute'], r['t_memory'], r['t_collective'])*1e6:.0f}",
+                             r["bottleneck"]))
+
+    print("\n# CSV")
+    for row in csv_rows:
+        print(",".join(str(c) for c in row))
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,39 @@
+"""Dry-run demo: lower one (arch x shape) pair on the 256-chip production
+mesh and print its roofline terms — without any TPU attached.
+
+Run:  PYTHONPATH=src python examples/dryrun_demo.py [--arch granite-3-2b]
+      (takes ~1 min: three XLA compiles on the 512-placeholder-device CPU)
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+
+    # dryrun module sets XLA_FLAGS before importing jax — import it first
+    from repro.launch import dryrun
+
+    rec = dryrun.run_one(args.arch, args.shape, args.mesh, save=False)
+    if rec.get("status") != "ok":
+        print(rec)
+        return
+    print("\n== roofline summary ==")
+    print(f"  arch x shape:   {rec['arch']} x {rec['shape']} ({rec['chips']} chips)")
+    print(f"  compute term:   {rec['t_compute']*1e3:8.2f} ms")
+    print(f"  memory term:    {rec['t_memory']*1e3:8.2f} ms")
+    print(f"  collective:     {rec['t_collective']*1e3:8.2f} ms")
+    print(f"  bottleneck:     {rec['bottleneck']}")
+    print(f"  useful compute: {rec['useful_ratio']:.2f} of HLO FLOPs")
+    print(f"  collectives:    {rec['coll_detail']['counts']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Quickstart: the paper end-to-end in ~2 minutes on CPU.
+
+Generates a synthetic e-commerce transaction stream with fraud rings,
+builds the DDS graph per community, trains the LNN fraud detector for a few
+hundred community steps, and compares against the LightGBM-style baseline —
+reproducing the paper's Table-3 ordering.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.baselines import GBDTConfig, train_gbdt
+from repro.core import LNNConfig
+from repro.data import (SynthConfig, build_communities, generate_transactions,
+                        make_split_masks)
+from repro.data.pipeline import standardize_features
+from repro.train.loop import evaluate_lnn, train_lnn
+from repro.train.metrics import binary_metrics
+
+
+def main():
+    # 1. data: months of checkouts, entities shared inside fraud rings
+    print("== generating transactions ==")
+    g, _ = generate_transactions(SynthConfig(num_users=400, num_rings=6,
+                                             feature_noise=0.8, seed=0))
+    split = make_split_masks(g.order_snapshot)           # 80/10/10 by time
+    feats, _ = standardize_features(g.order_features, split == 0)
+    print(f"   {g.num_orders} orders, {g.num_entities} entities, "
+          f"fraud rate {g.labels.mean():.3f}")
+
+    # 2. tabular baseline (the paper's LGB)
+    print("== training GBDT baseline ==")
+    gbdt = train_gbdt(feats[split == 0], g.labels[split == 0], GBDTConfig(),
+                      feats[split == 1], g.labels[split == 1])
+    m = binary_metrics(g.labels[split == 2], gbdt.predict_proba(feats[split == 2]))
+    print(f"   LGB   test: AUC={m['roc_auc']:.4f} AP={m['average_precision']:.4f}")
+
+    # 3. LGB-encoded features feed the LNN (paper §4.2)
+    enc = np.concatenate([feats, gbdt.leaf_value_features(feats)], 1)
+    mu, sd = enc[split == 0].mean(0), enc[split == 0].std(0) + 1e-6
+    g.order_features = ((enc - mu) / sd).astype(np.float32)
+
+    # 4. partition -> per-community DDS graphs (no future information flow)
+    print("== building DDS communities ==")
+    batches = build_communities(g, community_size=256, max_deg=24)
+    print(f"   {len(batches)} communities, padded to "
+          f"{batches[0].graph.num_nodes} nodes each")
+
+    # 5. train the LNN end-to-end (stage1 ∘ stage2)
+    print("== training LNN(GCN) ==")
+    cfg = LNNConfig(gnn_type="gcn", num_gnn_layers=3, hidden_dim=64,
+                    feat_dim=g.order_features.shape[1], pos_weight=3.0)
+    res = train_lnn(batches, split, cfg, epochs=40, patience=8, verbose=True)
+    m2 = evaluate_lnn(res.params, cfg, batches, split, 2)
+    print(f"   LNN   test: AUC={m2['roc_auc']:.4f} AP={m2['average_precision']:.4f}")
+    print(f"\ngraph lift: +{(m2['roc_auc']-m['roc_auc'])*100:.2f} AUC pts, "
+          f"+{(m2['average_precision']-m['average_precision'])*100:.2f} AP pts "
+          f"over the tabular baseline (paper Table 3's qualitative claim)")
+
+
+if __name__ == "__main__":
+    main()

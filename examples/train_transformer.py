@@ -1,0 +1,80 @@
+"""Train a transformer-zoo architecture on CPU with the sharded train step.
+
+Uses the SAME ``make_train_step`` the 512-chip dry-run lowers, on the
+degenerate 1x1 host mesh — demonstrating that the distribution code path is
+one codebase from laptop to pod.  Trains a reduced olmo-1b on a synthetic
+copy-task (so the loss visibly collapses) for a few hundred steps.
+
+Run:  PYTHONPATH=src python examples/train_transformer.py [--arch olmo-1b]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+from repro.models.config import InputShape
+from repro.train.checkpoint import save_checkpoint
+from repro.train.optim import adamw
+
+
+def make_copy_batch(rng, cfg, batch, seq):
+    """Copy task: second half of the sequence repeats the first half —
+    a tiny model can learn it quickly, making training progress visible."""
+    half = seq // 2
+    first = rng.integers(4, cfg.vocab_size, (batch, half))
+    toks = np.concatenate([first, first], axis=1)
+    labels = np.full_like(toks, -1)
+    labels[:, half:] = toks[:, half:]          # supervise only the copy half
+    return {"tokens": jnp.asarray(toks[:, :seq], jnp.int32),
+            "labels": jnp.asarray(np.roll(labels, -1, 1)[:, :seq], jnp.int32)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    mesh = make_host_mesh()
+    shape = InputShape("copy_train", args.seq, args.batch, "train")
+    step_fn, _ = make_train_step(cfg, mesh, shape, use_remat=False, lr=1e-3)
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"{cfg.name} (reduced): {n/1e6:.1f}M params, copy-task, "
+          f"{args.steps} steps on {jax.default_backend()}")
+    init_fn, _ = adamw(1e-3)
+    opt = init_fn(params)
+    rng = np.random.default_rng(0)
+
+    t_start = time.time()
+    with mesh:
+        for step in range(args.steps):
+            batch = make_copy_batch(rng, cfg, args.batch, args.seq)
+            params, opt, aux = step_fn(params, opt, batch)
+            if step % 25 == 0 or step == args.steps - 1:
+                print(f"step {step:4d}  loss={float(aux['loss']):.4f}  "
+                      f"lr={float(aux['lr']):.2e}  "
+                      f"({(time.time()-t_start)/(step+1):.2f}s/step)")
+    os.makedirs("checkpoints", exist_ok=True)
+    save_checkpoint("checkpoints/copy_task.npz", params, step=args.steps)
+    final = float(aux["loss"])
+    print(f"\nfinal loss {final:.4f} "
+          f"({'learned the copy task' if final < 1.0 else 'still descending'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from repro.baselines.gbdt import GBDTConfig, GBDTModel, train_gbdt
+from repro.baselines.mlp import MLPConfig, mlp_init, mlp_forward, train_mlp
+
+__all__ = [
+    "GBDTConfig",
+    "GBDTModel",
+    "train_gbdt",
+    "MLPConfig",
+    "mlp_init",
+    "mlp_forward",
+    "train_mlp",
+]

@@ -1,0 +1,94 @@
+"""MLP baseline (paper Table 3 row 1) on the GBDT-encoded checkout features."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optim import adamw
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    hidden_dims: tuple = (64, 32)
+    lr: float = 1e-3
+    epochs: int = 200
+    batch_size: int = 512
+    pos_weight: float = 1.0
+    patience: int = 20
+    seed: int = 0
+
+
+def mlp_init(rng, in_dim: int, cfg: MLPConfig):
+    dims = (in_dim,) + tuple(cfg.hidden_dims) + (1,)
+    keys = jax.random.split(rng, len(dims))
+    params = []
+    for i in range(len(dims) - 1):
+        scale = jnp.sqrt(2.0 / dims[i])
+        params.append(
+            {
+                "w": scale * jax.random.normal(keys[i], (dims[i], dims[i + 1])),
+                "b": jnp.zeros((dims[i + 1],)),
+            }
+        )
+    return params
+
+
+def mlp_forward(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i + 1 < len(params):
+            x = jax.nn.relu(x)
+    return x[..., 0]
+
+
+def _bce(params, x, y, pos_weight):
+    logits = mlp_forward(params, x)
+    logp = jax.nn.log_sigmoid(logits)
+    lognp = jax.nn.log_sigmoid(-logits)
+    return -(pos_weight * y * logp + (1 - y) * lognp).mean()
+
+
+def train_mlp(
+    x: np.ndarray,
+    y: np.ndarray,
+    x_val: np.ndarray,
+    y_val: np.ndarray,
+    cfg: MLPConfig = MLPConfig(),
+):
+    """Mini-batch AdamW training with early stopping on val loss."""
+    rng = jax.random.PRNGKey(cfg.seed)
+    params = mlp_init(rng, x.shape[1], cfg)
+    init_fn, update_fn = adamw(cfg.lr, weight_decay=1e-4)
+    state = init_fn(params)
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        loss, grads = jax.value_and_grad(_bce)(params, xb, yb, cfg.pos_weight)
+        params, state, aux = update_fn(grads, state, params)
+        return params, state, loss
+
+    val_loss_fn = jax.jit(lambda p: _bce(p, x_val, y_val, cfg.pos_weight))
+
+    n = x.shape[0]
+    best_val, best_params, stall = np.inf, params, 0
+    perm_rng = np.random.default_rng(cfg.seed)
+    for _ in range(cfg.epochs):
+        perm = perm_rng.permutation(n)
+        for i in range(0, n, cfg.batch_size):
+            sl = perm[i : i + cfg.batch_size]
+            params, state, _ = step(params, state, x[sl], y[sl])
+        vl = float(val_loss_fn(params))
+        if vl < best_val - 1e-6:
+            best_val, best_params, stall = vl, params, 0
+        else:
+            stall += 1
+            if stall >= cfg.patience:
+                break
+    return best_params
+
+
+def predict_mlp(params, x: np.ndarray) -> np.ndarray:
+    return np.asarray(jax.nn.sigmoid(mlp_forward(params, jnp.asarray(x))))

@@ -1,0 +1,48 @@
+"""Assigned-architecture registry.
+
+Each module defines ``CONFIG`` (exact published configuration, source cited)
+and the registry maps ``--arch <id>`` to it.  ``reduced()`` variants feed the
+CPU smoke tests; ``with_padding(model_axis)`` feeds the sharded dry-run.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "mamba2_370m",
+    "granite_3_2b",
+    "llama_3_2_vision_90b",
+    "yi_34b",
+    "phi3_5_moe",
+    "olmo_1b",
+    "zamba2_1_2b",
+    "seamless_m4t_medium",
+    "mixtral_8x22b",
+    "qwen1_5_32b",
+]
+
+# canonical CLI names (dashes) -> module names
+CLI_ALIASES = {
+    "mamba2-370m": "mamba2_370m",
+    "granite-3-2b": "granite_3_2b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "yi-34b": "yi_34b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe",
+    "olmo-1b": "olmo_1b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "qwen1.5-32b": "qwen1_5_32b",
+}
+
+
+def get_config(arch: str):
+    mod_name = CLI_ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+    if mod_name not in ARCH_IDS and mod_name != "lnn_fraud":
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(CLI_ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {aid: get_config(aid) for aid in ARCH_IDS}

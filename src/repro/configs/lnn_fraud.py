@@ -1,0 +1,15 @@
+"""The paper's own model: LNN on DDS graphs (fraud detection).
+
+Not part of the transformer zoo; exposes the LNNConfig used by the paper
+reproduction benchmarks and examples.
+"""
+from repro.core.lnn import LNNConfig
+
+CONFIG = LNNConfig(
+    gnn_type="gcn",
+    num_gnn_layers=3,
+    hidden_dim=64,
+    mlp_dims=(64, 32),
+    feat_dim=48,          # 12 raw + 36 GBDT-encoded (paper §4.2 encoding)
+    pos_weight=3.0,
+)

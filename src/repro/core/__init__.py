@@ -1,0 +1,35 @@
+"""The paper's primary contribution: DDS graph + Lambda Neural Network."""
+from repro.core.graph import COOGraph, EdgeType, NodeType, PaddedGraph, pad_graph
+from repro.core.dds import DDSGraph, StaticGraph, build_dds, check_no_future_leak
+from repro.core.lnn import (
+    LNNConfig,
+    lnn_forward,
+    lnn_init,
+    lnn_loss,
+    lnn_order_tower,
+    lnn_stage1,
+    lnn_stage2_batch,
+    lnn_stage2_online,
+)
+from repro.core.partition import partition_transactions
+
+__all__ = [
+    "COOGraph",
+    "EdgeType",
+    "NodeType",
+    "PaddedGraph",
+    "pad_graph",
+    "DDSGraph",
+    "StaticGraph",
+    "build_dds",
+    "check_no_future_leak",
+    "LNNConfig",
+    "lnn_forward",
+    "lnn_init",
+    "lnn_loss",
+    "lnn_order_tower",
+    "lnn_stage1",
+    "lnn_stage2_batch",
+    "lnn_stage2_online",
+    "partition_transactions",
+]

@@ -1,0 +1,218 @@
+"""Directed Dynamic Snapshot (DDS) graph construction — paper §3.2.
+
+Transforms a static bipartite order↔entity transaction graph into a directed
+snapshot graph in which information flows strictly from the past:
+
+1. ``order_t``     — effective order vertex, carries the label.
+2. ``order_t^s``   — shadow clone; exchanges messages with same-snapshot
+                     entities so *future* orders can see it as history, while
+                     the effective order itself never feeds the graph.
+3. ``entity_t``    — entity snapshot vertex, one per (entity, active snapshot).
+4. Edges (paper Table 2):
+   * ``order_t^s <-> entity_t``         (same snapshot, both directions)
+   * ``entity_{t-i} -> entity_t``       (history + self-loop)
+   * ``entity_{t-e} -> order_t``        (one edge per linked entity, from the
+                                         entity's latest *strictly past*
+                                         active snapshot — the only edges
+                                         needed at online inference)
+
+The construction guarantees the **no-future-leak invariant**: every directed
+edge (u→v) satisfies snapshot(u) <= snapshot(v), and the only edges *into* an
+effective order come from snapshots strictly in its past or — for the
+same-snapshot entity state — only via entity self-history that itself never
+saw the order.  Property-tested in ``tests/test_dds_properties.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.graph import COOGraph, EdgeType, NodeType
+
+
+@dataclass
+class StaticGraph:
+    """Host-side static transaction graph (paper §3.2 'Static Graph').
+
+    ``edges`` is an [E, 2] int64 array of (order_id, entity_id); each order
+    links at most one entity per entity *type* (shipping address, email, IP,
+    device, phone, payment token, account — paper lists 7).
+    """
+
+    num_orders: int
+    num_entities: int
+    edges: np.ndarray              # [E, 2] (order, entity)
+    order_snapshot: np.ndarray     # [O] int — snapshot index of checkout
+    order_features: np.ndarray     # [O, F] float32 — raw checkout features
+    labels: np.ndarray             # [O] {0,1} — unauthenticated chargeback
+    entity_type: np.ndarray | None = None   # [num_entities] int — optional
+    num_snapshots: int = field(default=0)
+
+    def __post_init__(self):
+        if self.num_snapshots == 0:
+            self.num_snapshots = int(self.order_snapshot.max()) + 1 if self.num_orders else 0
+
+
+@dataclass
+class DDSGraph:
+    """The DDS graph plus bookkeeping to map back to static ids."""
+
+    coo: COOGraph
+    # node-id layout: [0, O) effective orders; [O, 2O) shadows;
+    # [2O, 2O + num_entity_snap_nodes) entity-snapshot vertices.
+    num_orders: int
+    entity_snap_ids: dict          # (entity, t) -> node id
+    # the final-hop table (speed-layer input): for each order, the entity
+    # snapshot node ids feeding its ENTITY_TO_ORDER edges
+    last_hop: dict                 # order id -> list[(entity, t_e, node_id)]
+
+    @property
+    def shadow_offset(self) -> int:
+        return self.num_orders
+
+
+def build_dds(
+    g: StaticGraph,
+    entity_history: str = "all",
+    max_history: int | None = None,
+) -> DDSGraph:
+    """Build the DDS graph from a static transaction graph.
+
+    entity_history:
+      * ``'all'``          — edge from every past active snapshot (paper default:
+                             "entity_t may be connected with a bunch of
+                             entity_{t-i}"), optionally capped at
+                             ``max_history`` most recent.
+      * ``'consecutive'``  — edge only from the previous active snapshot
+                             (information still flows transitively; cheaper).
+    Always adds the self-loop ``entity_t -> entity_t``.
+    """
+    if entity_history not in ("all", "consecutive"):
+        raise ValueError(entity_history)
+    O = g.num_orders
+
+    # --- which (entity, t) pairs are active (linked to >= 1 order in t) ----
+    order_of_edge = g.edges[:, 0]
+    entity_of_edge = g.edges[:, 1]
+    t_of_edge = g.order_snapshot[order_of_edge]
+
+    pair_keys = entity_of_edge.astype(np.int64) * (g.num_snapshots + 1) + t_of_edge
+    uniq_keys = np.unique(pair_keys)
+    uniq_entity = uniq_keys // (g.num_snapshots + 1)
+    uniq_t = uniq_keys % (g.num_snapshots + 1)
+    entity_snap_ids: dict = {}
+    for i, (ent, t) in enumerate(zip(uniq_entity.tolist(), uniq_t.tolist())):
+        entity_snap_ids[(ent, t)] = 2 * O + i
+    n_nodes = 2 * O + len(entity_snap_ids)
+
+    # active snapshots per entity, sorted ascending
+    active: dict = {}
+    for ent, t in zip(uniq_entity.tolist(), uniq_t.tolist()):
+        active.setdefault(ent, []).append(t)
+    for ent in active:
+        active[ent].sort()
+
+    src, dst, et = [], [], []
+
+    # --- shadow <-> entity (same snapshot) --------------------------------
+    for o, ent, t in zip(order_of_edge.tolist(), entity_of_edge.tolist(), t_of_edge.tolist()):
+        e_node = entity_snap_ids[(ent, t)]
+        s_node = O + o  # shadow clone of order o
+        src.append(s_node); dst.append(e_node); et.append(EdgeType.SHADOW_TO_ENTITY)
+        src.append(e_node); dst.append(s_node); et.append(EdgeType.ENTITY_TO_SHADOW)
+
+    # --- entity history (entity_{t-i} -> entity_t, incl. self loop) -------
+    for ent, snaps in active.items():
+        for j, t in enumerate(snaps):
+            cur = entity_snap_ids[(ent, t)]
+            src.append(cur); dst.append(cur); et.append(EdgeType.ENTITY_HIST)  # self-loop
+            if entity_history == "consecutive":
+                past = snaps[j - 1 : j] if j > 0 else []
+            else:
+                past = snaps[:j]
+                if max_history is not None:
+                    past = past[-max_history:]
+            for tp in past:
+                src.append(entity_snap_ids[(ent, tp)]); dst.append(cur); et.append(EdgeType.ENTITY_HIST)
+
+    # --- effective entity -> order (the final 1-hop edges) ----------------
+    last_hop: dict = {}
+    for o, ent, t in zip(order_of_edge.tolist(), entity_of_edge.tolist(), t_of_edge.tolist()):
+        snaps = active[ent]
+        # latest active snapshot strictly before t  (paper: 0 <= t-e < t)
+        idx = np.searchsorted(snaps, t) - 1
+        if idx < 0:
+            continue  # cold entity: no history before this order
+        t_e = snaps[idx]
+        e_node = entity_snap_ids[(ent, t_e)]
+        src.append(e_node); dst.append(o); et.append(EdgeType.ENTITY_TO_ORDER)
+        last_hop.setdefault(o, []).append((ent, t_e, e_node))
+
+    # --- node tables -------------------------------------------------------
+    F = g.order_features.shape[1]
+    features = np.zeros((n_nodes, F), np.float32)
+    features[:O] = g.order_features
+    features[O : 2 * O] = g.order_features  # shadows share raw features
+    # entity features are zero per paper §4.2 ("initial features set to zero")
+
+    node_type = np.full(n_nodes, NodeType.ENTITY, np.int32)
+    node_type[:O] = NodeType.ORDER
+    node_type[O : 2 * O] = NodeType.SHADOW
+
+    snapshot = np.zeros(n_nodes, np.int32)
+    snapshot[:O] = g.order_snapshot
+    snapshot[O : 2 * O] = g.order_snapshot
+    for (ent, t), nid in entity_snap_ids.items():
+        snapshot[nid] = t
+
+    label = np.zeros(n_nodes, np.float32)
+    label[:O] = g.labels
+    label_mask = np.zeros(n_nodes, np.float32)
+    label_mask[:O] = 1.0  # only effective orders are supervised
+
+    coo = COOGraph(
+        num_nodes=n_nodes,
+        src=np.asarray(src, np.int64),
+        dst=np.asarray(dst, np.int64),
+        etype=np.asarray(et, np.int32),
+        features=features,
+        node_type=node_type,
+        snapshot=snapshot,
+        label=label,
+        label_mask=label_mask,
+    )
+    return DDSGraph(coo=coo, num_orders=O, entity_snap_ids=entity_snap_ids, last_hop=last_hop)
+
+
+def check_no_future_leak(dds: DDSGraph) -> None:
+    """Assert the DDS invariants (used by property tests):
+
+    1. every edge u->v has snapshot(u) <= snapshot(v);
+    2. edges into an effective ORDER come only from strictly-past entity
+       snapshots (EdgeType.ENTITY_TO_ORDER with snapshot(u) < snapshot(v));
+    3. effective ORDER vertices have no outgoing edges (labels never leak);
+    4. same-snapshot edges only connect shadows and entities.
+    """
+    coo = dds.coo
+    s_snap = coo.snapshot[coo.src]
+    d_snap = coo.snapshot[coo.dst]
+    if not np.all(s_snap <= d_snap):
+        raise AssertionError("edge from future snapshot found")
+    into_order = coo.node_type[coo.dst] == NodeType.ORDER
+    if into_order.any():
+        if not np.all(coo.etype[into_order] == EdgeType.ENTITY_TO_ORDER):
+            raise AssertionError("non-final-hop edge into effective order")
+        if not np.all(s_snap[into_order] < d_snap[into_order]):
+            raise AssertionError("same/future-snapshot edge into effective order")
+    from_order = coo.node_type[coo.src] == NodeType.ORDER
+    if from_order.any():
+        raise AssertionError("effective order has outgoing edge (label leak)")
+    same = s_snap == d_snap
+    if same.any():
+        ok_types = np.isin(
+            coo.etype[same],
+            [EdgeType.SHADOW_TO_ENTITY, EdgeType.ENTITY_TO_SHADOW, EdgeType.ENTITY_HIST],
+        )
+        if not np.all(ok_types):
+            raise AssertionError("same-snapshot edge of illegal type")

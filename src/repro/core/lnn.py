@@ -1,0 +1,221 @@
+"""Lambda Neural Network (LNN) — paper §3.3.
+
+A deep GNN split in two stages at the ``entity_{t-e}`` cut:
+
+* **stage 1** (batch layer): input projection + all GNN layers except the
+  last, run over the whole DDS community graph.  Its output rows for entity
+  vertices are the embeddings that production would periodically refresh and
+  push to a key-value store.
+* **stage 2** (speed layer): the final GNN layer restricted to the
+  ``entity_{t-e} -> order_t`` final-hop edges, concatenated with the raw
+  order features, followed by an MLP scorer — exactly the computation an
+  online checkout approval performs after KV lookups.
+
+``lnn_forward = stage2 ∘ stage1`` end-to-end for training; the split is
+exact because effective orders have *only* final-hop in-edges in a DDS graph
+(verified by ``core.dds.check_no_future_leak`` and the stage-equivalence
+test).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import EdgeType, NodeType, PaddedGraph
+from repro.core.layers import LAYER_REGISTRY, _glorot, weighted_gather_sum
+
+
+@dataclass(frozen=True)
+class LNNConfig:
+    gnn_type: str = "gcn"            # 'gcn' | 'gat' | 'sage'
+    num_gnn_layers: int = 3          # total GNN layers (>= 2: stage1 has L-1)
+    hidden_dim: int = 64
+    mlp_dims: tuple = (64, 32)
+    feat_dim: int = 16               # raw checkout feature width
+    use_pallas: bool = False
+    pos_weight: float = 1.0          # BCE positive-class weight (fraud is rare)
+
+    def __post_init__(self):
+        if self.num_gnn_layers < 2:
+            raise ValueError("LNN needs >= 2 GNN layers (stage1 >= 1, stage2 == 1)")
+        if self.gnn_type not in LAYER_REGISTRY:
+            raise ValueError(f"unknown gnn_type {self.gnn_type}")
+
+
+def lnn_init(rng, cfg: LNNConfig):
+    init_fn, _ = LAYER_REGISTRY[cfg.gnn_type]
+    keys = jax.random.split(rng, cfg.num_gnn_layers + len(cfg.mlp_dims) + 3)
+    params = {
+        "input": {
+            "w": _glorot(keys[0], (cfg.feat_dim, cfg.hidden_dim)),
+            "b": jnp.zeros((cfg.hidden_dim,)),
+        },
+        # small learned embedding per node type so entities (zero features)
+        # are distinguishable from shadows at the input
+        "type_emb": 0.02 * jax.random.normal(keys[1], (4, cfg.hidden_dim)),
+        "gnn": [
+            init_fn(keys[2 + i], cfg.hidden_dim, cfg.hidden_dim)
+            for i in range(cfg.num_gnn_layers - 1)
+        ],
+        "last": init_fn(keys[1 + cfg.num_gnn_layers], cfg.hidden_dim, cfg.hidden_dim),
+        "mlp": [],
+    }
+    dims = (cfg.hidden_dim + cfg.feat_dim,) + tuple(cfg.mlp_dims) + (1,)
+    for i in range(len(dims) - 1):
+        params["mlp"].append(
+            {
+                "w": _glorot(keys[2 + cfg.num_gnn_layers + i], (dims[i], dims[i + 1])),
+                "b": jnp.zeros((dims[i + 1],)),
+            }
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Stage 1 — batch layer
+# ---------------------------------------------------------------------------
+
+def lnn_stage1(params, cfg: LNNConfig, graph: PaddedGraph):
+    """Input proj + first L-1 GNN layers.  Returns hidden states [N, H].
+
+    The final-hop ``entity_{t-e} -> order_t`` edges are *masked out* here:
+    per the paper they are consumed only by the last (speed-layer) GNN
+    layer.  This is what makes the split exact — an order's stage-1 state
+    depends only on its own raw features (see ``lnn_order_tower``), so the
+    online path needs nothing but KV lookups of entity embeddings.
+    """
+    _, apply_fn = LAYER_REGISTRY[cfg.gnn_type]
+    stage1_graph = graph._replace(
+        nbr_mask=graph.nbr_mask * (graph.nbr_etype != EdgeType.ENTITY_TO_ORDER)
+    )
+    h = graph.features @ params["input"]["w"] + params["input"]["b"]
+    h = h + params["type_emb"][graph.node_type]
+    h = jax.nn.relu(h)
+    for layer in params["gnn"]:
+        h = apply_fn(layer, h, stage1_graph, cfg.use_pallas)
+    return h
+
+
+def lnn_order_tower(params, cfg: LNNConfig, order_feats):
+    """Stage-1 state of an *order* node, computed locally from raw features.
+
+    Because stage 1 masks final-hop edges, an order aggregates nothing in
+    stage 1; each GNN layer reduces to its self-transform.  This is the
+    cheap online recomputation the speed layer performs per checkout.
+    """
+    h = order_feats @ params["input"]["w"] + params["input"]["b"]
+    h = h + params["type_emb"][NodeType.ORDER]
+    h = jax.nn.relu(h)
+    for layer in params["gnn"]:
+        # all three layer types share the self-transform form
+        h = jax.nn.relu(h @ layer["w_self"] + layer["b"])
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Stage 2 — speed layer
+# ---------------------------------------------------------------------------
+
+def _last_layer_combine(params, cfg: LNNConfig, agg, self_h):
+    """Final GNN layer math shared by the batch and online paths.
+
+    ``agg`` is the (already weighted) neighbor aggregate in *input* space,
+    ``self_h`` the node's own hidden state.
+    """
+    p = params["last"]
+    if cfg.gnn_type == "gcn":
+        # orders only receive ENTITY_TO_ORDER edges; use that etype's weight
+        out = self_h @ p["w_self"] + agg @ p["w_nbr"][EdgeType.ENTITY_TO_ORDER]
+    elif cfg.gnn_type == "sage":
+        out = self_h @ p["w_self"] + agg @ p["w_nbr"]
+    else:  # gat: agg is already in z-space (post-W); self term below
+        out = agg + self_h @ p["w_self"]
+    return jax.nn.relu(out + p["b"])
+
+
+def _mlp(params, x):
+    for i, layer in enumerate(params["mlp"]):
+        x = x @ layer["w"] + layer["b"]
+        if i + 1 < len(params["mlp"]):
+            x = jax.nn.relu(x)
+    return x[..., 0]
+
+
+def _final_hop_aggregate(params, cfg: LNNConfig, h, graph: PaddedGraph):
+    """Neighbor aggregate of the last layer, restricted to final-hop edges."""
+    w_fin = graph.nbr_mask * (graph.nbr_etype == EdgeType.ENTITY_TO_ORDER)
+    if cfg.gnn_type == "gcn" or cfg.gnn_type == "sage":
+        cnt = jnp.maximum(w_fin.sum(-1, keepdims=True), 1.0)
+        return weighted_gather_sum(h, graph.nbr_idx, w_fin / cnt, cfg.use_pallas)
+    # gat
+    p = params["last"]
+    z = h @ p["w"]
+    s_dst = z @ p["a_dst"]
+    logits = jnp.take(z @ p["a_src"], graph.nbr_idx, axis=0) + s_dst[:, None]
+    logits = logits + p["a_et"][graph.nbr_etype]
+    logits = jax.nn.leaky_relu(logits, 0.2)
+    logits = jnp.where(w_fin > 0, logits, -1e9)
+    attn = jax.nn.softmax(logits, axis=-1) * w_fin
+    msgs = jnp.take(z, graph.nbr_idx, axis=0)
+    return jnp.einsum("ndh,nd->nh", msgs, attn)
+
+
+def lnn_stage2_batch(params, cfg: LNNConfig, h, graph: PaddedGraph):
+    """Speed-layer computation over the whole padded graph (training path).
+
+    Returns logits [N]; only rows with node_type == ORDER are meaningful.
+    """
+    agg = _final_hop_aggregate(params, cfg, h, graph)
+    self_h = h
+    g_out = _last_layer_combine(params, cfg, agg, self_h)
+    x = jnp.concatenate([g_out, graph.features], axis=-1)
+    return _mlp(params, x)
+
+
+def lnn_stage2_online(params, cfg: LNNConfig, entity_emb, emb_mask, order_feats, order_h):
+    """Online scoring path: KV-fetched entity embeddings -> risk logit.
+
+    entity_emb: [B, K, H] stage-1 embeddings of the ≤K linked effective
+    entities (zero rows where absent); emb_mask: [B, K]; order_feats: [B, F]
+    raw checkout features; order_h: [B, H] the order's own stage-1 hidden
+    state (input projection of its features — recomputed online, cheap).
+    """
+    if cfg.gnn_type in ("gcn", "sage"):
+        cnt = jnp.maximum(emb_mask.sum(-1, keepdims=True), 1.0)
+        agg = jnp.einsum("bkh,bk->bh", entity_emb, emb_mask / cnt)
+    else:  # gat
+        p = params["last"]
+        z = entity_emb @ p["w"]
+        logits = z @ p["a_src"] + ((order_h @ p["w"]) @ p["a_dst"])[:, None]
+        logits = logits + p["a_et"][EdgeType.ENTITY_TO_ORDER]
+        logits = jax.nn.leaky_relu(logits, 0.2)
+        logits = jnp.where(emb_mask > 0, logits, -1e9)
+        attn = jax.nn.softmax(logits, axis=-1) * emb_mask
+        agg = jnp.einsum("bkh,bk->bh", z, attn)
+    g_out = _last_layer_combine(params, cfg, agg, order_h)
+    x = jnp.concatenate([g_out, order_feats], axis=-1)
+    return _mlp(params, x)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end
+# ---------------------------------------------------------------------------
+
+def lnn_forward(params, cfg: LNNConfig, graph: PaddedGraph):
+    """Full forward (training): stage2 ∘ stage1.  Logits [N]."""
+    h = lnn_stage1(params, cfg, graph)
+    return lnn_stage2_batch(params, cfg, h, graph)
+
+
+def lnn_loss(params, cfg: LNNConfig, graph: PaddedGraph):
+    """Masked weighted BCE over effective orders."""
+    logits = lnn_forward(params, cfg, graph)
+    is_order = (graph.node_type == NodeType.ORDER).astype(jnp.float32)
+    mask = graph.label_mask * is_order
+    y = graph.label
+    logp = jax.nn.log_sigmoid(logits)
+    lognp = jax.nn.log_sigmoid(-logits)
+    per = -(cfg.pos_weight * y * logp + (1.0 - y) * lognp)
+    return (per * mask).sum() / jnp.maximum(mask.sum(), 1.0)

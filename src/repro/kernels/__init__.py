@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Layout (one module per kernel + shared wrappers/oracles):
+  <name>.py   pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py      jit'd public wrappers (interpret=True off-TPU)
+  ref.py      pure-jnp oracles — the semantic ground truth for tests
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

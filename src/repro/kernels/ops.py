@@ -1,0 +1,58 @@
+"""Jit'd public wrappers for all kernels, with ref-path dispatch.
+
+``use_pallas`` routing policy: on TPU the Pallas path compiles natively; on
+CPU (this container) Pallas executes via ``interpret=True``.  Model code
+calls these wrappers; the sharded dry-run uses the ref path (XLA ops) so the
+lowering is backend-independent.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.csr_spmm import csr_spmm_pallas
+from repro.kernels.edge_softmax import edge_softmax_agg_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gqa_decode import gqa_decode_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def csr_spmm(h, nbr_idx, weights, block_n: int = 128, block_h: int = 128):
+    return csr_spmm_pallas(h, nbr_idx, weights, block_n=block_n, block_h=block_h,
+                           interpret=_interpret())
+
+
+def edge_softmax_agg(z, s_src, s_dst, nbr_idx, nbr_mask, etype_bias,
+                     block_n: int = 128):
+    return edge_softmax_agg_pallas(z, s_src, s_dst, nbr_idx, nbr_mask, etype_bias,
+                                   block_n=block_n, interpret=_interpret())
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=_interpret())
+
+
+def gqa_decode(q, k, v, kv_len=None, window: int | None = None, block_k: int = 512):
+    return gqa_decode_pallas(q, k, v, kv_len=kv_len, window=window,
+                             block_k=block_k, interpret=_interpret())
+
+
+def ssd_scan(x, dt, a, b, c, d_skip=None, chunk: int = 128):
+    return ssd_scan_pallas(x, dt, a, b, c, d_skip=d_skip, chunk=chunk,
+                           interpret=_interpret())
+
+
+# re-export oracles for convenience
+csr_spmm_ref = _ref.csr_spmm_ref
+edge_softmax_agg_ref = _ref.edge_softmax_agg_ref
+mha_ref = _ref.mha_ref
+gqa_decode_ref = _ref.gqa_decode_ref
+ssd_scan_ref = _ref.ssd_scan_ref
+ssd_chunked_ref = _ref.ssd_chunked_ref

@@ -1,0 +1,199 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the function here.  They are also the execution
+path used on CPU and inside the sharded dry-run lowering (``use_pallas=False``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Graph kernels (paper's batch layer)
+# ---------------------------------------------------------------------------
+
+def csr_spmm_ref(h, nbr_idx, weights):
+    """out[i] = sum_d weights[i, d] * h[nbr_idx[i, d]].
+
+    h: [N, H]; nbr_idx: [N, D] int32; weights: [N, D]."""
+    msgs = jnp.take(h, nbr_idx, axis=0)                # [N, D, H]
+    return jnp.einsum("ndh,nd->nh", msgs, weights.astype(h.dtype))
+
+
+def edge_softmax_agg_ref(z, s_src, s_dst, nbr_idx, nbr_mask, etype_bias):
+    """GAT-style masked neighbor softmax + weighted aggregation.
+
+    z: [N, H] transformed states; s_src/s_dst: [N] attention halves;
+    nbr_idx/nbr_mask/etype_bias: [N, D].  Returns [N, H].
+    """
+    logits = jnp.take(s_src, nbr_idx, axis=0) + s_dst[:, None] + etype_bias
+    logits = jax.nn.leaky_relu(logits, 0.2)
+    logits = jnp.where(nbr_mask > 0, logits, -1e9)
+    attn = jax.nn.softmax(logits, axis=-1) * nbr_mask
+    msgs = jnp.take(z, nbr_idx, axis=0)
+    return jnp.einsum("ndh,nd->nh", msgs, attn.astype(z.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Attention kernels (transformer zoo)
+# ---------------------------------------------------------------------------
+
+def mha_ref(q, k, v, causal=True, window=None, scale=None):
+    """Full O(S^2) GQA attention oracle.
+
+    q: [B, Hq, Sq, Dh]; k/v: [B, Hkv, Sk, Dh]; Hq % Hkv == 0.
+    ``window``: sliding-window size (keys within [i-window+1, i]).
+    For cross/prefix attention set causal=False.
+    """
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    if scale is None:
+        scale = dh ** -0.5
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    sk = k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # align ends (prefill/full)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv)
+
+
+def gqa_decode_ref(q, k, v, kv_len=None, window=None):
+    """Single-token decode attention oracle.
+
+    q: [B, Hq, Dh]; k/v: [B, Hkv, S, Dh] (the cache); kv_len: [B] valid
+    lengths (None = full).  ``window``: only the last ``window`` valid
+    positions attend.  Returns [B, Hq, Dh].
+    """
+    b, hq, dh = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhd,bhsd->bhs", q, kk).astype(jnp.float32) * (dh ** -0.5)
+    pos = jnp.arange(s)[None, :]
+    valid = jnp.ones((b, s), bool) if kv_len is None else pos < kv_len[:, None]
+    if window is not None:
+        lo = (s if kv_len is None else kv_len[:, None]) - window
+        valid &= pos >= lo
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhs,bhsd->bhd", p, vv)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality) scan
+# ---------------------------------------------------------------------------
+
+def ssd_scan_ref(x, dt, a, b, c, d_skip=None):
+    """Sequential SSD recurrence oracle (Mamba2, arXiv 2405.21060 eq. SSD).
+
+    x:  [B, S, H, P]   per-head inputs
+    dt: [B, S, H]      softplus-activated step sizes (>0)
+    a:  [H]            negative state decay rates (A = -exp(a_log))
+    b:  [B, S, N]      input projection (shared across heads, G=1 group)
+    c:  [B, S, N]      output projection
+    d_skip: [H] or None — skip connection weight
+    Returns y: [B, S, H, P].
+
+    Recurrence per head h:  S_t = exp(dt_t * a_h) * S_{t-1} + dt_t * (b_t ⊗ x_t)
+                            y_t = S_t^T c_t   with S in R^{N x P}
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dtt * a[None, :])            # [B,H]
+        upd = jnp.einsum("bn,bhp,bh->bhnp", bt, xt, dtt)
+        state = state * decay[..., None, None] + upd
+        yt = jnp.einsum("bhnp,bn->bhp", state, ct)
+        return state, yt
+
+    state0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(c, 1, 0).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                        # [B,S,H,P]
+    if d_skip is not None:
+        y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def ssd_chunked_ref(x, dt, a, b, c, d_skip=None, chunk: int = 64,
+                    compute_dtype=jnp.float32):
+    """Chunk-parallel SSD evaluation (the algorithm the Pallas kernel uses),
+    in pure jnp — mathematically identical to ``ssd_scan_ref``; used to test
+    the chunked decomposition independent of Pallas.
+
+    ``compute_dtype`` controls the big intra-chunk tensors (the [Q,Q,H]
+    decay/weight blocks) — bf16 halves their HBM traffic (§Perf iteration
+    for the memory-bound SSM training shapes); state math stays f32.
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    cd = compute_dtype
+    xc = x.reshape(B, nc, chunk, H, P).astype(cd)
+    dtc = dt.reshape(B, nc, chunk, H).astype(jnp.float32)
+    bc = b.reshape(B, nc, chunk, N).astype(cd)
+    cc = c.reshape(B, nc, chunk, N).astype(cd)
+
+    # cumulative log-decay within each chunk: l[t] = sum_{u<=t} dt_u * a
+    seg = dtc * a[None, None, None, :]               # [B,nc,Q,H]
+    cum = jnp.cumsum(seg, axis=2)                     # inclusive
+    total = cum[:, :, -1]                             # [B,nc,H]
+
+    # intra-chunk (causal "attention" with decay weights):
+    # y_intra[t] = sum_{u<=t} c_t·b_u * exp(cum[t]-cum[u]) * dt_u * x_u
+    scores = jnp.einsum("bkin,bkjn->bkij", cc, bc,
+                        preferred_element_type=jnp.float32)   # [B,nc,Q,Q]
+    li = cum[:, :, :, None, :]                        # t index
+    lj = cum[:, :, None, :, :]                        # u index
+    decay = jnp.exp(jnp.clip(li - lj, -60.0, 0.0)).astype(cd)  # [B,nc,Q,Q,H]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = scores.astype(cd)[..., None] * decay * causal[None, None, :, :, None]
+    y_intra = jnp.einsum("bkijh,bkjh,bkjhp->bkihp", w, dtc.astype(cd), xc,
+                         preferred_element_type=jnp.float32)
+
+    # chunk states: S_k = sum_u exp(total - cum[u]) dt_u (b_u ⊗ x_u)
+    dec_state = jnp.exp(jnp.clip(total[:, :, None] - cum, -60.0, 0.0))  # [B,nc,Q,H]
+    s_chunk = jnp.einsum("bkjn,bkjh,bkjhp->bkhnp", bc.astype(jnp.float32),
+                         dec_state * dtc, xc.astype(jnp.float32))
+
+    # inter-chunk scan over k: state carried with decay exp(total)
+    def scan_fn(carry, inp):
+        s_k, tot_k = inp                              # [B,H,N,P], [B,H]
+        new = carry * jnp.exp(jnp.clip(tot_k, -60.0, 0.0))[..., None, None] + s_k
+        return new, carry                             # emit state *before* chunk
+
+    _, prev_states = jax.lax.scan(
+        scan_fn,
+        jnp.zeros((B, H, N, P), jnp.float32),
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)     # [B,nc,H,N,P]
+
+    # inter-chunk contribution: y_inter[t] = (exp(cum[t]) * c_t) · S_prev
+    y_inter = jnp.einsum(
+        "bkin,bkih,bkhnp->bkihp", cc.astype(jnp.float32),
+        jnp.exp(jnp.clip(cum, -60.0, 0.0)), prev_states
+    )
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(B, S, H, P)
+    if d_skip is not None:
+        y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype)

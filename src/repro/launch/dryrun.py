@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first backend initialization.  This module is the ONLY place the
+# 512 placeholder devices exist; tests/benches see the real 1-CPU backend.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape x mesh) combination:
+  lower the sharded step with ShapeDtypeStruct inputs, compile it, and emit
+  memory_analysis + cost_analysis + the collective schedule into a JSON
+  record under experiments/dryrun/.  A compile failure here is a sharding
+  bug in the framework.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 baselines
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import CLI_ALIASES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+from repro.launch.specs import input_specs, supports_shape
+from repro.launch.steps import make_step
+from repro.models.config import INPUT_SHAPES
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _memory_stats(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    out = {}
+    for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes"):
+        val = getattr(ma, key, None)
+        if val is not None:
+            out[key] = int(val)
+    if not out:
+        out = {"repr": str(ma)}
+    return out
+
+
+def _cost_tuple(compiled, cfg=None):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    from repro.launch.roofline import collective_bytes
+    coll = collective_bytes(hlo)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+    }
+
+
+def _lin_combine(base, deltas, weights):
+    """base + sum_g weights[g] * deltas[g] applied to the cost dicts."""
+    out = {
+        "flops": base["flops"],
+        "bytes": base["bytes"],
+        "coll": {
+            "bytes": dict(base["coll"]["bytes"]),
+            "counts": dict(base["coll"]["counts"]),
+        },
+    }
+    for g, d in deltas.items():
+        w = weights[g]
+        out["flops"] += w * d["flops"]
+        out["bytes"] += w * d["bytes"]
+        for k in out["coll"]["bytes"]:
+            out["coll"]["bytes"][k] += w * d["coll"]["bytes"][k]
+            out["coll"]["counts"][k] += w * d["coll"]["counts"][k]
+    return out
+
+
+def _extrapolated_cost(arch, shape, mesh, cfg, *, attn_impl, serve_mode):
+    """Exact cost accounting: compile 1-unit and 2-unit UNROLLED variants
+    (loop-free HLO, so HloCostAnalysis and the collective parser are exact)
+    and extend affinely to the real unit counts."""
+    dims = cfg.unit_dims()
+    base_counts = {name: 1 for name, _ in dims}
+    kw = dict(unroll=True)
+    if shape.kind == "train":
+        kw["attn_impl"] = attn_impl
+    elif shape.kind == "prefill":
+        kw.update(attn_impl=attn_impl, mode=serve_mode)
+    else:
+        kw["mode"] = serve_mode
+
+    def compile_counts(counts):
+        c = cfg.with_unit_counts(counts)
+        with mesh:
+            fn, args = make_step(c, mesh, shape, **kw)
+            return _cost_tuple(fn.lower(*args).compile())
+
+    base = compile_counts(base_counts)
+    deltas, weights = {}, {}
+    for name, real in dims:
+        counts = dict(base_counts)
+        counts[name] = 2
+        var = compile_counts(counts)
+        deltas[name] = {
+            "flops": var["flops"] - base["flops"],
+            "bytes": var["bytes"] - base["bytes"],
+            "coll": {
+                "bytes": {k: var["coll"]["bytes"][k] - base["coll"]["bytes"][k]
+                          for k in var["coll"]["bytes"]},
+                "counts": {k: var["coll"]["counts"][k] - base["coll"]["counts"][k]
+                           for k in var["coll"]["counts"]},
+            },
+        }
+        weights[name] = real - 1
+    return _lin_combine(base, deltas, weights)
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *, attn_impl="blockwise",
+            serve_mode: str = "serve", save: bool = True, tag: str = "",
+            extrapolate: bool = True, cfg_overrides: dict | None = None):
+    import dataclasses
+
+    shape = INPUT_SHAPES[shape_name]
+    if mesh_kind == "multi":
+        mesh = make_production_mesh(multi_pod=True)
+    elif "x" in mesh_kind:
+        mesh = make_production_mesh(layout=mesh_kind)
+    else:
+        mesh = make_production_mesh()
+    chips = mesh.size
+    cfg = get_config(arch).with_padding(mesh.shape["model"])
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    from repro.launch.steps import resolve_serve_mode
+    serve_mode = resolve_serve_mode(cfg, mesh, serve_mode)
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        print(f"SKIP  {arch} x {shape_name} x {mesh_kind}: {why}")
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skip", "reason": why}
+        if save:
+            os.makedirs(OUT_DIR, exist_ok=True)
+            safe = arch.replace(".", "_").replace("/", "_")
+            with open(os.path.join(OUT_DIR, f"{safe}__{shape_name}__{mesh_kind}.json"), "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+
+    kw = {}
+    if shape.kind == "train":
+        kw["attn_impl"] = attn_impl
+    elif shape.kind == "prefill":
+        kw.update(attn_impl=attn_impl, mode=serve_mode)
+    else:
+        kw["mode"] = serve_mode
+
+    # 1) the production artifact: full depth, scan-over-layers
+    t0 = time.time()
+    with mesh:
+        fn, args = make_step(cfg, mesh, shape, **kw)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = _memory_stats(compiled)
+    hlo = compiled.as_text()
+
+    # 2) exact cost accounting via unrolled small variants
+    if extrapolate:
+        cost = _extrapolated_cost(arch, shape, mesh, cfg,
+                                  attn_impl=attn_impl, serve_mode=serve_mode)
+        cost_dict = {"flops": cost["flops"], "bytes accessed": cost["bytes"]}
+        coll_override = cost["coll"]
+    else:
+        cost_dict = compiled.cost_analysis()
+        if isinstance(cost_dict, list):
+            cost_dict = cost_dict[0]
+        coll_override = None
+
+    rec = analyze(cfg, shape, mesh_kind, chips, cost_dict, hlo,
+                  memory_stats=mem, coll_override=coll_override,
+                  note=f"attn={attn_impl} mode={serve_mode}"
+                       f"{(' ' + tag) if tag else ''}")
+    print(f"OK    {arch} x {shape_name} x {mesh_kind}: "
+          f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+          f"Tc={rec.t_compute*1e3:.2f}ms Tm={rec.t_memory*1e3:.2f}ms "
+          f"Tcoll={rec.t_collective*1e3:.2f}ms -> {rec.bottleneck} "
+          f"useful={rec.useful_ratio:.2f}")
+    result = json.loads(rec.to_json())
+    result.update({"status": "ok", "t_lower_s": t_lower, "t_compile_s": t_compile})
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        safe = arch.replace(".", "_").replace("/", "_")
+        suffix = f"_{tag}" if tag else ""
+        path = os.path.join(OUT_DIR, f"{safe}__{shape_name}__{mesh_kind}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="CLI id, e.g. granite-3-2b")
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--attn", default="blockwise", choices=["blockwise", "banded"])
+    ap.add_argument("--serve-mode", default="serve", choices=["serve", "serve_tp", "serve_auto", "serve_ws", "train"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]  # or "32x8" etc.
+    archs = list(CLI_ALIASES) if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    failures = []
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    run_one(arch, shape, mesh_kind, attn_impl=args.attn,
+                            serve_mode=args.serve_mode, tag=args.tag,
+                            extrapolate=not args.no_extrapolate)
+                except Exception as e:
+                    failures.append((arch, shape, mesh_kind, repr(e)))
+                    print(f"FAIL  {arch} x {shape} x {mesh_kind}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips * 197e12)          [bf16 peak]
+    memory term     = HLO_bytes / (chips * 819e9)           [HBM]
+    collective term = collective_bytes / (chips * 50e9)     [ICI link]
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``.  Collective bytes
+are NOT in cost_analysis: we parse the post-SPMD HLO text and sum the output
+operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (all-reduce weighted 2x for the ring's
+reduce-scatter + all-gather phases).  Collective bytes in the SPMD module
+are *per-shard* quantities, matching the per-chip denominator.
+
+MODEL_FLOPS = 6·N·D for training (fwd+bwd), 2·N·D for inference, with N =
+active params; the ratio MODEL_FLOPS/HLO_FLOPs measures how much compiled
+compute is useful (remat, padding and masked-attention waste lower it).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE,
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-type output bytes summed over the module (one shard)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # async pairs: count the -start, skip the -done (same tensor)
+        line = m.group(0)
+        if "-done(" in line:
+            continue
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts}
+
+
+@dataclass
+class RooflineRecord:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float               # total across chips
+    hlo_gbytes: float               # total across chips
+    coll_gbytes_per_chip: float     # weighted, per shard
+    coll_detail: dict
+    t_compute: float                # seconds
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_gflops: float
+    useful_ratio: float
+    bytes_per_device: float | None = None
+    note: str = ""
+
+    def to_json(self):
+        return json.dumps(asdict(self), indent=1)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference) with D = processed
+    tokens; decode processes global_batch tokens per step."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch   # decode: one token per sequence
+
+
+def active_param_count(cfg) -> float:
+    """Active (per-token) parameter count from the logical config."""
+    d, l = cfg.d_model, cfg.num_layers
+    v = cfg.vocab_size
+    emb = 2 * v * d                     # embed + head
+    if cfg.arch_type == "ssm":
+        di, n_s, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        per = d * (2 * di + 2 * n_s + h) + di * d
+        return emb + l * per
+    attn = d * (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim \
+        + cfg.num_heads * cfg.head_dim * d
+    if cfg.ffn_type == "swiglu":
+        ffn = 3 * d * cfg.d_ff
+    else:
+        ffn = 2 * d * cfg.d_ff
+    if cfg.arch_type == "moe":
+        ffn = cfg.experts_per_token * ffn + d * cfg.num_experts
+    per = attn + ffn
+    if cfg.arch_type == "hybrid":
+        di, n_s, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        mamba_per = d * (2 * di + 2 * n_s + h) + di * d
+        n_attn = cfg.num_layers // cfg.attn_every
+        return emb + l * mamba_per + n_attn * per
+    if cfg.arch_type == "vlm":
+        return emb + l * per            # cross layers ~ self layers in size
+    if cfg.arch_type == "audio":
+        dec_per = per + attn            # + cross attention
+        return emb + l * per + l * dec_per
+    return emb + l * per
+
+
+def analyze(cfg, shape, mesh_name: str, chips: int, cost: dict, hlo_text: str,
+            memory_stats=None, note: str = "", coll_override=None) -> RooflineRecord:
+    # cost_analysis of an SPMD-partitioned module reports the PER-SHARD
+    # program: flops/bytes below are per chip already.
+    flops = float(cost.get("flops", 0.0))
+    bts = float(cost.get("bytes accessed", 0.0))
+    coll = coll_override if coll_override is not None else collective_bytes(hlo_text)
+    weighted = sum(
+        (2 if k == "all-reduce" else 1) * v for k, v in coll["bytes"].items()
+    )
+    t_comp = flops / PEAK_FLOPS_BF16
+    t_mem = bts / HBM_BW
+    t_coll = weighted / ICI_BW           # per-shard bytes over one chip's link
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    total_flops = flops * chips
+    return RooflineRecord(
+        arch=cfg.name,
+        shape=shape.name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_gflops=total_flops / 1e9,
+        hlo_gbytes=bts * chips / 1e9,
+        coll_gbytes_per_chip=weighted / 1e9,
+        coll_detail=coll,
+        t_compute=t_comp,
+        t_memory=t_mem,
+        t_collective=t_coll,
+        bottleneck=bottleneck,
+        model_gflops=mf / 1e9,
+        useful_ratio=(mf / total_flops) if total_flops else 0.0,
+        bytes_per_device=memory_stats,
+        note=note,
+    )

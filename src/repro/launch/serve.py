@@ -1,0 +1,118 @@
+"""Serving launcher.
+
+  * ``--paper``: stand up the lambda fraud-scoring pipeline (batch refresh
+    + speed-layer scoring over a simulated checkout request stream) and
+    report latency percentiles.
+  * ``--arch <id>``: batched token serving for a reduced zoo config:
+    prefill a prompt batch, then decode N tokens with the same serve_step
+    the dry-run lowers.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def serve_paper(args):
+    import jax
+
+    from repro.core import LNNConfig, lnn_init
+    from repro.data import (SynthConfig, build_communities,
+                            generate_transactions, make_split_masks)
+    from repro.data.pipeline import standardize_features
+    from repro.serve import LambdaPipeline
+    from repro.serve.lambda_pipeline import BatchLayer
+
+    scfg = SynthConfig(num_users=args.users, num_rings=6, feature_noise=0.8,
+                       seed=args.seed)
+    g, _ = generate_transactions(scfg)
+    split = make_split_masks(g.order_snapshot)
+    feats, _ = standardize_features(g.order_features, split == 0)
+    g.order_features = feats
+    batches = build_communities(g, community_size=256, max_deg=24)
+    cfg = LNNConfig(num_gnn_layers=3, hidden_dim=64, feat_dim=feats.shape[1])
+    params = lnn_init(jax.random.PRNGKey(args.seed), cfg)
+
+    pipe = LambdaPipeline(params, cfg, k_max=8)
+    print("batch layer refresh:", pipe.refresh(batches))
+    print("split equivalence:", pipe.score_equivalence_check(batches))
+
+    requests = []
+    for b in batches:
+        for o, hops in b.dds.last_hop.items():
+            keys = [(BatchLayer._global_entity(b, ent), t) for ent, t, _ in hops]
+            requests.append({"features": np.asarray(b.graph.features[o]),
+                             "entity_keys": keys})
+    requests = requests[: args.requests]
+    pipe.score(requests[:1])
+    lat = []
+    for r in requests:
+        t0 = time.time()
+        pipe.score([r])
+        lat.append((time.time() - t0) * 1e3)
+    lat = np.asarray(lat)
+    print(f"speed layer over {len(requests)} checkouts: "
+          f"p50={np.percentile(lat,50):.2f}ms p95={np.percentile(lat,95):.2f}ms "
+          f"p99={np.percentile(lat,99):.2f}ms")
+
+
+def serve_arch(args):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import decode_step, init_params
+    from repro.models.transformer import prefill
+
+    cfg = get_config(args.arch).reduced()
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    rng = np.random.default_rng(args.seed)
+    b, s_pre, max_len = args.batch, args.seq, args.seq + args.tokens
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s_pre)), jnp.int32)
+    extra = {}
+    if cfg.arch_type == "vlm":
+        extra["vision"] = jnp.asarray(
+            rng.normal(size=(b, cfg.num_vision_tokens, cfg.d_model)), jnp.float32)
+    if cfg.arch_type == "audio":
+        extra["frames"] = jnp.asarray(rng.normal(size=(b, 32, cfg.d_model)), jnp.float32)
+
+    t0 = time.time()
+    logits, cache = prefill(params, cfg, prompts, max_len, extra)
+    print(f"prefill {b}x{s_pre}: {time.time()-t0:.2f}s")
+
+    step = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    generated = [tok]
+    t0 = time.time()
+    for _ in range(args.tokens):
+        logits, cache = step(params, tok, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    print(f"decoded {args.tokens} tokens x {b} seqs in {dt:.2f}s "
+          f"({args.tokens*b/dt:.1f} tok/s, {dt/args.tokens*1e3:.1f} ms/step)")
+    print("sample ids:", np.asarray(jnp.stack(generated, 1))[0][:16])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--users", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.paper or not args.arch:
+        serve_paper(args)
+    else:
+        serve_arch(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the abstract arguments the step function
+for that input-shape kind consumes:
+
+  train    -> {'tokens', 'labels', [vision|frames]}
+  prefill  -> {'tokens', [vision|frames]}
+  decode   -> {'token', 'cache'}   (cache built via jax.eval_shape)
+
+Modality frontends are stubs per the assignment: VLM vision tokens and audio
+frames arrive as precomputed d_model embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, InputShape
+from repro.models.transformer import init_cache
+
+SDS = jax.ShapeDtypeStruct
+
+# frontend stub sizes
+AUDIO_FRAMES_TRAIN = 4096        # ~80s of 20ms frames
+AUDIO_FRAMES_SERVE = 4096
+
+
+def _extras_spec(cfg: ArchConfig, batch: int, seq: int):
+    dtype = jnp.dtype(cfg.dtype)
+    out = {}
+    if cfg.arch_type == "vlm":
+        out["vision"] = SDS((batch, cfg.num_vision_tokens, cfg.d_model), dtype)
+    if cfg.arch_type == "audio":
+        out["frames"] = SDS((batch, min(seq, AUDIO_FRAMES_TRAIN), cfg.d_model), dtype)
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": SDS((b, s), jnp.int32),
+            "labels": SDS((b, s), jnp.int32),
+        }
+        batch.update(_extras_spec(cfg, b, s))
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": SDS((b, s), jnp.int32)}
+        batch.update(_extras_spec(cfg, b, s))
+        return {"batch": batch}
+    if shape.kind == "decode":
+        extra_shapes = {}
+        if cfg.arch_type == "vlm":
+            extra_shapes["vision_len"] = cfg.num_vision_tokens
+        if cfg.arch_type == "audio":
+            extra_shapes["memory_len"] = AUDIO_FRAMES_SERVE
+        cache = jax.eval_shape(lambda: init_cache(cfg, b, s, extra_shapes))
+        return {"token": SDS((b,), jnp.int32), "cache": cache}
+    raise ValueError(shape.kind)
+
+
+def supports_shape(cfg: ArchConfig, shape: InputShape) -> tuple[bool, str]:
+    """long_500k requires sub-quadratic attention (DESIGN.md skip table)."""
+    if shape.name != "long_500k":
+        return True, ""
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return True, ""
+    if cfg.window is not None:
+        return True, ""   # sliding-window bounds decode work
+    return False, (
+        f"{cfg.name}: pure full attention — long_500k skipped per DESIGN.md "
+        "(no sub-quadratic variant in the baseline)"
+    )

@@ -1,0 +1,159 @@
+"""Sharded step builders: train_step / prefill_step / serve_step.
+
+Each builder returns (jitted_fn, abstract_args, in_shardings, out_shardings)
+ready for ``.lower(...)`` in the dry-run or for real execution in the
+launchers.  Params/optimizer state are passed as ShapeDtypeStructs in the
+dry-run — nothing is allocated.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import (
+    batch_sharding,
+    cache_sharding,
+    enable_sharding_hints,
+    param_sharding,
+)
+from repro.launch.specs import input_specs
+from repro.models.config import ArchConfig, InputShape
+from repro.models.transformer import (
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    prefill,
+)
+from repro.train.optim import adamw, cosine_schedule
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def resolve_serve_mode(cfg: ArchConfig, mesh, mode: str) -> str:
+    """Resolve 'serve_auto' against the FULL-depth config.  Must happen once,
+    up front: the dry-run's 1-layer cost variants would otherwise re-decide
+    with a tiny model and silently flip the weight layout."""
+    if mode != "serve_auto":
+        return mode
+    from repro.dist.sharding import _fits_tp_only
+
+    return "serve_tp" if _fits_tp_only(mesh, abstract_params(cfg)) else "serve"
+
+
+
+def abstract_opt_state(cfg: ArchConfig, params_spec):
+    init_fn, _ = adamw(1e-4)
+    return jax.eval_shape(init_fn, params_spec)
+
+
+def _opt_sharding(mesh, opt_spec, p_shard):
+    """Optimizer moments share the param shardings; step is replicated."""
+    return type(opt_spec)(
+        step=NamedSharding(mesh, P()),
+        mu=jax.tree_util.tree_map(lambda s, x: s, p_shard, opt_spec.mu),
+        nu=jax.tree_util.tree_map(lambda s, x: s, p_shard, opt_spec.nu),
+    )
+
+
+def make_train_step(cfg: ArchConfig, mesh, shape: InputShape, *,
+                    use_remat: bool = True, attn_impl: str = "blockwise",
+                    lr: float = 3e-4, unroll: bool = False):
+    enable_sharding_hints(mesh)
+    init_fn, update_fn = adamw(cosine_schedule(lr, 10_000, 500), weight_decay=0.1)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: forward_train(p, cfg, batch, use_remat=use_remat,
+                                    attn_impl=attn_impl, unroll=unroll)
+        )(params)
+        params, opt_state, aux = update_fn(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **aux}
+
+    p_spec = abstract_params(cfg)
+    o_spec = abstract_opt_state(cfg, p_spec)
+    specs = input_specs(cfg, shape)
+    p_shard = param_sharding(mesh, p_spec, mode="train")
+    o_shard = _opt_sharding(mesh, o_spec, p_shard)
+    b_shard = batch_sharding(mesh, specs["batch"])
+    out_shard = (p_shard, o_shard,
+                 {"loss": NamedSharding(mesh, P()),
+                  "grad_norm": NamedSharding(mesh, P()),
+                  "lr": NamedSharding(mesh, P())})
+    fn = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=out_shard,
+        donate_argnums=(0, 1),
+    )
+    args = (p_spec, o_spec, specs["batch"])
+    return fn, args
+
+
+def make_prefill_step(cfg: ArchConfig, mesh, shape: InputShape, *,
+                      attn_impl: str = "blockwise", mode: str = "serve",
+                      unroll: bool = False):
+    enable_sharding_hints(mesh)
+
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        extra = {k: v for k, v in batch.items() if k != "tokens"}
+        logits, cache = prefill(params, cfg, tokens, shape.seq_len, extra,
+                                attn_impl=attn_impl, unroll=unroll)
+        return logits, cache
+
+    p_spec = abstract_params(cfg)
+    specs = input_specs(cfg, shape)
+    p_shard = param_sharding(mesh, p_spec, mode=mode)
+    b_shard = batch_sharding(mesh, specs["batch"])
+    cache_spec = jax.eval_shape(
+        lambda p, b: prefill_step(p, b)[1], p_spec, specs["batch"]
+    )
+    out_shard = (
+        batch_sharding(mesh, jax.eval_shape(lambda p, b: prefill_step(p, b)[0],
+                                            p_spec, specs["batch"])),
+        cache_sharding(mesh, cache_spec),
+    )
+    fn = jax.jit(prefill_step, in_shardings=(p_shard, b_shard),
+                 out_shardings=out_shard)
+    return fn, (p_spec, specs["batch"])
+
+
+def make_serve_step(cfg: ArchConfig, mesh, shape: InputShape, *,
+                    mode: str = "serve", unroll: bool = False):
+    """mode 'serve_ws': weight-stationary decode — weights keep the train
+    (data, model) layout and are never gathered; the decode BATCH shards
+    over the model axis instead, so every d-contraction partial-sums
+    single-token activations (KBs) rather than all-gathering weights (GBs).
+    Requires global_batch %% model_axis == 0."""
+    ws = mode == "serve_ws" and shape.global_batch % mesh.shape["model"] == 0
+    enable_sharding_hints(mesh, batch_axes=("model",) if ws else None)
+    if mode == "serve_ws":
+        mode = "train"   # weights stay in the FSDP+TP train layout, ungathered
+
+    def serve_step(params, token, cache):
+        return decode_step(params, cfg, token, cache, unroll=unroll)
+
+    p_spec = abstract_params(cfg)
+    specs = input_specs(cfg, shape)
+    p_shard = param_sharding(mesh, p_spec, mode=mode)
+    t_shard = batch_sharding(mesh, specs["token"])
+    c_shard = cache_sharding(mesh, specs["cache"])
+    logits_spec = jax.eval_shape(serve_step, p_spec, specs["token"], specs["cache"])
+    out_shard = (batch_sharding(mesh, logits_spec[0]), c_shard)
+    fn = jax.jit(serve_step, in_shardings=(p_shard, t_shard, c_shard),
+                 out_shardings=out_shard, donate_argnums=(2,))
+    return fn, (p_spec, specs["token"], specs["cache"])
+
+
+def make_step(cfg: ArchConfig, mesh, shape: InputShape, **kw):
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape, **kw)
+    return make_serve_step(cfg, mesh, shape, **kw)

@@ -1,0 +1,134 @@
+"""Training launcher.
+
+Two modes:
+  * ``--paper``: train the paper's LNN fraud model on the synthetic
+    transaction graph (the end-to-end driver — a few hundred community
+    steps on CPU).
+  * ``--arch <id>``: train a reduced transformer-zoo config with the same
+    sharded train_step used by the dry-run, on a 1x1 host mesh (CPU) or the
+    production mesh (TPU).
+
+Checkpoints land under ``checkpoints/``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+
+def train_paper(args):
+    import jax
+
+    from repro.baselines import GBDTConfig, train_gbdt
+    from repro.core import LNNConfig
+    from repro.data import (SynthConfig, build_communities,
+                            generate_transactions, make_split_masks)
+    from repro.data.pipeline import standardize_features
+    from repro.train.checkpoint import save_checkpoint
+    from repro.train.loop import evaluate_lnn, train_lnn
+
+    scfg = SynthConfig(num_users=args.users, num_rings=args.rings,
+                       feature_noise=0.8, seed=args.seed)
+    g, _ = generate_transactions(scfg)
+    split = make_split_masks(g.order_snapshot)
+    feats, _ = standardize_features(g.order_features, split == 0)
+
+    gbdt = train_gbdt(feats[split == 0], g.labels[split == 0], GBDTConfig(),
+                      feats[split == 1], g.labels[split == 1])
+    enc = np.concatenate([feats, gbdt.leaf_value_features(feats)], 1)
+    mu, sd = enc[split == 0].mean(0), enc[split == 0].std(0) + 1e-6
+    g.order_features = ((enc - mu) / sd).astype(np.float32)
+
+    batches = build_communities(g, community_size=256, max_deg=24, seed=args.seed)
+    cfg = LNNConfig(gnn_type=args.gnn, num_gnn_layers=3, hidden_dim=64,
+                    feat_dim=g.order_features.shape[1], pos_weight=3.0)
+    print(f"training LNN({args.gnn}) on {len(batches)} communities "
+          f"({g.num_orders} orders, fraud rate {g.labels.mean():.3f})")
+    res = train_lnn(batches, split, cfg, epochs=args.epochs, verbose=True,
+                    seed=args.seed)
+    metrics = evaluate_lnn(res.params, cfg, batches, split, 2)
+    print(f"test: {metrics}")
+    os.makedirs("checkpoints", exist_ok=True)
+    save_checkpoint(f"checkpoints/lnn_{args.gnn}.npz", res.params, step=res.best_epoch)
+    print(f"checkpoint saved to checkpoints/lnn_{args.gnn}.npz")
+    return metrics
+
+
+def train_arch(args):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import make_train_step
+    from repro.models import init_params
+    from repro.models.config import InputShape
+    from repro.train.checkpoint import save_checkpoint
+    from repro.train.optim import adamw
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    shape = InputShape("cli_train", args.seq, args.batch, "train")
+    fn, _ = make_train_step(cfg, mesh, shape, use_remat=False, lr=args.lr)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    init_fn, _ = adamw(args.lr)
+    opt = init_fn(params)
+
+    rng = np.random.default_rng(args.seed)
+
+    def sample_batch():
+        toks = rng.integers(0, cfg.vocab_size, (args.batch, args.seq + 1))
+        batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                 "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+        if cfg.arch_type == "vlm":
+            batch["vision"] = jnp.asarray(
+                rng.normal(size=(args.batch, cfg.num_vision_tokens, cfg.d_model)),
+                jnp.float32)
+        if cfg.arch_type == "audio":
+            batch["frames"] = jnp.asarray(
+                rng.normal(size=(args.batch, min(args.seq, 64), cfg.d_model)),
+                jnp.float32)
+        return batch
+
+    with mesh:
+        for step in range(args.steps):
+            t0 = time.time()
+            params, opt, aux = fn(params, opt, sample_batch())
+            if step % max(args.steps // 20, 1) == 0:
+                print(f"step {step}: loss={float(aux['loss']):.4f} "
+                      f"gnorm={float(aux['grad_norm']):.3f} "
+                      f"{time.time()-t0:.2f}s")
+    os.makedirs("checkpoints", exist_ok=True)
+    save_checkpoint(f"checkpoints/{args.arch.replace('.', '_')}.npz", params,
+                    step=args.steps)
+    print(f"final loss {float(aux['loss']):.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true", help="train the LNN fraud model")
+    ap.add_argument("--gnn", default="gcn", choices=["gcn", "gat", "sage"])
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--epochs", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--users", type=int, default=600)
+    ap.add_argument("--rings", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.paper or not args.arch:
+        train_paper(args)
+    else:
+        train_arch(args)
+
+
+if __name__ == "__main__":
+    main()

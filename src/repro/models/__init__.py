@@ -1,0 +1,19 @@
+from repro.models.config import INPUT_SHAPES, ArchConfig, InputShape
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    forward_train,
+    init_cache,
+    init_params,
+)
+
+__all__ = [
+    "INPUT_SHAPES",
+    "ArchConfig",
+    "InputShape",
+    "decode_step",
+    "forward",
+    "forward_train",
+    "init_cache",
+    "init_params",
+]

@@ -1,0 +1,157 @@
+"""GQA attention with RoPE: train/prefill path + cached decode path.
+
+Physical head padding (``cfg.physical_heads``/``physical_kv_heads``) is a
+sharding artifact for the fixed 16-way model axis: padded q heads are real
+computed heads whose ``w_o`` rows are zero-initialized; padded kv heads are
+*tied replicas* of logical kv heads (what tensor-parallel GQA serving does
+physically — each shard pair recomputes the same kv projection).  Logical
+model math is unchanged; the duplicated FLOPs show up honestly in the
+roofline's MODEL_FLOPS/HLO_FLOPS ratio.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, blockwise_attention, banded_attention, dense_init
+
+
+def attn_init(rng, cfg, cross: bool = False):
+    dtype = jnp.dtype(cfg.dtype)
+    hq, hkv, dh, d = cfg.physical_heads, cfg.physical_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(rng, 4)
+    wk = dense_init(ks[1], (d, cfg.num_kv_heads, dh), dtype)
+    wv = dense_init(ks[2], (d, cfg.num_kv_heads, dh), dtype)
+    if hkv > cfg.num_kv_heads:
+        if hkv % cfg.num_kv_heads == 0:
+            # kv tying: tile logical heads to physical (TP replication)
+            rep = hkv // cfg.num_kv_heads
+            wk = jnp.repeat(wk, rep, axis=1)
+            wv = jnp.repeat(wv, rep, axis=1)
+        else:
+            # ragged pad (e.g. qwen 40 -> 48): zero kv heads; the matching
+            # padded q heads have zeroed w_o rows, so they never contribute
+            pad = jnp.zeros((d, hkv - cfg.num_kv_heads, dh), dtype)
+            wk = jnp.concatenate([wk, pad], axis=1)
+            wv = jnp.concatenate([wv, pad], axis=1)
+    wq = dense_init(ks[0], (d, cfg.num_heads, dh), dtype)
+    wo = dense_init(ks[3], (hq * dh, d), dtype)
+    if hq > cfg.num_heads:
+        pad = jnp.zeros((d, hq - cfg.num_heads, dh), dtype)
+        wq = jnp.concatenate([wq, pad], axis=1)
+        # zero the wo rows of padded heads so they contribute nothing
+        wo = wo.reshape(hq, dh, d).at[cfg.num_heads :].set(0.0).reshape(hq * dh, d)
+    p = {
+        "wq": wq.reshape(d, hq * dh),
+        "wk": wk.reshape(d, hkv * dh),
+        "wv": wv.reshape(d, hkv * dh),
+        "wo": wo,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def _project_qkv(params, cfg, x, kv_x=None):
+    hq, hkv, dh = cfg.physical_heads, cfg.physical_kv_heads, cfg.head_dim
+    b, s, _ = x.shape
+    src = x if kv_x is None else kv_x
+    sk = src.shape[1]
+    q = x @ params["wq"]
+    k = src @ params["wk"]
+    v = src @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, hq, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, sk, hkv, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, sk, hkv, dh).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def attn_apply(params, cfg, x, *, kv_x=None, causal=True, use_rope=True,
+               attn_impl: str = "blockwise", block_k: int = 512):
+    """Full-sequence attention (train / prefill).  x: [B, S, d].
+
+    ``kv_x`` switches to cross-attention (no RoPE on kv side conventions of
+    mllama/seamless: we apply RoPE to q only when kv_x is given).
+    ``attn_impl``: 'blockwise' (XLA flash) | 'banded' (SWA-only, beyond-paper).
+    """
+    b, s, d = x.shape
+    q, k, v = _project_qkv(params, cfg, x, kv_x)
+    if use_rope:
+        pos = jnp.arange(s)
+        q = apply_rope(q, pos[None, None, :], cfg.rope_theta)
+        if kv_x is None:
+            k = apply_rope(k, pos[None, None, :], cfg.rope_theta)
+    bk = min(block_k, k.shape[2])
+    if attn_impl == "banded" and cfg.window is not None and kv_x is None:
+        out = banded_attention(q, k, v, window=cfg.window, block_k=bk)
+    else:
+        out = blockwise_attention(
+            q, k, v, causal=causal and kv_x is None,
+            window=cfg.window if kv_x is None else None, block_k=bk,
+        )
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return out @ params["wo"], (k, v)
+
+
+def attn_decode(params, cfg, x1, cache, pos, *, cross: bool = False):
+    """Single-token decode.  x1: [B, 1, d]; cache: dict(k, v) with
+    k/v: [B, Hkv, S_max, Dh]; pos: [] int32 current position.
+
+    For cross-attention the cache holds the (static) encoder/vision K/V and
+    is not updated.  Returns (out [B, 1, d], new_cache).
+    """
+    hq, hkv, dh = cfg.physical_heads, cfg.physical_kv_heads, cfg.head_dim
+    b = x1.shape[0]
+    q = (x1 @ params["wq"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+    q = q.reshape(b, 1, hq, dh).transpose(0, 2, 1, 3)       # [B, Hq, 1, Dh]
+    if not cross:
+        q = apply_rope(q, jnp.full((1, 1, 1), pos), cfg.rope_theta)
+        k1 = (x1 @ params["wk"])
+        v1 = (x1 @ params["wv"])
+        if cfg.qkv_bias:
+            k1 = k1 + params["bk"]
+            v1 = v1 + params["bv"]
+        k1 = k1.reshape(b, 1, hkv, dh).transpose(0, 2, 1, 3)
+        k1 = apply_rope(k1, jnp.full((1, 1, 1), pos), cfg.rope_theta)
+        v1 = v1.reshape(b, 1, hkv, dh).transpose(0, 2, 1, 3)
+        cache_len = cache["k"].shape[2]
+        ring = bool(cfg.ring_kv_cache and cfg.window and cache_len <= cfg.window)
+        write_pos = pos % cache_len if ring else pos
+        k = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype),
+                                         (0, 0, write_pos, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype),
+                                         (0, 0, write_pos, 0))
+        cache = {"k": k, "v": v}
+        kv_len = jnp.minimum(pos + 1, cache_len) if ring else pos + 1
+    else:
+        ring = False
+        k, v = cache["k"], cache["v"]
+        kv_len = k.shape[2]
+
+    # online-softmax over the cache (XLA path of the gqa_decode kernel)
+    rep = hq // hkv
+    qg = q.reshape(b, hkv, rep, dh)
+    logits = jnp.einsum("bgrd,bgsd->bgrs", qg, k,
+                        preferred_element_type=jnp.float32) * (dh ** -0.5)
+    spos = jnp.arange(k.shape[2])
+    valid = spos[None, :] < kv_len if not cross else jnp.ones((1, k.shape[2]), bool)
+    if cfg.window is not None and not cross and not ring:
+        valid = valid & (spos[None, :] >= kv_len - cfg.window)
+    # ring cache: the buffer holds exactly the last `window` positions (the
+    # write above already evicted the oldest), so all valid slots attend —
+    # slot order differs from time order but softmax is permutation-invariant
+    # and RoPE was applied at absolute positions before the write.
+    logits = jnp.where(valid[:, None, None, :] if valid.ndim == 2 else valid,
+                       logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrs,bgsd->bgrd", p.astype(v.dtype), v)
+    out = out.reshape(b, 1, hq * dh)
+    return out @ params["wo"], cache

@@ -1,0 +1,238 @@
+"""Shared building blocks: norms, RoPE, FFNs, blockwise attention, losses.
+
+Everything is a pure function over explicit param pytrees (no flax), so the
+same code paths serve training, prefill, decode and the 512-device dry-run
+lowering without retracing surprises.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, shape, dtype, scale=None):
+    fan_in = shape[0]
+    if scale is None:
+        scale = fan_in ** -0.5
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale=None, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def layernorm_nonparametric(x, eps=1e-5):
+    """OLMo's non-parametric LayerNorm: no learnable scale/bias [arXiv:2402.00838]."""
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = x32.var(-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: [..., S, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def ffn_init(rng, d_model, d_ff, ffn_type, dtype):
+    ks = jax.random.split(rng, 3)
+    if ffn_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+
+
+def ffn_apply(params, x, ffn_type):
+    if ffn_type == "swiglu":
+        g = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+        return ((g * (x @ params["w_up"])) @ params["w_down"])
+    h = jax.nn.gelu((x @ params["w_up"]).astype(jnp.float32)).astype(x.dtype)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention in pure lax — the XLA path used for
+# training/prefill.  O(S) memory via online softmax over KV blocks.
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, *, causal=True, window=None, block_k=512,
+                        q_offset=None):
+    """q: [B, Hq, Sq, Dh]; k/v: [B, Hkv, Sk, Dh].  GQA via head grouping
+    (no K/V repetition is materialized).  Returns [B, Hq, Sq, Dh].
+
+    ``q_offset``: absolute position of q row 0 (default aligns q to the end
+    of the kv sequence, the prefill/train convention).
+    """
+    b, hq, sq, dh = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = dh ** -0.5
+    if q_offset is None:
+        q_offset = sk - sq
+    kv_valid = sk
+    if sk % block_k:
+        # ragged KV (e.g. 1601 vision tokens): zero-pad and mask the tail
+        from repro.utils.padding import pad_to_multiple
+
+        sk_pad = pad_to_multiple(sk, block_k)
+        pad = ((0, 0), (0, 0), (0, sk_pad - sk), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        sk = sk_pad
+    nb = sk // block_k
+
+    qg = q.reshape(b, hkv, rep, sq, dh)
+    kb = k.reshape(b, hkv, nb, block_k, dh)
+    vb = v.reshape(b, hkv, nb, block_k, dh)
+
+    qpos = q_offset + jnp.arange(sq)
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        kj, vj, j = blk
+        logits = (
+            jnp.einsum("bgrsd,bgkd->bgrsk", qg, kj, preferred_element_type=jnp.float32)
+            * scale
+        )
+        kpos = j * block_k + jnp.arange(block_k)
+        mask = jnp.broadcast_to(kpos[None, :] < kv_valid, (sq, block_k))
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_cur = logits.max(-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bgrsk,bgkd->bgrsd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, rep, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, rep, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, acc0),
+        (jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0), jnp.arange(nb)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, sq, dh).astype(q.dtype)
+
+
+def banded_attention(q, k, v, *, window: int, block_k: int = 512):
+    """Sliding-window prefill that only computes the diagonal band.
+
+    Beyond-paper optimization (§Perf): for window w and block size bk, each
+    q block of size bk attends to at most ceil(w/bk)+1 k blocks, so compute
+    drops from O(S^2) to O(S*w).  q/k/v: as in ``blockwise_attention``;
+    requires Sq == Sk and block-aligned shapes.
+    """
+    b, hq, s, dh = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    scale = dh ** -0.5
+    assert s % block_k == 0
+    nb = s // block_k
+    nband = -(-window // block_k) + 1                 # k blocks per q block
+
+    qg = q.reshape(b, hkv, rep, nb, block_k, dh)
+    kb = k.reshape(b, hkv, nb, block_k, dh)
+    vb = v.reshape(b, hkv, nb, block_k, dh)
+
+    def per_qblock(i, qi):
+        # gather the band of k/v blocks [nband, bk, dh] ending at block i
+        idx = jnp.clip(i - (nband - 1) + jnp.arange(nband), 0, nb - 1)
+        kj = jnp.take(kb, idx, axis=2)                # [b,hkv,nband,bk,dh]
+        vj = jnp.take(vb, idx, axis=2)
+        logits = (
+            jnp.einsum("bgrsd,bgnkd->bgrsnk", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        )
+        qpos = i * block_k + jnp.arange(block_k)
+        kpos = idx[:, None] * block_k + jnp.arange(block_k)[None, :]  # [nband, bk]
+        mask = (kpos[None] <= qpos[:, None, None]) & (
+            kpos[None] > qpos[:, None, None] - window
+        )
+        # clipped duplicate blocks (i < nband-1) are masked by position
+        dup = (idx[:, None] * block_k + jnp.arange(block_k)[None, :])[None] \
+            != kpos[None]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        p = jax.nn.softmax(
+            logits.reshape(*logits.shape[:4], nband * block_k), axis=-1
+        ).reshape(logits.shape)
+        return jnp.einsum("bgrsnk,bgnkd->bgrsd", p.astype(vj.dtype), vj,
+                          preferred_element_type=jnp.float32)
+
+    out = jax.lax.map(
+        lambda args: per_qblock(args[0], args[1]),
+        (jnp.arange(nb), jnp.moveaxis(qg, 3, 0)),
+    )                                                  # [nb, b, hkv, rep, bk, dh]
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hq, s, dh)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """logits: [..., V] (any float dtype); labels: [...] int32.
+
+    The gold logit is extracted with an iota-compare reduction rather than
+    ``take_along_axis``: a gather over a vocab-sharded axis makes GSPMD
+    all-gather the full logits (hundreds of GB at train_4k scale), while the
+    masked reduction keeps the vocab axis sharded and lowers to a partial
+    sum + tiny all-reduce.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+              == labels[..., None])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,136 @@
+"""Mamba2 (SSD) block: train/prefill path + O(1)-state decode path.
+
+Follows arXiv:2405.21060: in_proj -> (gate z, conv branch [x|B|C], dt),
+depthwise causal conv1d, SSD scan over heads, gated RMSNorm, out_proj.
+The SSD scan routes through the chunked XLA path (``ssd_chunked_ref``) or
+the Pallas kernel (``kernels.ops.ssd_scan``); decode keeps a
+(conv_state, ssm_state) cache — the SSM analogue of a KV cache, except it
+is O(1) in sequence length (why long_500k is trivial for SSM archs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import ssd_chunked_ref, ssd_scan_ref
+from repro.models.common import dense_init, rmsnorm
+
+
+def mamba_init(rng, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(rng, 5)
+    conv_width = di + 2 * n
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * n + h), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, conv_width), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_width,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 8.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "w_out": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    conv_in = proj[..., di : 2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n :]
+    return z, conv_in, dt
+
+
+def _causal_conv(params, conv_in, conv_state=None):
+    """Depthwise causal conv1d.  conv_in: [B, S, W].  Returns (y, new_state)
+    where state is the last (K-1) inputs for decode."""
+    k = params["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((conv_in.shape[0], k - 1, conv_in.shape[2]), conv_in.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, conv_in], axis=1)           # [B, S+K-1, W]
+    y = sum(
+        xp[:, i : i + conv_in.shape[1]] * params["conv_w"][i][None, None, :]
+        for i in range(k)
+    )
+    y = jax.nn.silu((y + params["conv_b"]).astype(jnp.float32)).astype(conv_in.dtype)
+    return y, xp[:, -(k - 1) :]
+
+
+def mamba_apply(params, cfg, x, *, use_pallas=False, return_state=False):
+    """Full-sequence path.  x: [B, S, d] -> [B, S, d]."""
+    b, s, _ = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ params["w_in"]
+    z, conv_in, dt = _split_proj(cfg, proj)
+    conv_out, conv_state = _causal_conv(params, conv_in)
+    xs = conv_out[..., :di].reshape(b, s, h, p)
+    bmat = conv_out[..., di : di + n]
+    cmat = conv_out[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    if use_pallas and s % 128 == 0:
+        from repro.kernels.ops import ssd_scan
+
+        y = ssd_scan(xs, dt, a, bmat, cmat, params["d_skip"], chunk=128)
+    else:
+        chunk = cfg.ssd_chunk if s % cfg.ssd_chunk == 0 else (s if s < 64 else 1)
+        if s % max(chunk, 1) == 0 and chunk > 1:
+            y = ssd_chunked_ref(xs, dt, a, bmat, cmat, params["d_skip"], chunk=chunk,
+                                compute_dtype=jnp.dtype(cfg.ssd_compute_dtype))
+        else:
+            y = ssd_scan_ref(xs, dt, a, bmat, cmat, params["d_skip"])
+    y = y.reshape(b, s, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                params["norm_scale"])
+    out = y @ params["w_out"]
+    if not return_state:
+        return out, None
+    # final ssm state for the decode cache (recompute via sequential scan carry)
+    ssm_state = _final_state(xs, dt, a, bmat)
+    return out, {"conv": conv_state, "ssm": ssm_state}
+
+
+def _final_state(xs, dt, a, bmat):
+    """Final SSD state [B, H, N, P] after the whole sequence."""
+    def step(state, inp):
+        xt, dtt, bt = inp
+        decay = jnp.exp(dtt * a[None, :])
+        upd = jnp.einsum("bn,bhp,bh->bhnp", bt, xt, dtt)
+        return state * decay[..., None, None] + upd, None
+
+    b, s, h, p = xs.shape
+    n = bmat.shape[-1]
+    state0 = jnp.zeros((b, h, n, p), jnp.float32)
+    state, _ = jax.lax.scan(
+        step, state0,
+        (jnp.moveaxis(xs, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(bmat, 1, 0).astype(jnp.float32)),
+    )
+    return state
+
+
+def mamba_decode(params, cfg, x1, cache):
+    """Single-token step.  x1: [B, 1, d]; cache: {conv [B,K-1,W], ssm [B,H,N,P]}."""
+    b = x1.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x1 @ params["w_in"]                               # [B, 1, ...]
+    z, conv_in, dt = _split_proj(cfg, proj)
+    conv_out, conv_state = _causal_conv(params, conv_in, cache["conv"])
+    xs = conv_out[:, 0, :di].reshape(b, h, p)
+    bmat = conv_out[:, 0, di : di + n]
+    cmat = conv_out[:, 0, di + n :]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # [B, H]
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a[None, :])                         # [B, H]
+    ssm = cache["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bn,bhp,bh->bhnp", bmat.astype(jnp.float32), xs.astype(jnp.float32), dt
+    )
+    y = jnp.einsum("bhnp,bn->bhp", ssm, cmat.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x1.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                params["norm_scale"])
+    return y @ params["w_out"], {"conv": conv_state, "ssm": ssm}

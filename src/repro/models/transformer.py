@@ -1,0 +1,595 @@
+"""Unified composable model covering all six assigned architecture families.
+
+A config compiles to a *block program*: an ordered list of groups, each a
+homogeneous stack of layers executed with ``lax.scan`` over stacked params
+(keeps the HLO size independent of depth — essential for the 80 dry-run
+compiles on one CPU core).  Heterogeneous archs nest structure inside a
+group's body:
+
+  dense/moe   [('decoder', L)]
+  ssm         [('mamba', L)]
+  hybrid      [('zamba_super', L // k)] + [('mamba', L % k)]   (shared attn)
+  vlm         [('vlm_super', L // k)]      (k-1 self layers + 1 cross layer)
+  audio       encoder [('enc', L)] + decoder [('dec', L)]
+
+Entry points: ``init_params``, ``forward_train`` (loss), ``prefill``
+(logits + cache), ``decode_step`` (one token), ``init_cache``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_apply, attn_decode, attn_init
+from repro.models.common import (
+    dense_init,
+    ffn_apply,
+    ffn_init,
+    layernorm_nonparametric,
+    rmsnorm,
+    softmax_cross_entropy,
+)
+from repro.models.config import ArchConfig
+from repro.dist.sharding import shard_hint
+from repro.models.mamba import mamba_apply, mamba_decode, mamba_init
+from repro.models.moe import moe_apply, moe_init
+
+
+# ---------------------------------------------------------------------------
+# block program
+# ---------------------------------------------------------------------------
+
+def build_program(cfg: ArchConfig) -> list[tuple[str, int]]:
+    if cfg.arch_type in ("dense", "moe"):
+        return [("decoder", cfg.num_layers)]
+    if cfg.arch_type == "ssm":
+        return [("mamba", cfg.num_layers)]
+    if cfg.arch_type == "hybrid":
+        k = cfg.attn_every
+        n_super, tail = divmod(cfg.num_layers, k)
+        prog = [("zamba_super", n_super)]
+        if tail:
+            prog.append(("mamba", tail))
+        return prog
+    if cfg.arch_type == "vlm":
+        k = cfg.cross_attn_every
+        assert cfg.num_layers % k == 0, "vlm layers must tile into superblocks"
+        return [("vlm_super", cfg.num_layers // k)]
+    if cfg.arch_type == "audio":
+        return [("enc", cfg.num_layers), ("dec", cfg.num_layers)]
+    raise ValueError(cfg.arch_type)
+
+
+def _norm(cfg, x, scale):
+    if cfg.nonparametric_ln:
+        return layernorm_nonparametric(x)
+    return rmsnorm(x, scale)
+
+
+def scan_or_unroll(f, init, xs, unroll: bool):
+    """lax.scan, or a python loop over the leading axis when ``unroll``.
+
+    The unrolled path exists for the dry-run cost extrapolation: XLA's
+    HloCostAnalysis visits a while-loop body once regardless of trip count,
+    so FLOP/byte/collective accounting is only exact on loop-free HLO.
+    """
+    if not unroll:
+        return jax.lax.scan(f, init, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry = init
+    outs = []
+    for i in range(n):
+        sl = jax.tree_util.tree_map(lambda x: x[i], xs)
+        carry, out = f(carry, sl)
+        outs.append(out)
+    if outs and outs[0] is not None:
+        stacked = jax.tree_util.tree_map(lambda *ys: jnp.stack(ys), *outs)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# per-group layer init
+# ---------------------------------------------------------------------------
+
+def _decoder_layer_init(rng, cfg):
+    ks = jax.random.split(rng, 3)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.dtype)),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.dtype)),
+        "attn": attn_init(ks[0], cfg),
+    }
+    if cfg.arch_type == "moe":
+        p["moe"] = moe_init(ks[1], cfg)
+    else:
+        p["ffn"] = ffn_init(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_type, jnp.dtype(cfg.dtype))
+    return p
+
+
+def _cross_layer_init(rng, cfg):
+    ks = jax.random.split(rng, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.dtype)),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.dtype)),
+        "attn": attn_init(ks[0], cfg, cross=True),
+        "ffn": ffn_init(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_type, jnp.dtype(cfg.dtype)),
+        "gate": jnp.full((1,), 0.1, jnp.float32),   # mllama-style cross gate
+    }
+
+
+def _dec_layer_init(rng, cfg):
+    """Audio decoder layer: self-attn + cross-attn + ffn."""
+    ks = jax.random.split(rng, 4)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.dtype)),
+        "ln_x": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.dtype)),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.dtype)),
+        "self": attn_init(ks[0], cfg),
+        "cross": attn_init(ks[1], cfg, cross=True),
+        "ffn": ffn_init(ks[2], cfg.d_model, cfg.d_ff, cfg.ffn_type, jnp.dtype(cfg.dtype)),
+    }
+
+
+def _stack(init_fn, rng, n, *args):
+    keys = jax.random.split(rng, max(n, 1))
+    layers = [init_fn(keys[i], *args) for i in range(n)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_params(rng, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 12)
+    v = cfg.physical_vocab
+    params = {
+        "embed": dense_init(ks[0], (v, cfg.d_model), dtype, scale=0.02),
+        "head": dense_init(ks[1], (cfg.d_model, v), dtype),
+        "final_ln": jnp.zeros((cfg.d_model,), dtype),
+        "groups": {},
+    }
+    for gi, (gname, n) in enumerate(build_program(cfg)):
+        sub = jax.random.fold_in(ks[2], gi)
+        if gname == "decoder":
+            params["groups"][gname] = _stack(_decoder_layer_init, sub, n, cfg)
+        elif gname == "mamba":
+            params["groups"][gname] = _stack(mamba_init, sub, n, cfg)
+        elif gname == "zamba_super":
+            params["groups"][gname] = {
+                "mamba": _stack(
+                    lambda r, c: _stack(mamba_init, r, cfg.attn_every, c), sub, n, cfg
+                ),
+            }
+            params["shared_attn"] = _decoder_layer_init(ks[3], cfg)
+        elif gname == "vlm_super":
+            params["groups"][gname] = {
+                "self": _stack(
+                    lambda r, c: _stack(_decoder_layer_init, r,
+                                        cfg.cross_attn_every - 1, c),
+                    sub, n, cfg,
+                ),
+                "cross": _stack(_cross_layer_init, sub, n, cfg),
+            }
+        elif gname == "enc":
+            params["groups"][gname] = _stack(_decoder_layer_init, sub, n, cfg)
+        elif gname == "dec":
+            params["groups"][gname] = _stack(_dec_layer_init, sub, n, cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# full-sequence bodies (train / prefill).  Each returns (h, cache_slice).
+# ---------------------------------------------------------------------------
+
+def _decoder_block(p, cfg, h, *, want_cache, attn_impl="blockwise"):
+    a_in = _norm(cfg, h, p["ln1"])
+    a_out, (k, v) = attn_apply(p["attn"], cfg, a_in, attn_impl=attn_impl)
+    h = h + a_out
+    f_in = _norm(cfg, h, p["ln2"])
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.arch_type == "moe" and "moe" in p:
+        b, s, d = f_in.shape
+        y, aux = moe_apply(p["moe"], cfg, f_in.reshape(b * s, d))
+        h = h + y.reshape(b, s, d)
+    else:
+        h = h + ffn_apply(p["ffn"], f_in, cfg.ffn_type)
+    h = shard_hint(h, "act")
+    cache = {"k": k, "v": v} if want_cache else None
+    return h, cache, aux
+
+
+def _cross_block(p, cfg, h, memory, *, want_cache):
+    a_in = _norm(cfg, h, p["ln1"])
+    a_out, (k, v) = attn_apply(p["attn"], cfg, a_in, kv_x=memory, causal=False,
+                               use_rope=False)
+    h = h + jnp.tanh(p["gate"]).astype(h.dtype) * a_out
+    f_in = _norm(cfg, h, p["ln2"])
+    h = h + ffn_apply(p["ffn"], f_in, cfg.ffn_type)
+    cache = {"k": k, "v": v} if want_cache else None
+    return h, cache
+
+
+def _dec_block(p, cfg, h, memory, *, want_cache):
+    a_in = _norm(cfg, h, p["ln1"])
+    a_out, (k, v) = attn_apply(p["self"], cfg, a_in)
+    h = h + a_out
+    x_in = _norm(cfg, h, p["ln_x"])
+    x_out, (kx, vx) = attn_apply(p["cross"], cfg, x_in, kv_x=memory, causal=False,
+                                 use_rope=False)
+    h = h + x_out
+    f_in = _norm(cfg, h, p["ln2"])
+    h = shard_hint(h + ffn_apply(p["ffn"], f_in, cfg.ffn_type), "act")
+    cache = (
+        {"self": {"k": k, "v": v}, "cross": {"k": kx, "v": vx}} if want_cache else None
+    )
+    return h, cache
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _run_groups(params, cfg: ArchConfig, h, extra, *, want_cache, use_remat,
+                attn_impl="blockwise", use_pallas=False, unroll=False):
+    """Run the block program.  Returns (h, caches, aux_sum)."""
+    caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def scan_group(body, h, stacked):
+        fn = jax.checkpoint(body) if use_remat else body
+        (h, aux), out = scan_or_unroll(fn, (h, jnp.zeros((), jnp.float32)),
+                                       stacked, unroll)
+        return h, out, aux
+
+    for gname, n in build_program(cfg):
+        if gname not in params["groups"]:
+            continue  # e.g. 'enc' handled separately by _encode for audio
+        gp = params["groups"][gname]
+        if gname == "decoder" or gname == "enc":
+            causal_cfg = cfg
+            def body(carry, p, _g=gname):
+                h, aux = carry
+                if _g == "enc":
+                    a_in = _norm(cfg, h, p["ln1"])
+                    a_out, kv = attn_apply(p["attn"], cfg, a_in, causal=False)
+                    h2 = h + a_out
+                    f_in = _norm(cfg, h2, p["ln2"])
+                    h2 = h2 + ffn_apply(p["ffn"], f_in, cfg.ffn_type)
+                    return (h2, aux), None
+                h2, cache, aux_l = _decoder_block(p, cfg, h, want_cache=want_cache,
+                                                  attn_impl=attn_impl)
+                return (h2, aux + aux_l), cache
+            h, out, aux = scan_group(body, h, gp)
+            aux_total += aux
+            if want_cache and gname == "decoder":
+                caches[gname] = out
+        elif gname == "mamba":
+            def body(carry, p):
+                h, aux = carry
+                m_in = rmsnorm(h)
+                y, st = mamba_apply(p, cfg, m_in, use_pallas=use_pallas,
+                                    return_state=want_cache)
+                return (shard_hint(h + y, "act"), aux), st
+            h, out, _ = scan_group(body, h, gp)
+            if want_cache:
+                caches[gname] = out
+        elif gname == "zamba_super":
+            shared = params["shared_attn"]
+            def body(carry, p):
+                h, aux = carry
+                def mbody(c2, mp):
+                    h2, _ = c2
+                    y, st = mamba_apply(mp, cfg, rmsnorm(h2),
+                                        use_pallas=use_pallas,
+                                        return_state=want_cache)
+                    return (shard_hint(h2 + y, "act"), jnp.zeros((), jnp.float32)), st
+                (h, _), mstates = scan_or_unroll(mbody, (h, aux), p["mamba"], unroll)
+                h, cache, _ = _decoder_block(shared, cfg, h, want_cache=want_cache,
+                                             attn_impl=attn_impl)
+                return (h, aux), {"mamba": mstates, "attn": cache} if want_cache else None
+            h, out, _ = scan_group(body, h, gp)
+            if want_cache:
+                caches[gname] = out
+        elif gname == "vlm_super":
+            vision = extra["vision"]
+            def body(carry, p):
+                h, aux = carry
+                def sbody(c2, sp):
+                    h2, _ = c2
+                    h3, cache, _ = _decoder_block(sp, cfg, h2, want_cache=want_cache,
+                                                  attn_impl=attn_impl)
+                    return (h3, jnp.zeros((), jnp.float32)), cache
+                (h, _), scache = scan_or_unroll(sbody, (h, aux), p["self"], unroll)
+                h, xcache = _cross_block(p["cross"], cfg, h, vision,
+                                         want_cache=want_cache)
+                return (h, aux), {"self": scache, "cross": xcache} if want_cache else None
+            h, out, _ = scan_group(body, h, gp)
+            if want_cache:
+                caches[gname] = out
+        elif gname == "dec":
+            memory = extra["memory"]
+            def body(carry, p):
+                h, aux = carry
+                h2, cache = _dec_block(p, cfg, h, memory, want_cache=want_cache)
+                return (h2, aux), cache
+            h, out, _ = scan_group(body, h, gp)
+            if want_cache:
+                caches[gname] = out
+    return h, caches, aux_total
+
+
+def _encode(params, cfg, frames, use_remat, unroll=False):
+    """Audio encoder over precomputed frame embeddings (frontend stub)."""
+    h = frames.astype(jnp.dtype(cfg.dtype))
+    gp = params["groups"]["enc"]
+
+    def body(carry, p):
+        h, aux = carry
+        a_in = _norm(cfg, h, p["ln1"])
+        a_out, _ = attn_apply(p["attn"], cfg, a_in, causal=False)
+        h = h + a_out
+        f_in = _norm(cfg, h, p["ln2"])
+        h = h + ffn_apply(p["ffn"], f_in, cfg.ffn_type)
+        return (h, aux), None
+
+    fn = jax.checkpoint(body) if use_remat else body
+    (h, _), _ = scan_or_unroll(fn, (h, jnp.zeros((), jnp.float32)), gp, unroll)
+    return h
+
+
+def forward(params, cfg: ArchConfig, tokens, extra=None, *, want_cache=False,
+            use_remat=False, attn_impl="blockwise", use_pallas=False,
+            unroll=False):
+    """tokens: [B, S] int32.  extra: {'vision': [B,Tv,d]} | {'frames': [B,Sf,d]}.
+
+    Returns (logits [B, S, Vphys], caches, aux)."""
+    extra = extra or {}
+    h = shard_hint(jnp.take(params["embed"], tokens, axis=0), "act")
+    if cfg.arch_type == "audio":
+        memory = _encode(params, cfg, extra["frames"], use_remat, unroll)
+        extra = dict(extra, memory=memory)
+        # skip the 'enc' group inside _run_groups for the decoder pass
+        dec_params = {"groups": {"dec": params["groups"]["dec"]}}
+        h, caches, aux = _run_groups(dec_params, cfg, h, extra,
+                                     want_cache=want_cache, use_remat=use_remat,
+                                     attn_impl=attn_impl, use_pallas=use_pallas,
+                                     unroll=unroll)
+        if want_cache:
+            caches["enc_memory"] = memory
+    else:
+        h, caches, aux = _run_groups(params, cfg, h, extra, want_cache=want_cache,
+                                     use_remat=use_remat, attn_impl=attn_impl,
+                                     use_pallas=use_pallas, unroll=unroll)
+    h = _norm(cfg, h, params["final_ln"])
+    logits = shard_hint(h @ params["head"], "logits")
+    return logits, caches, aux
+
+
+def forward_train(params, cfg: ArchConfig, batch, *, use_remat=True,
+                  attn_impl="blockwise", use_pallas=False, aux_weight=0.01,
+                  unroll=False):
+    """Causal LM loss.  batch: {'tokens', 'labels', [extras]}; labels==-1 masked.
+    The vocab-padding columns are masked out of the softmax."""
+    extra = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+    logits, _, aux = forward(params, cfg, batch["tokens"], extra,
+                             use_remat=use_remat, attn_impl=attn_impl,
+                             use_pallas=use_pallas, unroll=unroll)
+    if cfg.physical_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.physical_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = softmax_cross_entropy(logits, jnp.maximum(labels, 0), mask)
+    return loss + aux_weight * aux
+
+
+def prefill(params, cfg: ArchConfig, tokens, max_len: int, extra=None,
+            attn_impl: str = "blockwise", use_pallas: bool = False,
+            unroll: bool = False):
+    """Process a prompt and build a decode cache of capacity ``max_len``.
+
+    Returns (last_logits [B, Vphys], caches).  This is the transformer
+    analogue of the paper's *batch layer*: the expensive precompute whose
+    output (KV cache / SSM state) the cheap per-token speed layer consumes.
+    """
+    extra = extra or {}
+    b, s = tokens.shape
+    logits, fwd_caches, _ = forward(params, cfg, tokens, extra, want_cache=True,
+                                    use_remat=False, attn_impl=attn_impl,
+                                    use_pallas=use_pallas, unroll=unroll)
+    extra_shapes = {}
+    if "vision" in extra:
+        extra_shapes["vision_len"] = extra["vision"].shape[1]
+    if "frames" in extra:
+        extra_shapes["memory_len"] = extra["frames"].shape[1]
+    full = init_cache(cfg, b, max_len, extra_shapes)
+
+    if cfg.arch_type == "audio":
+        # encoder memory K/V were cached per dec layer already; drop the raw copy
+        fwd_caches = {k: v for k, v in fwd_caches.items() if k != "enc_memory"}
+
+    def merge(dst, src):
+        if dst.shape == src.shape:
+            return src.astype(dst.dtype)
+        # attention K/V: embed [.., S, Dh] into [.., max_len, Dh] at offset 0
+        assert dst.ndim == src.ndim and dst.shape[-1] == src.shape[-1], (
+            dst.shape, src.shape)
+        start = (0,) * dst.ndim
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), start)
+
+    merged = {"pos": jnp.asarray(s, jnp.int32)}
+    for gname in fwd_caches:
+        merged[gname] = jax.tree_util.tree_map(merge, full[gname], fwd_caches[gname])
+    return logits[:, -1], merged
+
+
+# ---------------------------------------------------------------------------
+# decode: cache init + single-token step
+# ---------------------------------------------------------------------------
+
+def _attn_cache_zeros(cfg, batch, max_len, dtype):
+    hkv, dh = cfg.physical_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, hkv, max_len, dh), dtype),
+        "v": jnp.zeros((batch, hkv, max_len, dh), dtype),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, extra_shapes=None):
+    """Zero-initialized decode cache matching ``decode_step``'s expectations.
+
+    ``extra_shapes``: {'vision_len': int} / {'memory_len': int} for cross
+    caches.  For dry-run specs use ``jax.eval_shape(init_cache, ...)``.
+
+    With ``cfg.ring_kv_cache`` (sliding-window archs) the self-attention
+    caches are ring buffers of ``window`` slots: the oldest position is
+    overwritten, bounding decode memory by O(window) instead of O(max_len).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.ring_kv_cache and cfg.window:
+        max_len = min(max_len, cfg.window)
+    di, n = cfg.d_inner, cfg.ssm_state
+    conv_w = di + 2 * n
+    caches = {"pos": jnp.zeros((), jnp.int32)}
+    extra_shapes = extra_shapes or {}
+
+    def mamba_state():
+        return {
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_w), dtype),
+            "ssm": jnp.zeros((batch, cfg.ssm_heads, n, cfg.ssm_head_dim), jnp.float32),
+        }
+
+    def stack_n(make, n_):
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                      *[make() for _ in range(max(n_, 1))])
+
+    for gname, n_layers in build_program(cfg):
+        if gname in ("decoder",):
+            caches[gname] = stack_n(lambda: _attn_cache_zeros(cfg, batch, max_len, dtype),
+                                    n_layers)
+        elif gname == "mamba":
+            caches[gname] = stack_n(mamba_state, n_layers)
+        elif gname == "zamba_super":
+            caches[gname] = stack_n(
+                lambda: {
+                    "mamba": stack_n(mamba_state, cfg.attn_every),
+                    "attn": _attn_cache_zeros(cfg, batch, max_len, dtype),
+                },
+                n_layers,
+            )
+        elif gname == "vlm_super":
+            tv = extra_shapes.get("vision_len", cfg.num_vision_tokens)
+            caches[gname] = stack_n(
+                lambda: {
+                    "self": stack_n(
+                        lambda: _attn_cache_zeros(cfg, batch, max_len, dtype),
+                        cfg.cross_attn_every - 1,
+                    ),
+                    "cross": {
+                        "k": jnp.zeros((batch, cfg.physical_kv_heads, tv, cfg.head_dim), dtype),
+                        "v": jnp.zeros((batch, cfg.physical_kv_heads, tv, cfg.head_dim), dtype),
+                    },
+                },
+                n_layers,
+            )
+        elif gname == "dec":
+            ml = extra_shapes.get("memory_len", 1024)
+            caches[gname] = stack_n(
+                lambda: {
+                    "self": _attn_cache_zeros(cfg, batch, max_len, dtype),
+                    "cross": {
+                        "k": jnp.zeros((batch, cfg.physical_kv_heads, ml, cfg.head_dim), dtype),
+                        "v": jnp.zeros((batch, cfg.physical_kv_heads, ml, cfg.head_dim), dtype),
+                    },
+                },
+                n_layers,
+            )
+        # 'enc' has no decode-time cache
+    return caches
+
+
+def _decoder_block_decode(p, cfg, h, cache, pos):
+    a_in = _norm(cfg, h, p["ln1"])
+    a_out, cache = attn_decode(p["attn"], cfg, a_in, cache, pos)
+    h = h + a_out
+    f_in = _norm(cfg, h, p["ln2"])
+    if cfg.arch_type == "moe" and "moe" in p:
+        b = f_in.shape[0]
+        y, _ = moe_apply(p["moe"], cfg, f_in.reshape(b, -1), full_capacity=True)
+        h = h + y.reshape(b, 1, -1)
+    else:
+        h = h + ffn_apply(p["ffn"], f_in, cfg.ffn_type)
+    return shard_hint(h, "act"), cache
+
+
+def decode_step(params, cfg: ArchConfig, token, caches, unroll: bool = False):
+    """One decode step.  token: [B] int32.  Returns (logits [B, Vphys], caches)."""
+    pos = caches["pos"]
+    h = shard_hint(jnp.take(params["embed"], token[:, None], axis=0), "act")
+    new_caches = dict(caches)
+
+    for gname, n in build_program(cfg):
+        gp = params["groups"].get(gname)
+        if gname == "enc":
+            continue
+        cstack = caches[gname]
+        if gname == "decoder":
+            def body(h, xs):
+                p, c = xs
+                h, c = _decoder_block_decode(p, cfg, h, c, pos)
+                return h, c
+            h, new_caches[gname] = scan_or_unroll(body, h, (gp, cstack), unroll)
+        elif gname == "mamba":
+            def body(h, xs):
+                p, c = xs
+                y, c = mamba_decode(p, cfg, rmsnorm(h), c)
+                return h + y, c
+            h, new_caches[gname] = scan_or_unroll(body, h, (gp, cstack), unroll)
+        elif gname == "zamba_super":
+            shared = params["shared_attn"]
+            def body(h, xs):
+                p, c = xs
+                def mb(h2, xs2):
+                    mp, mc = xs2
+                    y, mc = mamba_decode(mp, cfg, rmsnorm(h2), mc)
+                    return h2 + y, mc
+                h, mcache = scan_or_unroll(mb, h, (p["mamba"], c["mamba"]), unroll)
+                h, acache = _decoder_block_decode(shared, cfg, h, c["attn"], pos)
+                return h, {"mamba": mcache, "attn": acache}
+            h, new_caches[gname] = scan_or_unroll(body, h, (gp, cstack), unroll)
+        elif gname == "vlm_super":
+            def body(h, xs):
+                p, c = xs
+                def sb(h2, xs2):
+                    sp, sc = xs2
+                    h2, sc = _decoder_block_decode(sp, cfg, h2, sc, pos)
+                    return h2, sc
+                h, scache = scan_or_unroll(sb, h, (p["self"], c["self"]), unroll)
+                a_in = _norm(cfg, h, p["cross"]["ln1"])
+                a_out, _ = attn_decode(p["cross"]["attn"], cfg, a_in,
+                                       c["cross"], pos, cross=True)
+                h = h + jnp.tanh(p["cross"]["gate"]).astype(h.dtype) * a_out
+                f_in = _norm(cfg, h, p["cross"]["ln2"])
+                h = h + ffn_apply(p["cross"]["ffn"], f_in, cfg.ffn_type)
+                return h, {"self": scache, "cross": c["cross"]}
+            h, new_caches[gname] = scan_or_unroll(body, h, (gp, cstack), unroll)
+        elif gname == "dec":
+            def body(h, xs):
+                p, c = xs
+                a_in = _norm(cfg, h, p["ln1"])
+                a_out, sc = attn_decode(p["self"], cfg, a_in, c["self"], pos)
+                h = h + a_out
+                x_in = _norm(cfg, h, p["ln_x"])
+                x_out, _ = attn_decode(p["cross"], cfg, x_in, c["cross"], pos,
+                                       cross=True)
+                h = h + x_out
+                f_in = _norm(cfg, h, p["ln2"])
+                h = h + ffn_apply(p["ffn"], f_in, cfg.ffn_type)
+                return h, {"self": sc, "cross": c["cross"]}
+            h, new_caches[gname] = scan_or_unroll(body, h, (gp, cstack), unroll)
+
+    h = _norm(cfg, h, params["final_ln"])
+    logits = shard_hint(h @ params["head"], "logits")[:, 0]
+    new_caches["pos"] = pos + 1
+    return logits, new_caches

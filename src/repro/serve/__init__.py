@@ -1,0 +1,4 @@
+from repro.serve.kvstore import KVStore
+from repro.serve.lambda_pipeline import BatchLayer, SpeedLayer, LambdaPipeline
+
+__all__ = ["KVStore", "BatchLayer", "SpeedLayer", "LambdaPipeline"]

@@ -1,0 +1,75 @@
+"""Key-value embedding store — the paper's "distributed key-value store"
+(production would be Couchbase/Redis; here an in-memory dict with an
+npz-backed persistence path and the same access pattern: batched point
+lookups by entity key).
+
+Keys are (entity_id, snapshot) pairs packed into int64; values are stage-1
+entity embeddings.  ``lookup_batch`` returns a dense [B, K, H] tensor plus
+mask — exactly the speed-layer input.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+
+def pack_key(entity: int, snapshot: int) -> int:
+    return (int(entity) << 20) | (int(snapshot) & 0xFFFFF)
+
+
+class KVStore:
+    def __init__(self, dim: int):
+        self.dim = dim
+        self._data: dict[int, np.ndarray] = {}
+        self.stats = {"puts": 0, "gets": 0, "misses": 0}
+
+    def put(self, key: int, value: np.ndarray):
+        self._data[key] = np.asarray(value, np.float32)
+        self.stats["puts"] += 1
+
+    def put_batch(self, keys, values):
+        for k, v in zip(keys, values):
+            self.put(int(k), v)
+
+    def get(self, key: int):
+        self.stats["gets"] += 1
+        v = self._data.get(int(key))
+        if v is None:
+            self.stats["misses"] += 1
+        return v
+
+    def lookup_batch(self, key_lists: list, k_max: int):
+        """key_lists: per request, a list of entity keys (<= k_max used).
+
+        Returns (emb [B, K, H] float32, mask [B, K]) with zero rows for
+        missing keys — cold entities contribute nothing, matching the DDS
+        semantics for orders without history."""
+        b = len(key_lists)
+        emb = np.zeros((b, k_max, self.dim), np.float32)
+        mask = np.zeros((b, k_max), np.float32)
+        for i, keys in enumerate(key_lists):
+            for j, key in enumerate(keys[:k_max]):
+                v = self.get(key)
+                if v is not None:
+                    emb[i, j] = v
+                    mask[i, j] = 1.0
+        return emb, mask
+
+    def __len__(self):
+        return len(self._data)
+
+    # ------------------------------------------------------------- persistence
+    def save(self, path: str):
+        keys = np.asarray(list(self._data.keys()), np.int64)
+        vals = np.stack(list(self._data.values())) if self._data else np.zeros((0, self.dim))
+        np.savez(path, keys=keys, values=vals, dim=self.dim)
+
+    @classmethod
+    def load(cls, path: str) -> "KVStore":
+        with np.load(path) as data:
+            store = cls(int(data["dim"]))
+            for k, v in zip(data["keys"], data["values"]):
+                store._data[int(k)] = v
+        return store

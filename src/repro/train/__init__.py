@@ -1,0 +1,15 @@
+from repro.train.metrics import roc_auc, average_precision, binary_metrics
+from repro.train.optim import adamw, cosine_schedule, clip_by_global_norm, OptState
+from repro.train.checkpoint import save_checkpoint, load_checkpoint
+
+__all__ = [
+    "roc_auc",
+    "average_precision",
+    "binary_metrics",
+    "adamw",
+    "cosine_schedule",
+    "clip_by_global_norm",
+    "OptState",
+    "save_checkpoint",
+    "load_checkpoint",
+]

@@ -1,0 +1,84 @@
+"""Checkpointing: save/restore arbitrary pytrees to a single ``.npz`` file.
+
+Layout: leaves are flattened with '/'-joined key paths as npz keys; the
+treedef is reconstructed from the example pytree passed to ``load_checkpoint``
+(the standard "restore into like-structured template" convention, same as
+orbax's restore_args, without the dependency).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            else:
+                parts.append(str(p))
+        out["/".join(parts)] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, tree, step: int | None = None) -> str:
+    """Atomically write pytree ``tree`` to ``path`` (.npz)."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+    payload = _flatten_with_paths(tree)
+    if step is not None:
+        payload["__step__"] = np.asarray(step, np.int64)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)), suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return path
+
+
+def load_checkpoint(path: str, like):
+    """Restore a pytree saved by ``save_checkpoint`` into the structure of ``like``.
+
+    Returns (tree, step) where step is None if absent.
+    """
+    with np.load(path) as data:
+        step = int(data["__step__"]) if "__step__" in data else None
+        keys = _flatten_with_paths(like)
+        restored_flat = []
+        paths_leaves = jax.tree_util.tree_flatten_with_path(like)
+        for path, leaf in paths_leaves[0]:
+            parts = []
+            for p in path:
+                if hasattr(p, "key"):
+                    parts.append(str(p.key))
+                elif hasattr(p, "idx"):
+                    parts.append(str(p.idx))
+                elif hasattr(p, "name"):
+                    parts.append(str(p.name))
+                else:
+                    parts.append(str(p))
+            key = "/".join(parts)
+            if key not in data:
+                raise KeyError(f"checkpoint {path!r} missing key {key!r}")
+            arr = data[key]
+            want_shape = tuple(getattr(leaf, "shape", arr.shape))
+            if tuple(arr.shape) != want_shape:
+                raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {want_shape}")
+            restored_flat.append(arr)
+        tree = jax.tree_util.tree_unflatten(paths_leaves[1], restored_flat)
+    del keys
+    return tree, step

@@ -1,0 +1,105 @@
+"""Minimal pure-JAX optimizer stack (no optax in this environment).
+
+Provides AdamW with decoupled weight decay, global-norm gradient clipping and
+a warmup+cosine LR schedule — the standard training substrate for both the
+GNN (paper) models and the transformer zoo.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    mu: any  # first moment pytree
+    nu: any  # second moment pytree
+
+
+def cosine_schedule(
+    base_lr: float,
+    total_steps: int,
+    warmup_steps: int = 0,
+    final_frac: float = 0.0,
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Linear warmup to ``base_lr`` then cosine decay to ``final_frac*base_lr``."""
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.where(
+            warmup_steps > 0, jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0), 1.0
+        )
+        progress = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+        decay = final_frac + (1.0 - final_frac) * cos
+        return base_lr * warm * decay
+
+    return schedule
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Clip a gradient pytree to a maximum global L2 norm; returns (grads, norm)."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw(
+    learning_rate: float | Callable = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    clip_norm: float | None = 1.0,
+):
+    """Returns (init_fn, update_fn) in the optax convention.
+
+    ``update_fn(grads, state, params) -> (new_params, new_state, aux)``.
+    Weight decay is decoupled (applied to params directly, not to moments)
+    and skipped for 1-D leaves (biases, layernorm scales) — standard practice.
+    """
+    lr_fn = learning_rate if callable(learning_rate) else (lambda _: learning_rate)
+
+    def init_fn(params) -> OptState:
+        zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+    def update_fn(grads, state: OptState, params):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            leaves = jax.tree_util.tree_leaves(grads)
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        step = state.step + 1
+        lr = lr_fn(step)
+        b1t = 1.0 - jnp.power(jnp.float32(b1), step.astype(jnp.float32))
+        b2t = 1.0 - jnp.power(jnp.float32(b2), step.astype(jnp.float32))
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1.0 - b1) * g32
+            v = b2 * v + (1.0 - b2) * jnp.square(g32)
+            mhat = m / b1t
+            vhat = v / b2t
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and p.ndim >= 2:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        aux = {"grad_norm": gnorm, "lr": lr}
+        return new_p, OptState(step=step, mu=new_m, nu=new_v), aux
+
+    return init_fn, update_fn

@@ -1,0 +1,12 @@
+from repro.utils.padding import pad_to_multiple, pad_axis_to, ceil_div
+from repro.utils.tree import tree_size, tree_bytes, tree_zeros_like, tree_map_with_path
+
+__all__ = [
+    "pad_to_multiple",
+    "pad_axis_to",
+    "ceil_div",
+    "tree_size",
+    "tree_bytes",
+    "tree_zeros_like",
+    "tree_map_with_path",
+]

@@ -1,0 +1,52 @@
+"""Pytree helpers used across training, checkpointing and the dry-run."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_size(tree) -> int:
+    """Total number of elements in a pytree of arrays/ShapeDtypeStructs."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        shape = getattr(leaf, "shape", ())
+        n = 1
+        for d in shape:
+            n *= int(d)
+        total += n
+    return total
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays/ShapeDtypeStructs."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        shape = getattr(leaf, "shape", ())
+        n = 1
+        for d in shape:
+            n *= int(d)
+        total += n * jnp.dtype(getattr(leaf, "dtype", jnp.float32)).itemsize
+    return total
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, x.dtype), tree)
+
+
+def tree_map_with_path(fn, tree):
+    """Map ``fn(path_str, leaf)`` over a pytree; path is '/'-joined keys."""
+
+    def _fmt(path):
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_fmt(p), x), tree)

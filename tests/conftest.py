@@ -1,0 +1,31 @@
+import os
+import sys
+
+# NOTE: deliberately no XLA_FLAGS here — tests must see the real 1-CPU
+# backend; only launch/dryrun.py creates the 512 placeholder devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_fraud_dataset():
+    """A small synthetic fraud graph shared across tests."""
+    from repro.data import SynthConfig, generate_transactions, make_split_masks
+    from repro.data.pipeline import standardize_features
+
+    cfg = SynthConfig(num_users=150, num_rings=4, feature_noise=0.8, seed=7)
+    g, etypes = generate_transactions(cfg)
+    split = make_split_masks(g.order_snapshot)
+    feats, _ = standardize_features(g.order_features, split == 0)
+    g.order_features = feats
+    return g, etypes, split
+
+
+@pytest.fixture(scope="session")
+def small_communities(small_fraud_dataset):
+    from repro.data import build_communities
+
+    g, _, _ = small_fraud_dataset
+    return build_communities(g, community_size=128, max_deg=16)

@@ -1,0 +1,96 @@
+"""Property-based tests (hypothesis) for the DDS graph — the paper's central
+correctness claim: no information from the future of a checkout can reach it.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dds import StaticGraph, build_dds, check_no_future_leak
+from repro.core.graph import EdgeType, NodeType, pad_graph
+
+
+def random_static_graph(rng, num_orders, num_entities, num_snapshots, edge_prob=0.15):
+    edges = []
+    for o in range(num_orders):
+        linked = rng.uniform(size=num_entities) < edge_prob
+        for e in np.nonzero(linked)[0]:
+            edges.append((o, e))
+        if not linked.any():
+            edges.append((o, rng.integers(num_entities)))
+    return StaticGraph(
+        num_orders=num_orders,
+        num_entities=num_entities,
+        edges=np.asarray(edges, np.int64),
+        order_snapshot=rng.integers(0, num_snapshots, num_orders),
+        order_features=rng.normal(size=(num_orders, 5)).astype(np.float32),
+        labels=rng.integers(0, 2, num_orders).astype(np.float32),
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    num_orders=st.integers(3, 40),
+    num_entities=st.integers(2, 15),
+    num_snapshots=st.integers(2, 8),
+    seed=st.integers(0, 1000),
+    history=st.sampled_from(["all", "consecutive"]),
+)
+def test_no_future_leak_invariants(num_orders, num_entities, num_snapshots, seed, history):
+    rng = np.random.default_rng(seed)
+    g = random_static_graph(rng, num_orders, num_entities, num_snapshots)
+    dds = build_dds(g, entity_history=history)
+    check_no_future_leak(dds)   # asserts all four invariants
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_final_hop_is_latest_strictly_past(seed):
+    """Every ENTITY_TO_ORDER edge comes from the entity's most recent active
+    snapshot strictly before the order (paper step 6: 0 <= t-e < t)."""
+    rng = np.random.default_rng(seed)
+    g = random_static_graph(rng, 30, 8, 6)
+    dds = build_dds(g)
+    coo = dds.coo
+    # entity active snapshots
+    active = {}
+    for (ent, t) in dds.entity_snap_ids:
+        active.setdefault(ent, []).append(t)
+    node_of = {v: k for k, v in dds.entity_snap_ids.items()}
+    fin = coo.etype == EdgeType.ENTITY_TO_ORDER
+    for s, d in zip(coo.src[fin], coo.dst[fin]):
+        ent, t_e = node_of[int(s)]
+        t_order = int(coo.snapshot[d])
+        past = [t for t in active[ent] if t < t_order]
+        assert past, "edge from entity with no past activity"
+        assert t_e == max(past)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), max_deg=st.integers(2, 12))
+def test_padding_preserves_edges_up_to_cap(seed, max_deg):
+    rng = np.random.default_rng(seed)
+    g = random_static_graph(rng, 25, 6, 5)
+    dds = build_dds(g)
+    pg = pad_graph(dds.coo, max_deg=max_deg)
+    # each real in-edge either appears in the padded rows or was degree-capped
+    deg = dds.coo.in_degrees()
+    kept = (pg.nbr_mask.sum(-1)).astype(int)
+    for v in range(dds.coo.num_nodes):
+        assert kept[v] == min(int(deg[v]), max_deg)
+    # padded slots point at row 0 with zero mask and contribute nothing
+    assert pg.nbr_idx[pg.nbr_mask == 0].max(initial=0) == 0
+
+
+def test_shadow_orders_carry_no_labels(small_communities):
+    for b in small_communities:
+        g = b.graph
+        lab = np.asarray(g.label_mask)
+        types = np.asarray(g.node_type)
+        assert (lab[types == NodeType.SHADOW] == 0).all()
+        assert (lab[types == NodeType.ENTITY] == 0).all()
+        assert (lab[types == NodeType.PAD] == 0).all()
+
+
+def test_community_dds_invariants(small_communities):
+    for b in small_communities:
+        check_no_future_leak(b.dds)

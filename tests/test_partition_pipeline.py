@@ -1,0 +1,91 @@
+"""Partition + data-pipeline invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (
+    _kmeans_1d,
+    power_iteration_clustering,
+    refine_partition,
+    partition_transactions,
+)
+from repro.data import SynthConfig, generate_transactions, make_split_masks
+from repro.data.pipeline import apply_split_to_batches, build_communities
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 500), st.integers(20, 120), st.integers(8, 64))
+def test_refine_partition_respects_size_cap(seed, n, target):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, n * 2)
+    dst = rng.integers(0, n, n * 2)
+    coarse = np.zeros(n, np.int32)
+    comm = refine_partition(n, src, dst, coarse, target_size=target)
+    assert comm.min() >= 0                       # every node assigned
+    sizes = np.bincount(comm)
+    assert sizes.max() <= target
+
+
+def test_pic_separates_two_blobs():
+    """Two disconnected cliques must land in different PIC clusters."""
+    n = 40
+    edges = []
+    for i in range(20):
+        for j in range(i + 1, 20):
+            edges.append((i, j))
+            edges.append((20 + i, 20 + j))
+    src = np.asarray([e[0] for e in edges])
+    dst = np.asarray([e[1] for e in edges])
+    labels = power_iteration_clustering(n, src, dst, 2, seed=1)
+    a, b = labels[:20], labels[20:]
+    assert len(set(a.tolist())) == 1
+    assert len(set(b.tolist())) == 1
+    assert a[0] != b[0]
+
+
+def test_kmeans_1d_basic():
+    x = np.concatenate([np.zeros(10), np.ones(10) * 5])
+    lab = _kmeans_1d(x, 2)
+    assert len(set(lab[:10].tolist())) == 1 and lab[0] != lab[-1]
+
+
+def test_partition_covers_all_nodes(small_fraud_dataset):
+    g, _, _ = small_fraud_dataset
+    comm = partition_transactions(g.num_orders, g.num_entities, g.edges,
+                                  community_size=128)
+    assert comm.shape[0] == g.num_orders + g.num_entities
+    assert (comm >= 0).all()
+
+
+def test_split_masks_are_time_ordered(small_fraud_dataset):
+    g, _, split = small_fraud_dataset
+    # every train order is no later than every test order
+    assert g.order_snapshot[split == 0].max() <= g.order_snapshot[split == 2].min()
+    assert {0, 1, 2} == set(np.unique(split).tolist())
+
+
+def test_communities_partition_orders(small_fraud_dataset, small_communities):
+    g, _, _ = small_fraud_dataset
+    seen = np.concatenate([b.global_order_ids for b in small_communities])
+    assert len(seen) == len(set(seen.tolist())), "order in two communities"
+    # most orders survive (tiny communities are dropped by min_orders)
+    assert len(seen) > 0.8 * g.num_orders
+
+
+def test_apply_split_masks_only_requested_orders(small_fraud_dataset, small_communities):
+    g, _, split = small_fraud_dataset
+    masked = apply_split_to_batches(small_communities, split, which=2)
+    for mb, b in zip(masked, small_communities):
+        n_orders = b.global_order_ids.size
+        m = np.asarray(mb.graph.label_mask[:n_orders])
+        want = (split[b.global_order_ids] == 2).astype(np.float32)
+        np.testing.assert_array_equal(m, want * np.asarray(b.graph.label_mask[:n_orders]))
+
+
+def test_generator_fraud_in_every_split():
+    for seed in range(3):
+        g, _ = generate_transactions(SynthConfig(num_users=200, num_rings=5, seed=seed))
+        split = make_split_masks(g.order_snapshot)
+        for w in range(3):
+            assert g.labels[split == w].sum() > 0, f"seed {seed} split {w} has no fraud"
+            assert (g.labels[split == w] == 0).sum() > 0

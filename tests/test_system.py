@@ -1,0 +1,41 @@
+"""End-to-end behaviour test for the paper's system: synthetic data ->
+partition -> DDS -> short LNN training -> the paper's Table-3 ordering
+(LNN beats the tabular baselines on ring-structured fraud)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.baselines import GBDTConfig, train_gbdt
+from repro.core import LNNConfig
+from repro.data import SynthConfig, generate_transactions, build_communities, make_split_masks
+from repro.data.pipeline import standardize_features
+from repro.train.loop import evaluate_lnn, train_lnn
+from repro.train.metrics import binary_metrics
+
+
+@pytest.mark.slow
+def test_lnn_beats_tabular_baseline_on_ring_fraud():
+    cfg = SynthConfig(num_users=300, num_rings=6, feature_noise=0.8, seed=0)
+    g, _ = generate_transactions(cfg)
+    split = make_split_masks(g.order_snapshot)
+    feats, _ = standardize_features(g.order_features, split == 0)
+    g.order_features = feats
+
+    gbdt = train_gbdt(feats[split == 0], g.labels[split == 0], GBDTConfig(),
+                      feats[split == 1], g.labels[split == 1])
+    m_gbdt = binary_metrics(g.labels[split == 2], gbdt.predict_proba(feats[split == 2]))
+
+    enc = np.concatenate([feats, gbdt.leaf_value_features(feats)], 1).astype(np.float32)
+    mu, sd = enc[split == 0].mean(0), enc[split == 0].std(0) + 1e-6
+    g.order_features = ((enc - mu) / sd).astype(np.float32)
+
+    batches = build_communities(g, community_size=256, max_deg=24)
+    lcfg = LNNConfig(gnn_type="gcn", num_gnn_layers=3, hidden_dim=64,
+                     feat_dim=g.order_features.shape[1], pos_weight=3.0)
+    res = train_lnn(batches, split, lcfg, epochs=25, patience=6, seed=0)
+    m_lnn = evaluate_lnn(res.params, lcfg, batches, split, 2)
+
+    # the paper's qualitative claim: graph linkage beats tabular-only
+    assert m_lnn["roc_auc"] > m_gbdt["roc_auc"]
+    assert m_lnn["average_precision"] > m_gbdt["average_precision"]
+    assert m_lnn["roc_auc"] > 0.9
