@@ -2,6 +2,7 @@
 
   table3    paper Table 3 (MLP / LGB / LNN-GAT / LNN-GCN, ROC-AUC + AP)
   latency   paper claim 3 (lambda 1-hop KV inference vs monolithic GNN)
+  streaming serving-engine replay (throughput, p50/p95/p99, staleness curve)
   kernels   Pallas-kernel micro-bench (XLA ref timing + v5e roofline projection)
   roofline  aggregated dry-run roofline table (if dry-run records exist)
 
@@ -38,6 +39,17 @@ def main() -> None:
     csv_rows.append(("latency/lambda_batched", f"{lat['lambda_batched_ms_per_request']*1e3:.1f}",
                      f"speedup={lat['speedup_batched']:.1f}x"))
     csv_rows.append(("latency/monolithic", f"{lat['monolithic_ms_per_request']*1e3:.1f}", ""))
+
+    from benchmarks.streaming_bench import main as streaming_main
+    stream = streaming_main()   # writes experiments/BENCH_streaming.json
+    for bs, t in stream["throughput"].items():
+        csv_rows.append((f"streaming/throughput_{bs}", f"{t['us_per_event']:.1f}",
+                         f"{t['events_per_s']:.0f}eps"))
+    csv_rows.append(("streaming/microbatch_speedup", "",
+                     f"{stream['microbatch_speedup']:.1f}x"))
+    for load, l in stream["latency"].items():
+        csv_rows.append((f"streaming/{load}/p99", f"{l['p99']*1e3:.0f}",
+                         f"p50={l['p50']:.2f}ms,p99={l['p99']:.2f}ms"))
 
     from benchmarks.kernels_bench import main as kernels_main
     ker = kernels_main()

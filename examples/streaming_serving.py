@@ -1,0 +1,84 @@
+"""Streaming serving demo: the Lambda loop closed end-to-end.
+
+Replays a synthetic checkout stream through the real-time engine:
+
+  1. INGEST       — each event extends the DDS graph incrementally
+                    (no-future-leak invariant held at every prefix);
+  2. BATCH LAYER  — the refresh driver re-runs LNN stage 1 when snapshot
+                    windows close, pushing versioned entity embeddings into
+                    the sharded KV store;
+  3. SPEED LAYER  — concurrent checkouts coalesce into fixed-shape
+                    micro-batches (size- and deadline-triggered flushes) and
+                    score through one jitted stage-2 call;
+  4. proves the streamed micro-batched scores equal the monolithic
+    ``lnn_forward`` over the final graph, then shows the staleness
+    trade-off when the batch layer refreshes lazily.
+
+Run:  PYTHONPATH=src python examples/streaming_serving.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core import LNNConfig, lnn_forward
+from repro.core.graph import pad_graph
+from repro.data import SynthConfig, build_communities, generate_event_stream
+from repro.stream import EngineConfig, StreamingEngine
+from repro.train.loop import train_lnn
+
+
+def main():
+    events, g, split = generate_event_stream(
+        SynthConfig(num_users=300, num_rings=5, feature_noise=0.8, seed=1),
+        rate_per_s=300.0,
+    )
+    cfg = LNNConfig(num_gnn_layers=3, hidden_dim=64,
+                    feat_dim=g.order_features.shape[1], pos_weight=3.0)
+
+    print("== training a small LNN (offline, on the historical graph) ==")
+    comm = build_communities(g, community_size=256, max_deg=24)
+    res = train_lnn(comm, split, cfg, epochs=15, patience=5)
+
+    print(f"\n== replaying {len(events)} checkout events through the engine ==")
+    eng = StreamingEngine(res.params, cfg, EngineConfig(
+        max_batch=16, max_wait_s=0.005, refresh_every=1, store_shards=4))
+    report = eng.replay(events)
+    s = report.summary()
+    print(f"   scored {s['scored']} checkouts in {s['flushes']} micro-batches "
+          f"(mean batch {s['mean_batch']:.1f}; "
+          f"{s['size_flushes']} size / {s['deadline_flushes']} deadline flushes)")
+    print(f"   latency p50={s['latency_ms']['p50']:.2f}ms "
+          f"p95={s['latency_ms']['p95']:.2f}ms p99={s['latency_ms']['p99']:.2f}ms "
+          f"(mean service {s['mean_service_ms']:.2f}ms)")
+    print(f"   batch layer: {s['refreshes']} refreshes wrote "
+          f"{s['entities_written']} versioned embeddings -> "
+          f"store size {s['store_size']}")
+    risky = sum(1 for r in report.results if r.score > 0.5)
+    print(f"   {risky} checkouts flagged risky")
+
+    print("\n== correctness: streamed scores == monolithic forward ==")
+    pg = pad_graph(eng.ingester.materialize().coo, max_deg=32)
+    full = np.asarray(jax.nn.sigmoid(
+        jax.jit(lambda p, gg: lnn_forward(p, cfg, gg))(res.params, pg)))
+    scores = report.scores_by_order()
+    err = max(abs(scores[ev.order_id] - full[i]) for i, ev in enumerate(events))
+    print(f"   max |streamed - monolithic| = {err:.2e}")
+
+    print("\n== staleness: refreshing every 6 windows instead of every 1 ==")
+    lazy = StreamingEngine(res.params, cfg, EngineConfig(
+        max_batch=16, refresh_every=6))
+    lazy_rep = lazy.replay(events)
+    st = lazy_rep.staleness_summary()
+    print(f"   {lazy.refresher.stats['refreshes']} refreshes "
+          f"(vs {s['refreshes']}); stale lookups: {st['stale_frac']:.0%}, "
+          f"mean staleness {st['mean']:.2f} snapshots, max {st['max']}")
+    print(f"   KV fallback stats: {lazy.store.stats['stale_hits']} stale hits, "
+          f"{lazy.store.stats['misses']} cold misses")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,12 @@
 """The paper's primary contribution: DDS graph + Lambda Neural Network."""
 from repro.core.graph import COOGraph, EdgeType, NodeType, PaddedGraph, pad_graph
-from repro.core.dds import DDSGraph, StaticGraph, build_dds, check_no_future_leak
+from repro.core.dds import (
+    DDSGraph,
+    IncrementalDDSBuilder,
+    StaticGraph,
+    build_dds,
+    check_no_future_leak,
+)
 from repro.core.lnn import (
     LNNConfig,
     lnn_forward,
@@ -20,6 +26,7 @@ __all__ = [
     "PaddedGraph",
     "pad_graph",
     "DDSGraph",
+    "IncrementalDDSBuilder",
     "StaticGraph",
     "build_dds",
     "check_no_future_leak",

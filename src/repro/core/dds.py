@@ -24,6 +24,7 @@ saw the order.  Property-tested in ``tests/test_dds_properties.py``.
 """
 from __future__ import annotations
 
+from bisect import bisect_left
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -183,6 +184,201 @@ def build_dds(
         label_mask=label_mask,
     )
     return DDSGraph(coo=coo, num_orders=O, entity_snap_ids=entity_snap_ids, last_hop=last_hop)
+
+
+class IncrementalDDSBuilder:
+    """Event-time incremental DDS construction — the streaming ingest path.
+
+    ``add_order`` appends one checkout event (events must arrive in
+    non-decreasing snapshot order, the event-time contract); the builder
+    maintains per-entity active-snapshot lists, the final-hop table, and the
+    typed edge lists incrementally, so per-event cost is O(K · history) with
+    no global rebuild.  ``entity_keys`` answers the speed-layer question —
+    "which ``(entity, t_e)`` KV keys feed this checkout?" — in
+    O(K log S) without materializing anything.
+
+    ``build()`` materializes a :class:`DDSGraph` whose padded form is
+    bit-identical to ``build_dds`` on the equivalent accumulated
+    :class:`StaticGraph` (same per-destination edge order, same node-id
+    layout: entity-snapshot ids assigned in sorted ``(entity, t)`` order).
+    The no-future-leak invariants hold by construction *at every prefix*:
+    a node's in-neighborhood is final the moment its snapshot closes, which
+    is exactly what lets the batch layer refresh embeddings incrementally
+    (see ``repro.stream.refresh``).
+    """
+
+    def __init__(
+        self,
+        feat_dim: int,
+        entity_history: str = "all",
+        max_history: int | None = None,
+    ):
+        if entity_history not in ("all", "consecutive"):
+            raise ValueError(entity_history)
+        self.feat_dim = int(feat_dim)
+        self.entity_history = entity_history
+        self.max_history = max_history
+        # accumulated static-graph state
+        self._order_snapshot: list[int] = []
+        self._order_features: list[np.ndarray] = []
+        self._labels: list[float] = []
+        self._order_entities: list[tuple] = []      # per order, linked entities
+        self._active: dict[int, list[int]] = {}     # entity -> sorted snapshots
+        self._pair_seq: list[tuple] = []            # (ent, t) in activation order
+        # typed symbolic edge lists; entity-snap nodes are (ent, t) tuples,
+        # orders are ints, shadows are ('s', order)
+        self._shadow_edges: list[tuple] = []        # (order, ent, t) both dirs
+        self._hist_edges: list[tuple] = []          # (ent, t_src, t_dst)
+        self._final_edges: list[tuple] = []         # (ent, t_e, order)
+
+    # ------------------------------------------------------------------ state
+    @property
+    def num_orders(self) -> int:
+        return len(self._order_snapshot)
+
+    @property
+    def current_snapshot(self) -> int:
+        return self._order_snapshot[-1] if self._order_snapshot else -1
+
+    def entity_keys(self, entities, t: int) -> list:
+        """Speed-layer key list: latest *strictly past* active snapshot per
+        linked entity (cold entities contribute nothing)."""
+        keys = []
+        for ent in entities:
+            snaps = self._active.get(int(ent))
+            if not snaps:
+                continue
+            idx = bisect_left(snaps, t) - 1
+            if idx >= 0:
+                keys.append((int(ent), snaps[idx]))
+        return keys
+
+    # ----------------------------------------------------------------- ingest
+    def add_order(self, entities, snapshot: int, features, label: float = 0.0) -> int:
+        """Append one checkout.  Returns the new order id (arrival order).
+
+        Raises on a snapshot regression — event-time ordering is the
+        invariant that makes incremental construction leak-free.
+        """
+        t = int(snapshot)
+        if t < self.current_snapshot:
+            raise ValueError(
+                f"event-time regression: snapshot {t} after {self.current_snapshot}"
+            )
+        o = self.num_orders
+        feats = np.asarray(features, np.float32)
+        if feats.shape != (self.feat_dim,):
+            raise ValueError(f"features shape {feats.shape} != ({self.feat_dim},)")
+        entities = [int(e) for e in entities]
+        self._order_snapshot.append(t)
+        self._order_features.append(feats)
+        self._labels.append(float(label))
+        self._order_entities.append(tuple(entities))
+
+        for ent in entities:
+            snaps = self._active.setdefault(ent, [])
+            # final-hop edge from the latest strictly-past active snapshot.
+            # Computed before (ent, t) activates, but t itself is excluded
+            # either way — matches build_dds exactly.
+            idx = bisect_left(snaps, t) - 1
+            if idx >= 0:
+                self._final_edges.append((ent, snaps[idx], o))
+            # activate (ent, t) on first touch: history edges are final here
+            # because every past snapshot of ent is already closed
+            if not snaps or snaps[-1] != t:
+                if self.entity_history == "consecutive":
+                    past = snaps[-1:]
+                else:
+                    past = snaps if self.max_history is None else snaps[-self.max_history:]
+                self._hist_edges.append((ent, t, t))        # self-loop first
+                for tp in past:
+                    self._hist_edges.append((ent, tp, t))
+                snaps.append(t)
+                self._pair_seq.append((ent, t))
+            self._shadow_edges.append((o, ent, t))
+        return o
+
+    # ------------------------------------------------------------ materialize
+    def to_static(self, num_snapshots: int = 0) -> StaticGraph:
+        """The accumulated transactions as a StaticGraph (orders in arrival
+        order) — ``build_dds(to_static())`` is the batch-path oracle the
+        equivalence tests compare against."""
+        edges = [
+            (o, e) for o, ents in enumerate(self._order_entities) for e in ents
+        ]
+        num_entities = 1 + max((e for _, e in edges), default=-1)
+        return StaticGraph(
+            num_orders=self.num_orders,
+            num_entities=num_entities,
+            edges=np.asarray(edges, np.int64).reshape(-1, 2),
+            order_snapshot=np.asarray(self._order_snapshot, np.int64),
+            order_features=np.stack(self._order_features)
+            if self._order_features
+            else np.zeros((0, self.feat_dim), np.float32),
+            labels=np.asarray(self._labels, np.float32),
+            num_snapshots=num_snapshots,
+        )
+
+    def build(self) -> DDSGraph:
+        """Materialize the accumulated DDS graph.
+
+        Node ids: [0, O) orders, [O, 2O) shadows, then entity-snapshot
+        vertices in sorted (entity, t) order — the ``build_dds`` layout.
+        Per-destination edge order also matches ``build_dds`` (shadow edges
+        in event order, history self-loop before ascending past, final-hop
+        in event order), so ``pad_graph`` output is identical.
+        """
+        O = self.num_orders
+        entity_snap_ids = {
+            pair: 2 * O + i for i, pair in enumerate(sorted(self._pair_seq))
+        }
+        src, dst, et = [], [], []
+        for o, ent, t in self._shadow_edges:
+            e_node = entity_snap_ids[(ent, t)]
+            src.append(O + o); dst.append(e_node); et.append(EdgeType.SHADOW_TO_ENTITY)
+            src.append(e_node); dst.append(O + o); et.append(EdgeType.ENTITY_TO_SHADOW)
+        for ent, t_src, t_dst in self._hist_edges:
+            src.append(entity_snap_ids[(ent, t_src)])
+            dst.append(entity_snap_ids[(ent, t_dst)])
+            et.append(EdgeType.ENTITY_HIST)
+        last_hop: dict = {}
+        for ent, t_e, o in self._final_edges:
+            e_node = entity_snap_ids[(ent, t_e)]
+            src.append(e_node); dst.append(o); et.append(EdgeType.ENTITY_TO_ORDER)
+            last_hop.setdefault(o, []).append((ent, t_e, e_node))
+
+        n_nodes = 2 * O + len(entity_snap_ids)
+        features = np.zeros((n_nodes, self.feat_dim), np.float32)
+        if O:
+            of = np.stack(self._order_features)
+            features[:O] = of
+            features[O : 2 * O] = of
+        node_type = np.full(n_nodes, NodeType.ENTITY, np.int32)
+        node_type[:O] = NodeType.ORDER
+        node_type[O : 2 * O] = NodeType.SHADOW
+        snapshot = np.zeros(n_nodes, np.int32)
+        snapshot[:O] = self._order_snapshot
+        snapshot[O : 2 * O] = self._order_snapshot
+        for (ent, t), nid in entity_snap_ids.items():
+            snapshot[nid] = t
+        label = np.zeros(n_nodes, np.float32)
+        label[:O] = self._labels
+        label_mask = np.zeros(n_nodes, np.float32)
+        label_mask[:O] = 1.0
+        coo = COOGraph(
+            num_nodes=n_nodes,
+            src=np.asarray(src, np.int64),
+            dst=np.asarray(dst, np.int64),
+            etype=np.asarray(et, np.int32),
+            features=features,
+            node_type=node_type,
+            snapshot=snapshot,
+            label=label,
+            label_mask=label_mask,
+        )
+        dds = DDSGraph(coo=coo, num_orders=O, entity_snap_ids=entity_snap_ids,
+                       last_hop=last_hop)
+        return dds
 
 
 def check_no_future_leak(dds: DDSGraph) -> None:

@@ -1,4 +1,5 @@
-from repro.data.synth import SynthConfig, generate_transactions
+from repro.data.synth import SynthConfig, generate_event_stream, generate_transactions
 from repro.data.pipeline import build_communities, make_split_masks
 
-__all__ = ["SynthConfig", "generate_transactions", "build_communities", "make_split_masks"]
+__all__ = ["SynthConfig", "generate_event_stream", "generate_transactions",
+           "build_communities", "make_split_masks"]

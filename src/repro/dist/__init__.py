@@ -1,0 +1,21 @@
+from repro.dist.sharding import (
+    batch_sharding,
+    cache_sharding,
+    enable_sharding_hints,
+    model_axis_size,
+    param_sharding,
+    resolve_spec,
+    shard_hint,
+    shard_spec,
+)
+
+__all__ = [
+    "batch_sharding",
+    "cache_sharding",
+    "enable_sharding_hints",
+    "model_axis_size",
+    "param_sharding",
+    "resolve_spec",
+    "shard_hint",
+    "shard_spec",
+]

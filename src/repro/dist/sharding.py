@@ -1,0 +1,223 @@
+"""Sharding policy — the single place mesh-axis decisions live.
+
+Two mechanisms, both *divisibility-safe* via :func:`resolve_spec` (a mesh
+axis is silently dropped — replicated — when it does not divide the array
+dimension, so every config compiles on every mesh factorization):
+
+* **Entry shardings** (``param_sharding`` / ``batch_sharding`` /
+  ``cache_sharding``) — NamedShardings attached at the jit boundary by the
+  step builders in ``launch/steps.py``.
+* **In-body hints** (``shard_hint`` / ``shard_spec``) — with-sharding
+  constraints inside the traced function.  They are no-ops until a step
+  builder calls :func:`enable_sharding_hints` with the active mesh, so the
+  model code stays runnable un-sharded (unit tests, CPU smoke runs).
+
+Layout policy:
+
+* train:  FSDP (params shard the penultimate dim over ``data``) + TP
+  (last dim over ``model``); optimizer moments inherit (steps.py).
+* serve:  TP only — the last dim shards over ``model``, everything else is
+  replicated so decode never all-gathers weights across ``data``.
+* serve_ws (weight-stationary decode): weights keep the *train* layout and
+  the decode batch shards over the ``model`` axis instead — steps.py flips
+  the batch axes through ``enable_sharding_hints(mesh, batch_axes=...)``.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# v5e per-chip HBM; used by the serve_auto heuristic (_fits_tp_only)
+HBM_BYTES_PER_CHIP = 16e9
+_HBM_HEADROOM = 0.6       # leave room for activations / cache / workspace
+
+# Active-mesh context for in-body hints.  A plain module dict (not a
+# threading.local): the step builders set it synchronously before tracing,
+# and trace-time reads happen on the same thread.
+_HINT_CTX: dict = {"mesh": None, "batch_axes": None}
+
+_DEFAULT_BATCH_AXES = ("pod", "data")
+
+
+def enable_sharding_hints(mesh, batch_axes=None) -> None:
+    """Arm ``shard_hint``/``shard_spec`` with ``mesh``.
+
+    ``batch_axes`` overrides which mesh axes the batch dimension shards
+    over (the weight-stationary decode layout passes ``("model",)``);
+    ``None`` restores the default data-parallel axes.
+    """
+    _HINT_CTX["mesh"] = mesh
+    _HINT_CTX["batch_axes"] = tuple(batch_axes) if batch_axes else None
+
+
+def _batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch shards over, in mesh order."""
+    if _HINT_CTX["batch_axes"] is not None:
+        return tuple(a for a in _HINT_CTX["batch_axes"] if a in mesh.axis_names)
+    return tuple(a for a in mesh.axis_names if a in _DEFAULT_BATCH_AXES)
+
+
+def model_axis_size() -> int:
+    mesh = _HINT_CTX["mesh"]
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return int(mesh.shape["model"])
+
+
+# ---------------------------------------------------------------------------
+# divisibility-safe spec resolution
+# ---------------------------------------------------------------------------
+
+def _axes_size(mesh, entry) -> int | None:
+    """Product of the named mesh axes; None when any axis is absent from
+    the mesh (the spec entry must then be dropped, not crash)."""
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for a in axes:
+        if a not in mesh.axis_names:
+            return None
+        size *= int(mesh.shape[a])
+    return size
+
+
+def resolve_spec(mesh, shape, spec: P) -> P:
+    """Align ``spec`` to the trailing dims of ``shape`` and drop (replicate)
+    every entry whose mesh axes are absent or whose product does not divide
+    the dimension.
+
+    Leading stack dims (e.g. the layer axis of a stacked cache) get ``None``
+    padding, so one spec written for a single layer's array also applies to
+    the [L, ...] stacked version.
+    """
+    entries = list(spec)
+    if len(entries) > len(shape):
+        # spec written for a higher-rank array: keep the trailing entries
+        entries = entries[len(entries) - len(shape):]
+    offset = len(shape) - len(entries)
+    out = [None] * offset
+    for dim, entry in zip(shape[offset:], entries):
+        size = None if entry is None else _axes_size(mesh, entry)
+        if size is not None and int(dim) % size == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _constraint(x, spec: P):
+    mesh = _HINT_CTX["mesh"]
+    if mesh is None:
+        return x
+    resolved = resolve_spec(mesh, x.shape, spec)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, resolved))
+
+
+# ---------------------------------------------------------------------------
+# in-body hints
+# ---------------------------------------------------------------------------
+
+def shard_hint(x, kind: str):
+    """Annotate an activation inside a traced function.
+
+    kinds: ``'act'`` — [B, T, d] residual-stream activations, batch over the
+    data axes, feature dim replicated (TP keeps weights sharded instead);
+    ``'logits'`` — [B, T, V], vocab shards over ``model`` (the head matmul's
+    natural output layout, avoids an all-gather before the softmax).
+    """
+    mesh = _HINT_CTX["mesh"]
+    if mesh is None:
+        return x
+    b = _batch_axes(mesh)
+    batch = b if len(b) != 1 else b[0]
+    if kind == "act":
+        spec = P(*([batch] + [None] * (x.ndim - 1)))
+    elif kind == "logits":
+        spec = P(*([batch] + [None] * (x.ndim - 2) + ["model"]))
+    else:
+        raise ValueError(f"unknown hint kind {kind!r}")
+    return _constraint(x, spec)
+
+
+def shard_spec(x, *axes):
+    """Explicit per-dim constraint; ``'dp'`` expands to the batch axes."""
+    mesh = _HINT_CTX["mesh"]
+    if mesh is None:
+        return x
+    entries = []
+    for a in axes:
+        if a == "dp":
+            b = _batch_axes(mesh)
+            entries.append(b if len(b) != 1 else (b[0] if b else None))
+        else:
+            entries.append(a)
+    return _constraint(x, P(*entries))
+
+
+# ---------------------------------------------------------------------------
+# entry shardings (jit boundary)
+# ---------------------------------------------------------------------------
+
+def _leaf_bytes(leaf) -> int:
+    return int(np.prod(leaf.shape)) * jax.dtypes.canonicalize_dtype(leaf.dtype).itemsize
+
+
+def _fits_tp_only(mesh, params_spec) -> bool:
+    """True when TP-only replication of the weights fits per-chip HBM —
+    the serve_auto resolver uses this to pick the decode weight layout."""
+    total = sum(_leaf_bytes(l) for l in jax.tree_util.tree_leaves(params_spec))
+    mdl = int(mesh.shape.get("model", 1)) if hasattr(mesh.shape, "get") else 1
+    return total / max(mdl, 1) <= _HBM_HEADROOM * HBM_BYTES_PER_CHIP
+
+
+def param_sharding(mesh, params_spec, mode: str = "train"):
+    """NamedSharding tree for a parameter pytree.
+
+    ``'train'``: FSDP+TP — penultimate dim over ``data``, last over
+    ``model``.  ``'serve'``/``'serve_tp'``: TP only (last dim over
+    ``model``), replicated over ``data``.  Vectors and scalars replicate.
+    """
+    data_axes = tuple(a for a in mesh.axis_names if a in _DEFAULT_BATCH_AXES)
+    data = data_axes if len(data_axes) != 1 else data_axes[0]
+
+    def one(leaf):
+        if leaf.ndim < 2:
+            spec = P()
+        elif mode == "train":
+            spec = P(*([None] * (leaf.ndim - 2) + [data, "model"]))
+        else:
+            spec = P(*([None] * (leaf.ndim - 1) + ["model"]))
+        return NamedSharding(mesh, resolve_spec(mesh, leaf.shape, spec))
+
+    return jax.tree_util.tree_map(one, params_spec)
+
+
+def batch_sharding(mesh, batch_spec):
+    """Shard the leading (batch) dim of every input leaf over the batch axes."""
+    b = _batch_axes(mesh)
+    batch = b if len(b) != 1 else b[0]
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            spec = P()
+        else:
+            spec = P(*([batch] + [None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, resolve_spec(mesh, leaf.shape, spec))
+
+    return jax.tree_util.tree_map(one, batch_spec)
+
+
+def cache_sharding(mesh, cache_spec):
+    """Decode-cache shardings.  Cache leaves are layer-stacked
+    ([L, B, ...]) so the batch dim is axis 1; scalars (``pos``) replicate."""
+    b = _batch_axes(mesh)
+    batch = b if len(b) != 1 else b[0]
+
+    def one(leaf):
+        if leaf.ndim <= 1:
+            spec = P()
+        else:
+            spec = P(*([None, batch] + [None] * (leaf.ndim - 2)))
+        return NamedSharding(mesh, resolve_spec(mesh, leaf.shape, spec))
+
+    return jax.tree_util.tree_map(one, cache_spec)

@@ -1,0 +1,9 @@
+"""jax version compat for Pallas TPU kernels.
+
+jax < 0.5 names the Mosaic compiler-params struct ``TPUCompilerParams``;
+newer releases renamed it ``CompilerParams``.  Single alias here so every
+kernel stays importable on both.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

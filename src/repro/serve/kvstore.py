@@ -1,45 +1,195 @@
 """Key-value embedding store — the paper's "distributed key-value store"
-(production would be Couchbase/Redis; here an in-memory dict with an
+(production would be Couchbase/Redis; here an in-memory store with an
 npz-backed persistence path and the same access pattern: batched point
 lookups by entity key).
 
 Keys are (entity_id, snapshot) pairs packed into int64; values are stage-1
 entity embeddings.  ``lookup_batch`` returns a dense [B, K, H] tensor plus
 mask — exactly the speed-layer input.
+
+Serving-engine upgrades on top of the plain dict store:
+
+* **shard-by-key** — entries hash over ``num_shards`` independent shards
+  (the access pattern a real distributed KV imposes; eviction is per shard);
+* **versioned puts** — every entry carries the batch-layer refresh version
+  that wrote it, so the speed layer can report embedding staleness;
+* **TTL / LRU eviction** — bounded memory under unbounded streams: a
+  ``capacity`` cap evicts least-recently-used entries per shard, an optional
+  ``ttl_seconds`` expires entries lazily on read;
+* **snapshot fallback** — ``lookup_batch_versioned`` serves the freshest
+  available snapshot ≤ the requested one when the exact key is missing
+  (the batch layer hasn't caught up yet), reporting per-slot staleness in
+  snapshots — the Lambda trade-off made measurable.
 """
 from __future__ import annotations
 
-import os
+import threading
 import time
+from bisect import bisect_right
+from collections import OrderedDict
 
 import numpy as np
 
+SNAPSHOT_BITS = 20
+MAX_SNAPSHOT = (1 << SNAPSHOT_BITS) - 1
+MAX_ENTITY = (1 << (63 - SNAPSHOT_BITS)) - 1
+
 
 def pack_key(entity: int, snapshot: int) -> int:
-    return (int(entity) << 20) | (int(snapshot) & 0xFFFFF)
+    """Pack (entity, snapshot) into one int64: entity << 20 | snapshot.
+
+    Guards the packing domain — out-of-range inputs used to alias other
+    entities' keys silently (e.g. snapshot 2^20 bled into entity bits).
+    """
+    e, t = int(entity), int(snapshot)
+    if not 0 <= t <= MAX_SNAPSHOT:
+        raise ValueError(f"snapshot {t} outside [0, {MAX_SNAPSHOT}] — would collide")
+    if not 0 <= e <= MAX_ENTITY:
+        raise ValueError(f"entity {e} outside [0, {MAX_ENTITY}] — would collide")
+    return (e << SNAPSHOT_BITS) | t
+
+
+def unpack_key(key: int) -> tuple[int, int]:
+    return int(key) >> SNAPSHOT_BITS, int(key) & MAX_SNAPSHOT
+
+
+class _Entry:
+    __slots__ = ("value", "version", "stamp")
+
+    def __init__(self, value, version, stamp):
+        self.value = value
+        self.version = version
+        self.stamp = stamp
 
 
 class KVStore:
-    def __init__(self, dim: int):
+    """In-memory sharded KV store for stage-1 entity embeddings.
+
+    ``capacity``: max total entries (None = unbounded); enforced per shard
+    with LRU order (gets refresh recency).  ``ttl_seconds``: entries older
+    than this expire lazily on access.  ``clock``: injectable time source
+    for deterministic TTL tests.
+    """
+
+    def __init__(
+        self,
+        dim: int,
+        capacity: int | None = None,
+        ttl_seconds: float | None = None,
+        num_shards: int = 1,
+        clock=time.time,
+    ):
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
         self.dim = dim
-        self._data: dict[int, np.ndarray] = {}
-        self.stats = {"puts": 0, "gets": 0, "misses": 0}
+        self.capacity = capacity
+        self.ttl_seconds = ttl_seconds
+        self.num_shards = num_shards
+        self._clock = clock
+        self._shards: list[OrderedDict[int, _Entry]] = [
+            OrderedDict() for _ in range(num_shards)
+        ]
+        # per-entity sorted snapshot index, for the fallback lookup
+        self._snaps: dict[int, list[int]] = {}
+        # one coarse lock: the async refresh driver writes from a worker
+        # thread while the speed layer reads (reads also mutate — LRU
+        # touch, lazy TTL expiry), and the snapshot index must stay
+        # consistent with the shards.  RLock: batched reads call get().
+        self._lock = threading.RLock()
+        self.stats = {"puts": 0, "gets": 0, "misses": 0,
+                      "evictions": 0, "expired": 0, "stale_hits": 0}
 
-    def put(self, key: int, value: np.ndarray):
-        self._data[key] = np.asarray(value, np.float32)
-        self.stats["puts"] += 1
+    # ---------------------------------------------------------------- shards
+    def shard_of(self, key: int) -> int:
+        # splitmix-style avalanche so consecutive snapshots spread shards
+        h = (int(key) * 0x9E3779B97F4A7C15) & (1 << 64) - 1
+        return (h >> 32) % self.num_shards
 
-    def put_batch(self, keys, values):
+    def _index_add(self, key: int):
+        ent, t = unpack_key(key)
+        snaps = self._snaps.setdefault(ent, [])
+        i = bisect_right(snaps, t)
+        if not (i > 0 and snaps[i - 1] == t):
+            snaps.insert(i, t)
+
+    def _index_drop(self, key: int):
+        ent, t = unpack_key(key)
+        snaps = self._snaps.get(ent)
+        if snaps is None:
+            return
+        i = bisect_right(snaps, t) - 1
+        if i >= 0 and snaps[i] == t:
+            snaps.pop(i)
+            if not snaps:
+                del self._snaps[ent]
+
+    # ----------------------------------------------------------------- write
+    def put(self, key: int, value: np.ndarray, version: int = 0):
+        key = int(key)
+        with self._lock:
+            shard = self._shards[self.shard_of(key)]
+            shard[key] = _Entry(np.asarray(value, np.float32), int(version),
+                                self._clock())
+            shard.move_to_end(key)
+            self._index_add(key)
+            self.stats["puts"] += 1
+            if self.capacity is not None:
+                # per-shard LRU cap (a distributed store can only evict locally)
+                cap = max(1, self.capacity // self.num_shards)
+                while len(shard) > cap:
+                    old_key, _ = shard.popitem(last=False)
+                    self._index_drop(old_key)
+                    self.stats["evictions"] += 1
+
+    def put_batch(self, keys, values, version: int = 0):
         for k, v in zip(keys, values):
-            self.put(int(k), v)
+            self.put(int(k), v, version)
+
+    # ------------------------------------------------------------------ read
+    def _entry(self, key: int, touch: bool = True) -> _Entry | None:
+        key = int(key)
+        with self._lock:
+            shard = self._shards[self.shard_of(key)]
+            e = shard.get(key)
+            if e is None:
+                return None
+            if (self.ttl_seconds is not None
+                    and self._clock() - e.stamp > self.ttl_seconds):
+                del shard[key]
+                self._index_drop(key)
+                self.stats["expired"] += 1
+                return None
+            if touch:
+                shard.move_to_end(key)
+            return e
 
     def get(self, key: int):
         self.stats["gets"] += 1
-        v = self._data.get(int(key))
-        if v is None:
+        e = self._entry(key)
+        if e is None:
             self.stats["misses"] += 1
-        return v
+            return None
+        return e.value
 
+    def get_entry(self, key: int) -> tuple[np.ndarray, int, float] | None:
+        """(value, version, stamp) or None."""
+        e = self._entry(key)
+        return None if e is None else (e.value, e.version, e.stamp)
+
+    def version_of(self, key: int) -> int | None:
+        e = self._entry(key, touch=False)
+        return None if e is None else e.version
+
+    def latest_snapshot(self, entity: int, t_max: int) -> int | None:
+        """Freshest stored snapshot of ``entity`` that is <= ``t_max``."""
+        with self._lock:
+            snaps = self._snaps.get(int(entity))
+            if not snaps:
+                return None
+            i = bisect_right(snaps, int(t_max)) - 1
+            return snaps[i] if i >= 0 else None
+
+    # --------------------------------------------------------------- batched
     def lookup_batch(self, key_lists: list, k_max: int):
         """key_lists: per request, a list of entity keys (<= k_max used).
 
@@ -57,19 +207,82 @@ class KVStore:
                     mask[i, j] = 1.0
         return emb, mask
 
+    def lookup_batch_versioned(self, entity_t_lists: list, k_max: int):
+        """Speed-layer lookup with snapshot fallback.
+
+        ``entity_t_lists``: per request, a list of ``(entity, t_e)`` pairs.
+        When the exact ``(entity, t_e)`` key is absent (batch layer behind),
+        the freshest stored snapshot <= t_e is served instead and the slot's
+        staleness is ``t_e - t_found`` snapshots; truly cold entities stay
+        masked with staleness -1.
+
+        Returns (emb [B, K, H], mask [B, K], staleness [B, K] int32).
+        """
+        b = len(entity_t_lists)
+        emb = np.zeros((b, k_max, self.dim), np.float32)
+        mask = np.zeros((b, k_max), np.float32)
+        stale = np.full((b, k_max), -1, np.int32)
+        with self._lock:
+            self._lookup_versioned_into(entity_t_lists, k_max, emb, mask, stale)
+        return emb, mask, stale
+
+    def _lookup_versioned_into(self, entity_t_lists, k_max, emb, mask, stale):
+        for i, pairs in enumerate(entity_t_lists):
+            for j, (ent, t_e) in enumerate(pairs[:k_max]):
+                self.stats["gets"] += 1
+                t_found = self.latest_snapshot(ent, t_e)
+                if t_found is None:
+                    self.stats["misses"] += 1
+                    continue
+                e = self._entry(pack_key(ent, t_found))
+                if e is None:  # expired between index and read
+                    self.stats["misses"] += 1
+                    continue
+                emb[i, j] = e.value
+                mask[i, j] = 1.0
+                stale[i, j] = int(t_e) - int(t_found)
+                if t_found != t_e:
+                    self.stats["stale_hits"] += 1
+
     def __len__(self):
-        return len(self._data)
+        with self._lock:
+            return sum(len(s) for s in self._shards)
+
+    def keys(self):
+        with self._lock:
+            return [k for shard in self._shards for k in shard.keys()]
 
     # ------------------------------------------------------------- persistence
     def save(self, path: str):
-        keys = np.asarray(list(self._data.keys()), np.int64)
-        vals = np.stack(list(self._data.values())) if self._data else np.zeros((0, self.dim))
-        np.savez(path, keys=keys, values=vals, dim=self.dim)
+        with self._lock:
+            items = [(k, e) for shard in self._shards for k, e in shard.items()]
+        keys = np.asarray([k for k, _ in items], np.int64)
+        vals = (
+            np.stack([e.value for _, e in items])
+            if items
+            else np.zeros((0, self.dim), np.float32)
+        )
+        versions = np.asarray([e.version for _, e in items], np.int64)
+        stamps = np.asarray([e.stamp for _, e in items], np.float64)
+        np.savez(path, keys=keys, values=vals.astype(np.float32),
+                 versions=versions, stamps=stamps, dim=self.dim)
 
     @classmethod
-    def load(cls, path: str) -> "KVStore":
+    def load(cls, path: str, **kwargs) -> "KVStore":
         with np.load(path) as data:
-            store = cls(int(data["dim"]))
-            for k, v in zip(data["keys"], data["values"]):
-                store._data[int(k)] = v
+            store = cls(int(data["dim"]), **kwargs)
+            n = len(data["keys"])
+            versions = data["versions"] if "versions" in data else np.zeros(n, np.int64)
+            stamps = data["stamps"] if "stamps" in data else None
+            values = data["values"].astype(np.float32)
+            for i, (k, v, ver) in enumerate(zip(data["keys"], values, versions)):
+                k = int(k)
+                store.put(k, v, int(ver))
+                if stamps is not None:
+                    # restore the original write time: TTL must keep counting
+                    # from the real put, not restart at load
+                    e = store._shards[store.shard_of(k)].get(k)
+                    if e is not None:
+                        e.stamp = float(stamps[i])
+            store.stats["puts"] = 0
         return store

@@ -1,0 +1,22 @@
+"""repro.stream — real-time streaming ingestion + micro-batched speed-layer
+serving engine (the closed Lambda loop).  See docs/streaming.md."""
+from repro.stream.engine import EngineConfig, ReplayReport, StreamingEngine
+from repro.stream.events import CheckoutEvent, events_from_static, order_event_tuples
+from repro.stream.ingest import IngestResult, StreamIngester
+from repro.stream.microbatch import MicroBatcher, ScoredResult, ScoreRequest
+from repro.stream.refresh import RefreshDriver
+
+__all__ = [
+    "CheckoutEvent",
+    "EngineConfig",
+    "IngestResult",
+    "MicroBatcher",
+    "RefreshDriver",
+    "ReplayReport",
+    "ScoreRequest",
+    "ScoredResult",
+    "StreamIngester",
+    "StreamingEngine",
+    "events_from_static",
+    "order_event_tuples",
+]

@@ -1,0 +1,94 @@
+"""Event-time streaming ingester — extends the DDS graph as checkouts arrive.
+
+Wraps :class:`repro.core.dds.IncrementalDDSBuilder` with the window
+bookkeeping the Lambda loop needs:
+
+* tracks the **open snapshot** (events still arriving) vs **closed
+  snapshots** (event time moved past them — their DDS in-neighborhoods are
+  final, per the no-future-leak invariant, so the batch layer may refresh
+  their embeddings exactly once);
+* answers the speed-layer question per event: the exact ``(entity, t_e)``
+  KV keys that feed this checkout's final-hop edges;
+* marks touched entities **dirty** so the refresh driver knows which
+  embeddings the next batch run must (re)write.
+
+The ingester never runs the model — it is pure host-side graph state, cheap
+enough to sit on the hot path (O(K·history) per event).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.dds import DDSGraph, IncrementalDDSBuilder
+from repro.stream.events import CheckoutEvent
+
+
+@dataclass
+class IngestResult:
+    """Per-event ingest outcome handed to the engine."""
+
+    order_id: int                   # builder-local order id (arrival order)
+    entity_keys: list               # [(entity, t_e)] exact speed-layer keys
+    # (first, last) snapshot range this event's arrival closed, or None.
+    # Kept as bounds, never materialized: sparse snapshot indices (e.g.
+    # epoch hours) would make an explicit range huge
+    closed_window: tuple | None = None
+
+
+class StreamIngester:
+    def __init__(
+        self,
+        feat_dim: int,
+        entity_history: str = "all",
+        max_history: int | None = 8,
+    ):
+        self.builder = IncrementalDDSBuilder(
+            feat_dim, entity_history=entity_history, max_history=max_history
+        )
+        self._open_snapshot = -1
+        self._dirty: set = set()          # (entity, t) pairs awaiting refresh
+        self.stats = {"events": 0, "windows_closed": 0}
+
+    @property
+    def open_snapshot(self) -> int:
+        return self._open_snapshot
+
+    @property
+    def num_events(self) -> int:
+        return self.stats["events"]
+
+    def ingest(self, event: CheckoutEvent) -> IngestResult:
+        """Consume one checkout: compute its speed-layer keys, extend the
+        DDS graph, and report any snapshot windows the arrival closed."""
+        t = int(event.snapshot)
+        closed = None
+        if t > self._open_snapshot:
+            if self._open_snapshot >= 0:
+                closed = (self._open_snapshot, t - 1)
+                self.stats["windows_closed"] += t - self._open_snapshot
+            self._open_snapshot = t
+        # keys BEFORE this event activates (entity, t): strictly-past only
+        keys = self.builder.entity_keys(event.entities, t)
+        o = self.builder.add_order(event.entities, t, event.features, event.label)
+        for ent in event.entities:
+            self._dirty.add((int(ent), t))
+        self.stats["events"] += 1
+        return IngestResult(order_id=o, entity_keys=keys, closed_window=closed)
+
+    # ---------------------------------------------------------------- refresh
+    def take_refreshable(self, up_to_snapshot: int) -> list:
+        """Drain dirty (entity, t) pairs with ``t <= up_to_snapshot`` — the
+        embeddings whose in-neighborhoods are final and must be (re)written
+        by the next batch-layer run.  Pairs in still-open snapshots stay
+        pending."""
+        ready = [p for p in self._dirty if p[1] <= up_to_snapshot]
+        self._dirty.difference_update(ready)
+        return sorted(ready)
+
+    @property
+    def dirty_count(self) -> int:
+        return len(self._dirty)
+
+    def materialize(self) -> DDSGraph:
+        """The accumulated DDS graph (batch-layer input)."""
+        return self.builder.build()

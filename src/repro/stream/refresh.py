@@ -1,0 +1,134 @@
+"""Async batch-layer refresh driver — the periodic half of the Lambda loop.
+
+Re-runs LNN stage 1 over the accumulated DDS graph and pushes **only the
+dirty** entity-snapshot embeddings (those whose windows closed since the
+last run) into the KV store with a monotonically increasing refresh
+version.  Correctness hinges on the DDS invariant: an ``entity_t`` vertex's
+in-neighborhood is final once snapshot ``t`` closes, so its stage-1
+embedding computed from the *partial* stream equals the one the full batch
+graph would produce — refreshing incrementally loses nothing.
+
+Staleness model: an entity key requested as ``(e, t_e)`` but served from an
+older stored snapshot ``t' < t_e`` is ``t_e - t'`` snapshots stale (the KV
+store tracks this, see ``lookup_batch_versioned``).  Refreshing every
+closed window keeps staleness at zero; refreshing every N windows trades
+freshness for batch-layer cost — ``benchmarks/streaming_bench.py`` plots
+that curve.
+
+``async_mode=True`` runs stage 1 on a single background worker thread (the
+batch layer is off the scoring hot path in production); ``drain()`` joins
+outstanding work.  Tests use the default synchronous mode.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import numpy as np
+
+from repro.core.graph import pad_graph
+from repro.core.lnn import LNNConfig, lnn_stage1
+from repro.serve.kvstore import KVStore, pack_key
+from repro.stream.ingest import StreamIngester
+
+
+def _pow2_at_least(n: int, floor: int = 64) -> int:
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+class RefreshDriver:
+    def __init__(
+        self,
+        params,
+        cfg: LNNConfig,
+        store: KVStore,
+        ingester: StreamIngester,
+        max_deg: int = 32,
+        refresh_every: int = 1,
+        async_mode: bool = False,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.store = store
+        self.ingester = ingester
+        self.max_deg = max_deg
+        self.refresh_every = max(1, int(refresh_every))
+        self.version = 0
+        self._stage1 = jax.jit(lambda p, g: lnn_stage1(p, self.cfg, g))
+        self._windows_since_refresh = 0
+        self._lock = threading.Lock()
+        self._pool = ThreadPoolExecutor(max_workers=1) if async_mode else None
+        self._inflight = []
+        self.stats = {"refreshes": 0, "entities_written": 0, "seconds": 0.0,
+                      "last_budget": 0}
+
+    # ----------------------------------------------------------------- policy
+    def on_windows_closed(self, closed_window) -> bool:
+        """Called by the engine when event time advances past one or more
+        snapshots; ``closed_window`` is the (first, last) closed range.
+        Triggers a refresh once ``refresh_every`` windows have closed.
+        Returns True if a refresh was started (sync: already finished)."""
+        if closed_window is None:
+            return False
+        first, last = closed_window
+        self._windows_since_refresh += last - first + 1
+        if self._windows_since_refresh < self.refresh_every:
+            return False
+        self._windows_since_refresh = 0
+        up_to = last
+        if self._pool is None:
+            self.refresh(up_to)
+        else:
+            # snapshot the ingester state on the calling thread (it keeps
+            # mutating under new events); only stage 1 + puts go async
+            pending, dds = self._snapshot_graph(up_to)
+            if pending:
+                self._inflight.append(self._pool.submit(self._run, pending, dds))
+        return True
+
+    def drain(self):
+        """Join outstanding async refreshes (replay-end barrier)."""
+        for f in self._inflight:
+            f.result()
+        self._inflight.clear()
+
+    # ------------------------------------------------------------------- work
+    def _snapshot_graph(self, up_to_snapshot: int):
+        pending = self.ingester.take_refreshable(up_to_snapshot)
+        return (pending, self.ingester.materialize() if pending else None)
+
+    def refresh(self, up_to_snapshot: int) -> dict:
+        """Run stage 1 over the accumulated graph; write embeddings for the
+        dirty (entity, t) pairs with t <= up_to_snapshot, versioned."""
+        pending, dds = self._snapshot_graph(up_to_snapshot)
+        if not pending:
+            return {"entities_written": 0, "seconds": 0.0}
+        return self._run(pending, dds)
+
+    def _run(self, pending, dds) -> dict:
+        t0 = time.time()
+        # pad to a power-of-two node budget so jit recompiles O(log N) times
+        # over an unbounded stream, not once per event window
+        budget = _pow2_at_least(dds.coo.num_nodes)
+        pg = pad_graph(dds.coo, num_nodes=budget, max_deg=self.max_deg)
+        h = np.asarray(self._stage1(self.params, pg))
+        with self._lock:
+            self.version += 1
+            written = 0
+            for ent, t in pending:
+                nid = dds.entity_snap_ids.get((ent, t))
+                if nid is None:
+                    continue
+                self.store.put(pack_key(ent, t), h[nid], version=self.version)
+                written += 1
+        dt = time.time() - t0
+        self.stats["refreshes"] += 1
+        self.stats["entities_written"] += written
+        self.stats["seconds"] += dt
+        self.stats["last_budget"] = budget
+        return {"entities_written": written, "seconds": dt, "version": self.version}

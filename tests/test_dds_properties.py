@@ -3,6 +3,8 @@ correctness claim: no information from the future of a checkout can reach it.
 """
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dds import StaticGraph, build_dds, check_no_future_leak

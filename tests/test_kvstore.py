@@ -1,0 +1,162 @@
+"""KV store semantics: key packing guards, persistence, mask semantics,
+versioning, TTL/LRU eviction, sharding, and the snapshot-fallback lookup."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.serve.kvstore import (
+    MAX_ENTITY,
+    MAX_SNAPSHOT,
+    KVStore,
+    pack_key,
+    unpack_key,
+)
+
+
+# ---------------------------------------------------------------- pack_key
+def test_pack_key_roundtrip_and_uniqueness():
+    seen = set()
+    for e in (0, 1, 17, 12345, MAX_ENTITY):
+        for t in (0, 1, 29, MAX_SNAPSHOT):
+            k = pack_key(e, t)
+            assert unpack_key(k) == (e, t)
+            assert k not in seen
+            seen.add(k)
+
+
+def test_pack_key_guards_collision_domain():
+    # snapshot 2^20 used to silently bleed into the entity bits:
+    # pack_key(0, 2^20) == pack_key(1, 0) before the guard
+    with pytest.raises(ValueError):
+        pack_key(0, MAX_SNAPSHOT + 1)
+    with pytest.raises(ValueError):
+        pack_key(-1, 0)
+    with pytest.raises(ValueError):
+        pack_key(0, -1)
+    with pytest.raises(ValueError):
+        pack_key(MAX_ENTITY + 1, 0)
+
+
+# ------------------------------------------------------------- persistence
+def test_save_load_roundtrip_with_versions(tmp_path):
+    s = KVStore(dim=4)
+    s.put(pack_key(5, 3), np.arange(4.0), version=7)
+    s.put(pack_key(9, 1), np.ones(4), version=8)
+    path = os.path.join(tmp_path, "store.npz")
+    s.save(path)
+    s2 = KVStore.load(path)
+    assert len(s2) == 2
+    np.testing.assert_array_equal(s2.get(pack_key(5, 3)), np.arange(4.0))
+    assert s2.get(pack_key(5, 3)).dtype == np.float32
+    assert s2.version_of(pack_key(5, 3)) == 7
+    assert s2.version_of(pack_key(9, 1)) == 8
+
+
+def test_save_load_empty_store_preserves_float32(tmp_path):
+    s = KVStore(dim=6)
+    path = os.path.join(tmp_path, "empty.npz")
+    s.save(path)
+    with np.load(path) as data:
+        assert data["values"].dtype == np.float32   # was float64 pre-fix
+        assert data["values"].shape == (0, 6)
+    s2 = KVStore.load(path)
+    assert len(s2) == 0
+    emb, mask = s2.lookup_batch([[pack_key(1, 1)]], k_max=2)
+    assert emb.dtype == np.float32 and mask.sum() == 0
+
+
+# ------------------------------------------------------------ mask semantics
+def test_lookup_batch_cold_entity_mask_semantics():
+    s = KVStore(dim=3)
+    s.put(pack_key(1, 2), np.full(3, 2.0))
+    emb, mask = s.lookup_batch(
+        [[pack_key(1, 2), pack_key(42, 0)], [], [pack_key(7, 7)]], k_max=2
+    )
+    assert emb.shape == (3, 2, 3) and mask.shape == (3, 2)
+    np.testing.assert_array_equal(mask, [[1, 0], [0, 0], [0, 0]])
+    np.testing.assert_array_equal(emb[0, 0], np.full(3, 2.0))
+    assert emb[0, 1].sum() == 0 and emb[2].sum() == 0   # cold rows stay zero
+    assert s.stats["misses"] == 2
+
+
+def test_lookup_batch_truncates_to_k_max():
+    s = KVStore(dim=2)
+    for t in range(5):
+        s.put(pack_key(1, t), np.full(2, float(t)))
+    emb, mask = s.lookup_batch([[pack_key(1, t) for t in range(5)]], k_max=3)
+    assert mask.sum() == 3
+    np.testing.assert_array_equal(emb[0, :, 0], [0, 1, 2])
+
+
+# --------------------------------------------------------------- versioning
+def test_versioned_put_overwrites_and_tracks():
+    s = KVStore(dim=2)
+    k = pack_key(3, 1)
+    s.put(k, np.zeros(2), version=1)
+    s.put(k, np.ones(2), version=2)
+    assert len(s) == 1
+    val, ver, stamp = s.get_entry(k)
+    np.testing.assert_array_equal(val, np.ones(2))
+    assert ver == 2 and stamp > 0
+
+
+def test_lookup_versioned_snapshot_fallback_reports_staleness():
+    s = KVStore(dim=2)
+    s.put(pack_key(1, 3), np.full(2, 3.0), version=1)
+    s.put(pack_key(1, 5), np.full(2, 5.0), version=2)
+    emb, mask, stale = s.lookup_batch_versioned(
+        [[(1, 5), (1, 4), (2, 9)]], k_max=3
+    )
+    # exact hit
+    assert mask[0, 0] == 1 and stale[0, 0] == 0 and emb[0, 0, 0] == 5.0
+    # (1, 4) missing -> falls back to snapshot 3, one snapshot stale
+    assert mask[0, 1] == 1 and stale[0, 1] == 1 and emb[0, 1, 0] == 3.0
+    # cold entity stays masked with sentinel staleness
+    assert mask[0, 2] == 0 and stale[0, 2] == -1
+    assert s.stats["stale_hits"] == 1
+
+
+# ----------------------------------------------------------------- eviction
+def test_lru_eviction_respects_capacity_and_recency():
+    s = KVStore(dim=1, capacity=2)
+    s.put(pack_key(1, 0), [1.0])
+    s.put(pack_key(2, 0), [2.0])
+    s.get(pack_key(1, 0))            # touch 1 -> 2 becomes LRU
+    s.put(pack_key(3, 0), [3.0])     # evicts 2
+    assert len(s) == 2
+    assert s.get(pack_key(2, 0)) is None
+    assert s.get(pack_key(1, 0)) is not None
+    assert s.stats["evictions"] == 1
+    # eviction also drops the snapshot-fallback index
+    assert s.latest_snapshot(2, 10) is None
+
+
+def test_ttl_expiry_with_injected_clock():
+    now = [100.0]
+    s = KVStore(dim=1, ttl_seconds=10.0, clock=lambda: now[0])
+    s.put(pack_key(1, 0), [1.0])
+    now[0] = 105.0
+    assert s.get(pack_key(1, 0)) is not None
+    now[0] = 111.0
+    assert s.get(pack_key(1, 0)) is None
+    assert s.stats["expired"] == 1 and len(s) == 0
+
+
+# ------------------------------------------------------------------ sharding
+def test_sharded_store_spreads_and_serves_identically():
+    s1 = KVStore(dim=2, num_shards=1)
+    s8 = KVStore(dim=2, num_shards=8)
+    rng = np.random.default_rng(0)
+    keys = [pack_key(e, t) for e in range(40) for t in range(3)]
+    for k in keys:
+        v = rng.normal(size=2)
+        s1.put(k, v)
+        s8.put(k, v)
+    assert len(s1) == len(s8) == len(keys)
+    occupied = sum(1 for sh in s8._shards if len(sh))
+    assert occupied >= 6          # hash actually spreads keys
+    emb1, m1 = s1.lookup_batch([keys[:5]], k_max=5)
+    emb8, m8 = s8.lookup_batch([keys[:5]], k_max=5)
+    np.testing.assert_array_equal(emb1, emb8)
+    np.testing.assert_array_equal(m1, m8)

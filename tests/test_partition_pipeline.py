@@ -1,6 +1,8 @@
 """Partition + data-pipeline invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partition import (
