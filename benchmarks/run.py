@@ -3,6 +3,7 @@
   table3    paper Table 3 (MLP / LGB / LNN-GAT / LNN-GCN, ROC-AUC + AP)
   latency   paper claim 3 (lambda 1-hop KV inference vs monolithic GNN)
   streaming serving-engine replay (throughput, p50/p95/p99, staleness curve)
+  stage2    fused vs unfused speed-layer scoring per micro-batch bucket
   kernels   Pallas-kernel micro-bench (XLA ref timing + v5e roofline projection)
   roofline  aggregated dry-run roofline table (if dry-run records exist)
 
@@ -50,6 +51,12 @@ def main() -> None:
     for load, l in stream["latency"].items():
         csv_rows.append((f"streaming/{load}/p99", f"{l['p99']*1e3:.0f}",
                          f"p50={l['p50']:.2f}ms,p99={l['p99']:.2f}ms"))
+
+    from benchmarks.stage2_bench import main as stage2_main
+    s2 = stage2_main()   # writes experiments/BENCH_stage2.json
+    for bs, r in s2["per_batch"].items():
+        csv_rows.append((f"stage2/fused_b{bs}", f"{r['fused_us']:.1f}",
+                         f"speedup={r['speedup']:.2f}x"))
 
     from benchmarks.kernels_bench import main as kernels_main
     ker = kernels_main()

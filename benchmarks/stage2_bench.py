@@ -1,0 +1,146 @@
+"""Stage-2 speed-layer scoring: fused vs unfused latency per batch size.
+
+Three variants of the online scoring path, timed per micro-batch bucket:
+
+* ``unfused`` — the pre-fusion serving path: two jitted dispatches per
+  flush (order tower, then aggregation + combine + MLP), as ``SpeedLayer``
+  shipped before the fused kernel landed;
+* ``fused``   — ONE jitted dispatch of the whole online path
+  (``lnn_stage2_online`` with the tower folded in).  On CPU this is the
+  XLA rendering of the fusion and is what the serving engine now runs per
+  flush; on TPU the same call site lowers to the Pallas launch;
+* ``pallas_interpret`` — the fused Pallas kernel executed through the
+  interpreter.  On this CPU container that is a *correctness vehicle, not
+  a perf number* (the interpreter adds orders of magnitude of overhead —
+  see docs/kernels.md); reported so regressions in kernel dispatch
+  structure are visible.
+
+For each batch size we also report the fused launch's arithmetic intensity
+and projected v5e time from the roofline model (``launch/mesh.py``) — the
+number the Pallas kernel is designed to approach on hardware.
+
+Writes ``experiments/BENCH_stage2.json``; wired into ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+BATCH_SIZES = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def _time(fn, *args, iters=50, repeats=5):
+    """Best-of-``repeats`` mean over ``iters`` calls (us) — the min filters
+    out scheduler noise on a shared CPU container."""
+    import jax
+
+    for _ in range(3):                     # compile + cache warm
+        out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+    return best
+
+
+def _roofline(b, k, h, f, mlp_dims):
+    """FLOPs / HBM bytes for one fused stage-2 launch."""
+    dims = (h + f,) + tuple(mlp_dims) + (1,)
+    mlp_flops = 2 * sum(dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+    flops = b * (
+        2 * f * h                 # input projection
+        + 2 * 2 * h * h           # two tower self-transforms (L=3)
+        + 2 * k * h               # masked aggregation
+        + 2 * 2 * h * h           # last-layer combine (self + nbr matmul)
+        + mlp_flops
+    )
+    param_bytes = 4 * (f * h + 2 * h * h + 2 * h * h
+                       + sum(dims[i] * dims[i + 1] for i in range(len(dims) - 1)))
+    io_bytes = 4 * b * (k * h + k + f + 1)
+    return flops, param_bytes + io_bytes
+
+
+def main(batch_sizes=BATCH_SIZES, iters=100):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import LNNConfig, lnn_init, lnn_order_tower, lnn_stage2_online
+    from repro.kernels import ops
+    from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+    cfg = LNNConfig(gnn_type="gcn", num_gnn_layers=3, hidden_dim=64,
+                    mlp_dims=(64, 32), feat_dim=16)
+    params = lnn_init(jax.random.PRNGKey(0), cfg)
+    k = 8
+    rng = np.random.default_rng(0)
+
+    # the pre-fusion serving path: two dispatches per flush
+    tower_jit = jax.jit(lambda p, f: lnn_order_tower(p, cfg, f))
+    stage2_jit = jax.jit(
+        lambda p, e, m, f, t: lnn_stage2_online(p, cfg, e, m, f, t))
+
+    def unfused(p, e, m, f):
+        return stage2_jit(p, e, m, f, tower_jit(p, f))
+
+    fused_jit = jax.jit(lambda p, e, m, f: lnn_stage2_online(p, cfg, e, m, f))
+
+    per_batch = {}
+    for b in batch_sizes:
+        mask = jnp.asarray((rng.uniform(size=(b, k)) < 0.7), jnp.float32)
+        emb = jnp.asarray(rng.normal(size=(b, k, cfg.hidden_dim)),
+                          jnp.float32) * mask[:, :, None]
+        feats = jnp.asarray(rng.normal(size=(b, cfg.feat_dim)), jnp.float32)
+
+        un_us = _time(unfused, params, emb, mask, feats, iters=iters)
+        fu_us = _time(fused_jit, params, emb, mask, feats, iters=iters)
+        pl_us = _time(
+            lambda p, e, m, f: ops.stage2_score(p, cfg.gnn_type, e, m, f),
+            params, emb, mask, feats, iters=max(3, iters // 10))
+
+        flops, bytes_ = _roofline(b, k, cfg.hidden_dim, cfg.feat_dim, cfg.mlp_dims)
+        per_batch[str(b)] = {
+            "unfused_us": un_us,
+            "fused_us": fu_us,
+            "pallas_interpret_us": pl_us,
+            "speedup": un_us / fu_us,
+            "gflops": flops / 1e9,
+            "arith_intensity": flops / max(bytes_, 1),
+            "v5e_roofline_us": max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW) * 1e6,
+        }
+
+    out = {
+        "config": {"gnn_type": cfg.gnn_type, "hidden_dim": cfg.hidden_dim,
+                   "feat_dim": cfg.feat_dim, "mlp_dims": list(cfg.mlp_dims),
+                   "k_max": k, "backend": jax.default_backend()},
+        "per_batch": per_batch,
+        "speedup_at_32": per_batch.get("32", {}).get("speedup"),
+        "note": ("'fused' is the single-dispatch online path (the Pallas "
+                 "launch on TPU, its XLA rendering on CPU); "
+                 "'pallas_interpret_us' is the interpreter-executed kernel — "
+                 "a correctness vehicle, not a perf number (docs/kernels.md)."),
+    }
+    os.makedirs("experiments", exist_ok=True)
+    json.dump(out, open("experiments/BENCH_stage2.json", "w"), indent=1)
+
+    print("\n# Stage-2 scoring: fused (1 dispatch) vs unfused (2 dispatches)")
+    print(f"{'batch':>6} {'unfused_us':>11} {'fused_us':>9} {'speedup':>8} "
+          f"{'interp_us':>10} {'v5e_us':>8}")
+    for b, r in per_batch.items():
+        print(f"{b:>6} {r['unfused_us']:>11.1f} {r['fused_us']:>9.1f} "
+              f"{r['speedup']:>7.2f}x {r['pallas_interpret_us']:>10.0f} "
+              f"{r['v5e_roofline_us']:>8.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

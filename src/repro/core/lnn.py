@@ -174,14 +174,30 @@ def lnn_stage2_batch(params, cfg: LNNConfig, h, graph: PaddedGraph):
     return _mlp(params, x)
 
 
-def lnn_stage2_online(params, cfg: LNNConfig, entity_emb, emb_mask, order_feats, order_h):
+def lnn_stage2_online(params, cfg: LNNConfig, entity_emb, emb_mask, order_feats,
+                      order_h=None):
     """Online scoring path: KV-fetched entity embeddings -> risk logit.
 
     entity_emb: [B, K, H] stage-1 embeddings of the ≤K linked effective
     entities (zero rows where absent); emb_mask: [B, K]; order_feats: [B, F]
     raw checkout features; order_h: [B, H] the order's own stage-1 hidden
-    state (input projection of its features — recomputed online, cheap).
+    state — optional, recomputed from ``order_feats`` when omitted (always
+    valid: stage 1 masks final-hop edges, so an order's stage-1 state is a
+    pure function of its own raw features, see ``lnn_order_tower``).
+
+    With ``cfg.use_pallas`` the whole path — tower, masked aggregation,
+    last-layer combine, MLP logit — runs as ONE fused Pallas launch
+    (``kernels.stage2_score``; interpret mode on CPU).  The tower is then
+    always recomputed inside the kernel, so a supplied ``order_h`` is
+    ignored on that path.
     """
+    if cfg.use_pallas:
+        from repro.kernels.ops import stage2_score
+
+        return stage2_score(params, cfg.gnn_type, entity_emb, emb_mask,
+                            order_feats)
+    if order_h is None:
+        order_h = lnn_order_tower(params, cfg, order_feats)
     if cfg.gnn_type in ("gcn", "sage"):
         cnt = jnp.maximum(emb_mask.sum(-1, keepdims=True), 1.0)
         agg = jnp.einsum("bkh,bk->bh", entity_emb, emb_mask / cnt)

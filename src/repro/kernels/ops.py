@@ -15,6 +15,7 @@ from repro.kernels.edge_softmax import edge_softmax_agg_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.gqa_decode import gqa_decode_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.stage2_score import flatten_stage2_params, stage2_score_pallas
 
 
 def _interpret() -> bool:
@@ -47,6 +48,20 @@ def gqa_decode(q, k, v, kv_len=None, window: int | None = None, block_k: int = 5
 def ssd_scan(x, dt, a, b, c, d_skip=None, chunk: int = 128):
     return ssd_scan_pallas(x, dt, a, b, c, d_skip=d_skip, chunk=chunk,
                            interpret=_interpret())
+
+
+def stage2_score(params, gnn_type, entity_emb, emb_mask, order_feats,
+                 block_b: int = 128):
+    """Fused speed-layer scoring: whole online stage-2 path in one launch.
+
+    Takes the full ``lnn_init`` params pytree; the stage-2-relevant leaves
+    are flattened into the kernel's argument order here (cheap — slicing and
+    one stack, folded away under jit).  Returns logits [B].
+    """
+    flat = flatten_stage2_params(params, gnn_type)
+    return stage2_score_pallas(entity_emb, emb_mask, order_feats, flat,
+                               gnn_type=gnn_type, block_b=block_b,
+                               interpret=_interpret())
 
 
 # re-export oracles for convenience

@@ -1,0 +1,200 @@
+"""Pallas TPU kernel: fused online stage-2 scoring (the speed-layer hot path).
+
+``lnn_stage2_online`` is the computation every streamed checkout request
+crosses after its KV lookups.  The unfused path issues four separate
+dispatches per micro-batch — order tower, masked aggregation, last-layer
+combine, MLP head — each reading/writing HBM.  This kernel performs the
+whole thing in ONE launch over a padded micro-batch:
+
+    tower    h = relu(feats @ W_in + b_in + type_emb[ORDER])
+                 then (L-1) x  relu(h @ W_self_l + b_l)        (stage-1 self
+                                                                transforms)
+    agg      a = masked mean (gcn/sage) or masked attention (gat)
+                 over the KV-fetched entity embeddings          (final hop)
+    combine  g = relu(h @ W_self + a @ W_nbr + b)               (last GNN layer)
+    logit    y = MLP([g ; feats])                               (risk head)
+
+The ``[g ; feats]`` concatenation is folded into the MLP's first layer by
+splitting its weight row-wise (``w0[:H]`` / ``w0[H:]``), so no concat ever
+materialises.  Layer counts are static per config, so the tower and MLP
+loops unroll at trace time; the entity-slot aggregation strip-mines over the
+fixed width K exactly like ``csr_spmm.py`` does over the neighbor width.
+
+Block sizing follows ``stream.microbatch.bucket_size``: the batch dimension
+tiles in power-of-two blocks (capped at ``block_b``), so every micro-batch
+bucket the scheduler can emit (1, 2, 4, ..., max_batch) maps to one grid
+step with zero re-padding.  Weights are tiny (H <= 256) and ride along
+whole in VMEM.
+
+VMEM budget per program (defaults bb=128, K=8, H=64, F=16, f32):
+    emb tile   bb x K x H = 128*8*64*4 = 256 KiB
+    weights    ~(F*H + L*H^2 + (H+F)*m0 + ...) * 4 ~= 100 KiB
+    activations bb x H few copies      ~= 100 KiB          << 16 MiB VMEM
+
+Like the other kernels in this package the same ``pallas_call`` runs in
+interpret mode on CPU (the tier-1 correctness oracle) and compiles natively
+on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.utils.padding import ceil_div
+
+
+def _bucket_block(b: int, cap: int) -> int:
+    """Next power-of-two >= b, capped — mirrors ``stream.microbatch.bucket_size``."""
+    p = 1
+    while p < b and p < cap:
+        p *= 2
+    return min(p, cap)
+
+
+def _make_stage2_kernel(gnn_type: str, n_tower: int, n_mlp_extra: int):
+    """Build the kernel body for a static (gnn_type, depth) configuration."""
+
+    def kernel(*refs):
+        emb_ref, mask_ref, feats_ref = refs[0:3]
+        w_in_ref, b_in_ref, type_ref, tw_ref, tb_ref = refs[3:8]
+        rest = refs[8:]
+        if gnn_type == "gat":
+            (w_self_ref, b_last_ref, w_gat_ref,
+             a_src_ref, a_dst_ref, a_et_ref) = rest[0:6]
+            mlp_refs = rest[6:-1]
+        else:
+            w_self_ref, w_nbr_ref, b_last_ref = rest[0:3]
+            mlp_refs = rest[3:-1]
+        out_ref = refs[-1]
+
+        emb = emb_ref[...].astype(jnp.float32)      # [bb, K, H]
+        mask = mask_ref[...].astype(jnp.float32)    # [bb, K]
+        feats = feats_ref[...].astype(jnp.float32)  # [bb, F]
+        bb, K, H = emb.shape
+
+        # ---- order tower: input projection + stage-1 self transforms ----
+        h = feats @ w_in_ref[...] + b_in_ref[...] + type_ref[...]
+        h = jnp.maximum(h, 0.0)
+        for l in range(n_tower):
+            h = jnp.maximum(h @ tw_ref[l] + tb_ref[l], 0.0)
+
+        # ---- masked aggregation over the K entity slots ----
+        if gnn_type in ("gcn", "sage"):
+            cnt = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+            wght = mask / cnt                        # [bb, K]
+
+            def body(k, acc):
+                rows = jax.lax.dynamic_index_in_dim(emb, k, axis=1, keepdims=False)
+                wk = jax.lax.dynamic_index_in_dim(wght, k, axis=1, keepdims=False)
+                return acc + rows * wk[:, None]
+
+            agg = jax.lax.fori_loop(0, K, body, jnp.zeros((bb, H), jnp.float32))
+            g = h @ w_self_ref[...] + agg @ w_nbr_ref[...]
+        else:  # gat: attention over the slots in z-space
+            w = w_gat_ref[...]
+            z = (emb.reshape(bb * K, H) @ w).reshape(bb, K, H)
+            s_dst = (h @ w) @ a_dst_ref[...]                          # [bb, 1]
+            s_src = (z.reshape(bb * K, H) @ a_src_ref[...]).reshape(bb, K)
+            logits = s_src + s_dst + a_et_ref[0, 0]
+            logits = jnp.where(logits >= 0, logits, 0.2 * logits)     # leaky relu
+            logits = jnp.where(mask > 0, logits, -1e9)
+            m = jnp.max(logits, axis=-1, keepdims=True)
+            e = jnp.exp(logits - m)
+            attn = (e / jnp.sum(e, axis=-1, keepdims=True)) * mask    # [bb, K]
+
+            def body(k, acc):
+                rows = jax.lax.dynamic_index_in_dim(z, k, axis=1, keepdims=False)
+                ak = jax.lax.dynamic_index_in_dim(attn, k, axis=1, keepdims=False)
+                return acc + rows * ak[:, None]
+
+            agg = jax.lax.fori_loop(0, K, body, jnp.zeros((bb, H), jnp.float32))
+            g = agg + h @ w_self_ref[...]
+        g = jnp.maximum(g + b_last_ref[...], 0.0)
+
+        # ---- risk head: MLP([g ; feats]) with the concat pre-split ----
+        w0g_ref, w0f_ref, b0_ref = mlp_refs[0:3]
+        y = g @ w0g_ref[...] + feats @ w0f_ref[...] + b0_ref[...]
+        for i in range(n_mlp_extra):
+            wi_ref = mlp_refs[3 + 2 * i]
+            bi_ref = mlp_refs[4 + 2 * i]
+            y = jnp.maximum(y, 0.0) @ wi_ref[...] + bi_ref[...]
+        out_ref[...] = y[:, 0].astype(out_ref.dtype)
+
+    return kernel
+
+
+def flatten_stage2_params(params, gnn_type: str):
+    """Extract the stage-2-relevant leaves of an ``lnn_init`` pytree in the
+    kernel's positional argument order.
+
+    Stage-1 self-transform layers stack into ``[L-1, H, H]`` (hidden width is
+    constant), biases/embedding rows become ``[1, H]`` so every ref is >= 2-D,
+    and the MLP's first weight splits at row H into the ``g_out`` block and
+    the raw-feature block.
+    """
+    from repro.core.graph import EdgeType, NodeType
+
+    h = params["last"]["w_self"].shape[0]
+    flat = [
+        params["input"]["w"],
+        params["input"]["b"][None, :],
+        params["type_emb"][NodeType.ORDER][None, :],
+        jnp.stack([l["w_self"] for l in params["gnn"]]),
+        jnp.stack([l["b"] for l in params["gnn"]]),
+    ]
+    p = params["last"]
+    if gnn_type == "gcn":
+        flat += [p["w_self"], p["w_nbr"][EdgeType.ENTITY_TO_ORDER], p["b"][None, :]]
+    elif gnn_type == "sage":
+        flat += [p["w_self"], p["w_nbr"], p["b"][None, :]]
+    elif gnn_type == "gat":
+        flat += [p["w_self"], p["b"][None, :], p["w"],
+                 p["a_src"][:, None], p["a_dst"][:, None],
+                 p["a_et"][EdgeType.ENTITY_TO_ORDER][None, None]]
+    else:
+        raise ValueError(f"unknown gnn_type {gnn_type}")
+    mlp = params["mlp"]
+    w0 = mlp[0]["w"]
+    flat += [w0[:h], w0[h:], mlp[0]["b"][None, :]]
+    for layer in mlp[1:]:
+        flat += [layer["w"], layer["b"][None, :]]
+    return tuple(flat)
+
+
+@functools.partial(jax.jit, static_argnames=("gnn_type", "block_b", "interpret"))
+def stage2_score_pallas(entity_emb, emb_mask, order_feats, flat,
+                        gnn_type: str = "gcn", block_b: int = 128,
+                        interpret: bool = True):
+    """Fused online stage-2 scoring: ``(emb [B,K,H], mask [B,K], feats [B,F])
+    -> logits [B]``.  ``flat`` comes from :func:`flatten_stage2_params`.
+    """
+    b, k, hdim = entity_emb.shape
+    f = order_feats.shape[1]
+    bb = _bucket_block(b, block_b)
+    grid = (ceil_div(b, bb),)
+
+    n_tower = flat[3].shape[0]
+    n_fixed = 11 if gnn_type == "gat" else 8
+    n_mlp_extra = (len(flat) - n_fixed - 3) // 2
+
+    def _full(a):
+        nd = a.ndim
+        return pl.BlockSpec(a.shape, lambda i, _nd=nd: (0,) * _nd)
+
+    in_specs = [
+        pl.BlockSpec((bb, k, hdim), lambda i: (i, 0, 0)),
+        pl.BlockSpec((bb, k), lambda i: (i, 0)),
+        pl.BlockSpec((bb, f), lambda i: (i, 0)),
+    ] + [_full(a) for a in flat]
+
+    return pl.pallas_call(
+        _make_stage2_kernel(gnn_type, n_tower, n_mlp_extra),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(entity_emb, emb_mask, order_feats, *flat)

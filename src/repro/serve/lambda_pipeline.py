@@ -24,7 +24,6 @@ from repro.core.graph import NodeType
 from repro.core.lnn import (
     LNNConfig,
     lnn_forward,
-    lnn_order_tower,
     lnn_stage1,
     lnn_stage2_online,
 )
@@ -33,6 +32,14 @@ from repro.serve.kvstore import KVStore, pack_key
 
 @dataclass
 class BatchLayer:
+    """Periodic batch-layer refresh: ``refresh(batches)`` runs jitted LNN
+    stage 1 over each community's padded graph and writes every
+    ``(entity, t)`` snapshot embedding into ``store`` under its packed key.
+
+    ``batches`` are community batches (``b.graph`` PaddedGraph + ``b.dds``
+    build record) as produced by ``repro.data.build_communities``.
+    """
+
     params: object
     cfg: LNNConfig
     store: KVStore
@@ -64,6 +71,17 @@ class BatchLayer:
 
 @dataclass
 class SpeedLayer:
+    """Online transaction-risk scorer: ``score(requests)`` maps a list of
+    ``{'features': [F], 'entity_keys': [(entity, t_e), ...]}`` dicts to
+    fraud probabilities via at most ``k_max`` KV lookups per request plus a
+    single stage-2 dispatch.
+
+    The whole online compute (order tower + masked aggregation + last GNN
+    layer + MLP head) is one jitted call of ``lnn_stage2_online``; with
+    ``cfg.use_pallas`` that call is the fused ``kernels.stage2_score``
+    Pallas launch.
+    """
+
     params: object
     cfg: LNNConfig
     store: KVStore
@@ -71,30 +89,35 @@ class SpeedLayer:
 
     def __post_init__(self):
         self._stage2 = jax.jit(
-            lambda p, emb, mask, feats, tower: lnn_stage2_online(
-                p, self.cfg, emb, mask, feats, tower
+            lambda p, emb, mask, feats: lnn_stage2_online(
+                p, self.cfg, emb, mask, feats
             )
         )
-        self._tower = jax.jit(lambda p, feats: lnn_order_tower(p, self.cfg, feats))
 
     def score(self, requests: list) -> np.ndarray:
         """requests: [{'features': [F], 'entity_keys': [(ent, t_e), ...]}].
 
         Returns fraud probabilities.  This is the checkout-approval hot path:
-        K key-value lookups + one tiny jit call; no graph database."""
+        K key-value lookups + one fused jit call; no graph database."""
         feats = jnp.asarray(np.stack([r["features"] for r in requests]))
         key_lists = [
             [pack_key(e, t) for (e, t) in r["entity_keys"]] for r in requests
         ]
         emb, mask = self.store.lookup_batch(key_lists, self.k_max)
-        tower = self._tower(self.params, feats)
         logits = self._stage2(self.params, jnp.asarray(emb), jnp.asarray(mask),
-                              feats, tower)
+                              feats)
         return np.asarray(jax.nn.sigmoid(logits))
 
 
 @dataclass
 class LambdaPipeline:
+    """Both Lambda halves wired over one shared ``KVStore``: ``refresh``
+    delegates to the :class:`BatchLayer`, ``score`` to the
+    :class:`SpeedLayer`, and ``score_equivalence_check`` replays every
+    order with history through the real store to bound the two-stage vs
+    monolithic score gap.
+    """
+
     params: object
     cfg: LNNConfig
     k_max: int = 8

@@ -29,7 +29,7 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
-from repro.core.lnn import LNNConfig, lnn_order_tower, lnn_stage2_online
+from repro.core.lnn import LNNConfig, lnn_stage2_online
 from repro.serve.kvstore import KVStore
 from repro.stream.events import CheckoutEvent
 from repro.stream.ingest import StreamIngester
@@ -53,6 +53,22 @@ class EngineConfig:
 
 
 class StreamingEngine:
+    """The closed Lambda loop over a live event stream.
+
+    ``submit(event)`` ingests one :class:`CheckoutEvent` (growing the
+    incremental DDS, triggering batch-layer refreshes on window close) and
+    returns whatever :class:`ScoredResult` lists the event's arrival flushed
+    out of the micro-batch queue; ``flush()`` force-drains the queue and
+    ``replay(events)`` drives a whole stream and returns a
+    :class:`ReplayReport`.
+
+    Per micro-batch flush the speed layer makes one versioned KV multi-get
+    and ONE jitted stage-2 dispatch (``lnn_stage2_online`` — the fused
+    ``kernels.stage2_score`` Pallas launch when ``cfg.use_pallas``); the
+    order tower is folded into that call, so the hot path is a single
+    fixed-shape kernel per flush.
+    """
+
     def __init__(self, params, cfg: LNNConfig, engine_cfg: EngineConfig | None = None,
                  store: KVStore | None = None):
         self.params = params
@@ -81,24 +97,22 @@ class StreamingEngine:
             max_wait_s=self.ecfg.max_wait_s,
         )
         self._stage2 = jax.jit(
-            lambda p, emb, mask, feats, tower: lnn_stage2_online(
-                p, self.cfg, emb, mask, feats, tower
+            lambda p, emb, mask, feats: lnn_stage2_online(
+                p, self.cfg, emb, mask, feats
             )
         )
-        self._tower = jax.jit(lambda p, feats: lnn_order_tower(p, self.cfg, feats))
 
     # ------------------------------------------------------------- speed layer
     def _score_batch(self, feats: np.ndarray, entity_t_lists: list):
         """[B, F] features + per-row (entity, t_e) lists -> (probs, staleness).
 
         One KV multi-get (with snapshot fallback) and one jitted stage-2
-        call — the checkout-approval hot path."""
+        call (tower folded in) — the checkout-approval hot path."""
         emb, mask, stale = self.store.lookup_batch_versioned(
             entity_t_lists, self.ecfg.k_max
         )
         f = np.ascontiguousarray(feats, np.float32)
-        tower = self._tower(self.params, f)
-        logits = self._stage2(self.params, emb, mask, f, tower)
+        logits = self._stage2(self.params, emb, mask, f)
         probs = np.asarray(jax.nn.sigmoid(logits))
         return probs, stale.max(axis=1)
 

@@ -50,8 +50,16 @@ def bucket_size(n: int, max_batch: int) -> int:
 
 
 class MicroBatcher:
-    """``score_fn(features [B, F], key_lists) -> (probs [B], staleness [B])``
-    is supplied by the engine; the batcher owns only queueing policy."""
+    """Queue + flush policy for speed-layer micro-batches.
+
+    ``score_fn(features [B, F], key_lists) -> (probs [B], staleness [B])``
+    is supplied by the engine; the batcher owns only queueing policy:
+    ``submit(request, now)`` enqueues and size-flushes at ``max_batch``,
+    ``poll(now)`` deadline-flushes once the oldest request has waited
+    ``max_wait_s``, and ``flush(now)`` drains unconditionally.  Flushes are
+    right-padded to the next power-of-two bucket (``bucket_size``) so the
+    jit cache holds O(log max_batch) shapes.
+    """
 
     def __init__(self, score_fn, max_batch: int = 16, max_wait_s: float = 0.005):
         if max_batch < 1:

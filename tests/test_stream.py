@@ -169,6 +169,24 @@ def test_async_refresh_drains_and_scores_everything(stream_world):
     assert eng.refresher.stats["refreshes"] > 0
 
 
+def test_streaming_fused_stage2_matches_unfused(stream_world):
+    """Flipping ``LNNConfig.use_pallas`` swaps the speed layer onto the fused
+    Pallas stage-2 kernel (interpret mode on CPU); every replayed score must
+    be identical to the unfused engine's, across all bucket shapes."""
+    import dataclasses
+
+    events, g, cfg, params = stream_world
+    evs = events[:60]
+    ref = StreamingEngine(params, cfg, EngineConfig(max_batch=8))
+    s_ref = ref.replay(evs).scores_by_order()
+    fused = StreamingEngine(params, dataclasses.replace(cfg, use_pallas=True),
+                            EngineConfig(max_batch=8))
+    s_fused = fused.replay(evs).scores_by_order()
+    assert set(s_fused) == set(s_ref)
+    err = max(abs(s_fused[o] - s_ref[o]) for o in s_ref)
+    assert err < 1e-5, err
+
+
 def test_engine_cold_start_scores_without_history():
     """First-ever events (empty store, no history) must score, not crash."""
     cfg = LNNConfig(num_gnn_layers=2, hidden_dim=16, feat_dim=4)

@@ -1,0 +1,76 @@
+"""Docs honesty checker (the CI ``docs`` job).
+
+Two guarantees over README.md + docs/*.md:
+
+1. every intra-repo markdown link ``[text](target)`` resolves to a real
+   file or directory (anchors and external http(s)/mailto links skipped);
+2. every inline code reference to a repo path — ``src/repro/...``,
+   ``tests/...``, ``benchmarks/...``, ``examples/...``, ``docs/...``,
+   ``tools/...`` — points at an existing file, so renames can't silently
+   rot the docs.  ``path::test_name`` pytest selectors are handled (the
+   regex stops at the extension).
+
+Exit code 1 with a per-file report when anything is broken.
+
+Run:  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+PATH_RE = re.compile(
+    r"\b((?:src/repro|tests|benchmarks|examples|docs|tools)"
+    r"/[\w\-./]*\.(?:py|md|yml|json))\b"
+)
+EXTERNAL = ("http://", "https://", "mailto:", "#")
+
+
+def md_files() -> list[Path]:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(EXTERNAL):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        # leading "/" means repo-root-relative (GitHub-style), not fs-absolute
+        resolved = (ROOT / path.lstrip("/")) if path.startswith("/") else (md.parent / path)
+        if not resolved.exists():
+            errors.append(f"broken link -> {target}")
+    for m in PATH_RE.finditer(text):
+        if not (ROOT / m.group(1)).exists():
+            errors.append(f"missing file reference -> {m.group(1)}")
+    return sorted(set(errors))
+
+
+def main() -> int:
+    n_checked, failed = 0, False
+    for md in md_files():
+        n_checked += 1
+        errors = check_file(md)
+        if errors:
+            failed = True
+            rel = md.relative_to(ROOT)
+            for e in errors:
+                print(f"FAIL {rel}: {e}")
+    if failed:
+        return 1
+    print(f"docs check OK ({n_checked} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
