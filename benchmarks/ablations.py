@@ -87,7 +87,7 @@ def run_ablations(seed: int = 0, epochs: int = 25):
     from repro.data import (SynthConfig, build_communities,
                             generate_transactions, make_split_masks)
     from repro.data.pipeline import standardize_features
-    from repro.train.loop import collect_scores, evaluate_lnn, train_lnn
+    from repro.train.loop import collect_scores, train_lnn
     from repro.train.metrics import average_precision, roc_auc
     from repro.core.lnn import lnn_forward
 

@@ -3,22 +3,84 @@
   table3    paper Table 3 (MLP / LGB / LNN-GAT / LNN-GCN, ROC-AUC + AP)
   latency   paper claim 3 (lambda 1-hop KV inference vs monolithic GNN)
   streaming serving-engine replay (throughput, p50/p95/p99, staleness curve)
+  multiworker sharded speed-layer sweep (latency vs N, queue depth, steals)
   stage2    fused vs unfused speed-layer scoring per micro-batch bucket
   kernels   Pallas-kernel micro-bench (XLA ref timing + v5e roofline projection)
   roofline  aggregated dry-run roofline table (if dry-run records exist)
+
+``--smoke`` runs only the serving benches (streaming + multiworker + stage2)
+at tiny sizes — seconds, not minutes — then validates the emitted
+``BENCH_*.json`` records against their schemas (``tools/check_bench_schema``).
+That is the CI ``bench-smoke`` gate: it fails on crash or schema drift.
 
 Prints ``name,us_per_call,derived`` CSV at the end for machine consumption.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
-def main() -> None:
+def _streaming_rows(csv_rows, stream) -> None:
+    for bs, t in stream["throughput"].items():
+        csv_rows.append((f"streaming/throughput_{bs}", f"{t['us_per_event']:.1f}",
+                         f"{t['events_per_s']:.0f}eps"))
+    csv_rows.append(("streaming/microbatch_speedup", "",
+                     f"{stream['microbatch_speedup']:.1f}x"))
+    for load, pct in stream["latency"].items():
+        csv_rows.append((f"streaming/{load}/p99", f"{pct['p99']*1e3:.0f}",
+                         f"p50={pct['p50']:.2f}ms,p99={pct['p99']:.2f}ms"))
+    for p in stream["multiworker"]["sweep"]:
+        pct = p["latency_ms"]
+        csv_rows.append((
+            f"multiworker/n{p['num_workers']}/p99", f"{pct['p99']*1e3:.0f}",
+            f"p50={pct['p50']:.2f}ms,p99={pct['p99']:.2f}ms,"
+            f"steal_rate={p['steal_rate']:.3f}",
+        ))
+    par = stream["multiworker"]["parity"]
+    csv_rows.append(("multiworker/parity", "",
+                     f"bit_identical={par['bit_identical']}"))
+
+
+def _stage2_rows(csv_rows, s2) -> None:
+    for bs, r in s2["per_batch"].items():
+        csv_rows.append((f"stage2/fused_b{bs}", f"{r['fused_us']:.1f}",
+                         f"speedup={r['speedup']:.2f}x"))
+
+
+def run_smoke() -> None:
+    """The CI bench-smoke gate: serving benches at tiny sizes + schema check."""
+    csv_rows = [("name", "us_per_call", "derived")]
+    os.makedirs("experiments", exist_ok=True)
+
+    # smoke records land under experiments/smoke/ (never clobbering the
+    # curated full-run records); validate exactly what this run wrote
+    from benchmarks.streaming_bench import main as streaming_main
+    stream = streaming_main(smoke=True)   # writes BENCH_streaming + _multiworker
+    _streaming_rows(csv_rows, stream)
+
+    from benchmarks.stage2_bench import main as stage2_main
+    s2 = stage2_main(smoke=True)          # writes BENCH_stage2.json
+    _stage2_rows(csv_rows, s2)
+
+    from tools.check_bench_schema import main as schema_main
+    rc = schema_main([os.path.join("experiments", "smoke", name) for name in
+                      ("BENCH_streaming.json", "BENCH_stage2.json",
+                       "BENCH_multiworker.json")])
+    if rc != 0:
+        raise SystemExit(rc)
+
+    print("\n# CSV")
+    for row in csv_rows:
+        print(",".join(str(c) for c in row))
+
+
+def run_full() -> None:
     csv_rows = [("name", "us_per_call", "derived")]
     os.makedirs("experiments", exist_ok=True)
 
@@ -42,21 +104,12 @@ def main() -> None:
     csv_rows.append(("latency/monolithic", f"{lat['monolithic_ms_per_request']*1e3:.1f}", ""))
 
     from benchmarks.streaming_bench import main as streaming_main
-    stream = streaming_main()   # writes experiments/BENCH_streaming.json
-    for bs, t in stream["throughput"].items():
-        csv_rows.append((f"streaming/throughput_{bs}", f"{t['us_per_event']:.1f}",
-                         f"{t['events_per_s']:.0f}eps"))
-    csv_rows.append(("streaming/microbatch_speedup", "",
-                     f"{stream['microbatch_speedup']:.1f}x"))
-    for load, l in stream["latency"].items():
-        csv_rows.append((f"streaming/{load}/p99", f"{l['p99']*1e3:.0f}",
-                         f"p50={l['p50']:.2f}ms,p99={l['p99']:.2f}ms"))
+    stream = streaming_main()   # writes BENCH_streaming + BENCH_multiworker
+    _streaming_rows(csv_rows, stream)
 
     from benchmarks.stage2_bench import main as stage2_main
     s2 = stage2_main()   # writes experiments/BENCH_stage2.json
-    for bs, r in s2["per_batch"].items():
-        csv_rows.append((f"stage2/fused_b{bs}", f"{r['fused_us']:.1f}",
-                         f"speedup={r['speedup']:.2f}x"))
+    _stage2_rows(csv_rows, s2)
 
     from benchmarks.kernels_bench import main as kernels_main
     ker = kernels_main()
@@ -78,6 +131,17 @@ def main() -> None:
     print("\n# CSV")
     for row in csv_rows:
         print(",".join(str(c) for c in row))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="serving benches only, tiny sizes, schema-checked "
+                         "(the CI bench-smoke gate)")
+    if ap.parse_args().smoke:
+        run_smoke()
+    else:
+        run_full()
 
 
 if __name__ == '__main__':

@@ -20,9 +20,11 @@ and projected v5e time from the roofline model (``launch/mesh.py``) — the
 number the Pallas kernel is designed to approach on hardware.
 
 Writes ``experiments/BENCH_stage2.json``; wired into ``benchmarks/run.py``.
+``--smoke`` shrinks batch sizes and iteration counts to CI-smoke scale.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -70,7 +72,12 @@ def _roofline(b, k, h, f, mlp_dims):
     return flops, param_bytes + io_bytes
 
 
-def main(batch_sizes=BATCH_SIZES, iters=100):
+def main(batch_sizes=BATCH_SIZES, iters=100, smoke: bool = False):
+    # smoke runs shrink sizes AND land in experiments/smoke/ so a local
+    # `run.py --smoke` can never clobber the curated full-run records
+    outdir = os.path.join("experiments", "smoke") if smoke else "experiments"
+    if smoke:
+        batch_sizes, iters = (1, 4, 16), 5
     import jax
     import jax.numpy as jnp
 
@@ -129,8 +136,8 @@ def main(batch_sizes=BATCH_SIZES, iters=100):
                  "'pallas_interpret_us' is the interpreter-executed kernel — "
                  "a correctness vehicle, not a perf number (docs/kernels.md)."),
     }
-    os.makedirs("experiments", exist_ok=True)
-    json.dump(out, open("experiments/BENCH_stage2.json", "w"), indent=1)
+    os.makedirs(outdir, exist_ok=True)
+    json.dump(out, open(os.path.join(outdir, "BENCH_stage2.json"), "w"), indent=1)
 
     print("\n# Stage-2 scoring: fused (1 dispatch) vs unfused (2 dispatches)")
     print(f"{'batch':>6} {'unfused_us':>11} {'fused_us':>9} {'speedup':>8} "
@@ -143,4 +150,7 @@ def main(batch_sizes=BATCH_SIZES, iters=100):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI smoke (seconds, not minutes)")
+    main(smoke=ap.parse_args().smoke)

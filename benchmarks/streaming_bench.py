@@ -1,4 +1,5 @@
-"""Streaming serving benchmark — throughput, latency tails, staleness curves.
+"""Streaming serving benchmark — throughput, latency tails, staleness curves,
+and the multi-worker speed-layer sweep.
 
 Drives synthetic checkout streams through the full engine
 (ingest -> async-able batch refresh -> micro-batched speed layer) and reports:
@@ -9,14 +10,21 @@ Drives synthetic checkout streams through the full engine
 * **latency** (open loop): p50/p95/p99 of queue-wait + service under
   Poisson arrivals, for several offered loads;
 * **staleness vs accuracy**: ROC-AUC of the streamed scores as the batch
-  layer's refresh cadence stretches — the Lambda trade-off quantified.
+  layer's refresh cadence stretches — the Lambda trade-off quantified;
+* **worker sweep** (``run_multiworker_bench``): p50/p95/p99, queue-depth and
+  steal-rate counters vs worker count N under a virtual per-flush service
+  cost — the N-server queueing win of sharding the micro-batch queue, plus
+  the replay bit-parity check.  Lands in
+  ``experiments/BENCH_multiworker.json``.
 
-Run:  PYTHONPATH=src python benchmarks/streaming_bench.py
-JSON lands in experiments/BENCH_streaming.json (also wired into
-benchmarks/run.py).
+Run:  PYTHONPATH=src python benchmarks/streaming_bench.py [--smoke]
+JSON lands in experiments/BENCH_streaming.json + BENCH_multiworker.json
+(also wired into benchmarks/run.py; ``--smoke`` shrinks every dimension to
+CI-smoke sizes — seconds, not minutes).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -79,6 +87,10 @@ def run_streaming_bench(
     eng.warmup()          # compile every pow2 bucket once, off the clock
     thr = {}
     for bs in batch_sizes:
+        # warm the exact full-chunk shape too: bucket padding floors at 2,
+        # so engine warmup alone no longer covers a bare batch-1 dispatch
+        eng._score_batch(np.zeros((bs, feats.shape[1]), np.float32),
+                         [[] for _ in range(bs)])
         t0 = time.perf_counter()
         for i in range(0, len(events), bs):
             chunk_f, chunk_k = feats[i:i + bs], key_lists[i:i + bs]
@@ -142,27 +154,153 @@ def run_streaming_bench(
     return out
 
 
-def main() -> dict:
-    r = run_streaming_bench()
+def run_multiworker_bench(
+    num_users: int = 200,
+    num_rings: int = 5,
+    worker_counts=(1, 2, 4, 8),
+    rate_per_s: float = 600.0,
+    max_batch: int = 16,
+    max_wait_s: float = 0.005,
+    service_model_s: float = 0.004,
+    steal_threshold: int = 24,
+    parity_events: int = 150,
+    seed: int = 0,
+) -> dict:
+    """Worker-count sweep over the sharded speed layer.
+
+    The engine is a deterministic N-server queueing simulation: each flush
+    occupies its worker for ``service_model_s`` *virtual* seconds, so at a
+    fixed offered load a single worker saturates (queue waits dominate the
+    tail) while N key-affine workers drain in parallel — the latency
+    columns quantify exactly the serving-tier scaling the sharded queue
+    buys, independent of host speed.  Wall-clock replay throughput is also
+    reported, with the honest caveat that all N workers share this
+    process's one CPU (jit dispatch concurrency is simulated, not real).
+    Queue-depth and steal-rate counters come from the pool's own stats.
+    """
+    import jax
+
+    from repro.core import LNNConfig, lnn_init
+    from repro.data import SynthConfig, generate_event_stream
+    from repro.stream import EngineConfig, StreamingEngine
+
+    scfg = SynthConfig(num_users=num_users, num_rings=num_rings,
+                       feature_noise=0.8, seed=seed)
+    events, g, _ = generate_event_stream(scfg, rate_per_s=rate_per_s)
+    cfg = LNNConfig(num_gnn_layers=3, hidden_dim=64,
+                    feat_dim=g.order_features.shape[1], pos_weight=3.0)
+    params = lnn_init(jax.random.PRNGKey(seed), cfg)
+
+    out: dict = {
+        "n_events": len(events),
+        "config": {
+            "num_users": num_users, "rate_per_s": rate_per_s,
+            "max_batch": max_batch, "max_wait_s": max_wait_s,
+            "service_model_s": service_model_s,
+            "steal_threshold": steal_threshold,
+            "hidden_dim": cfg.hidden_dim,
+        },
+        "sweep": [],
+    }
+
+    for n in worker_counts:
+        eng = StreamingEngine(params, cfg, EngineConfig(
+            max_batch=max_batch, max_wait_s=max_wait_s, num_workers=n,
+            service_model_s=service_model_s, steal_threshold=steal_threshold))
+        t0 = time.perf_counter()
+        rep = eng.replay(events)
+        wall = time.perf_counter() - t0
+        s = rep.summary()
+        workers = s["workers"]
+        out["sweep"].append({
+            "num_workers": n,
+            "events_per_s_wall": len(events) / wall,
+            "latency_ms": s["latency_ms"],
+            "mean_latency_ms": s["mean_latency_ms"],
+            "mean_batch": s["mean_batch"],
+            "flushes": s["flushes"],
+            "steals": s["steals"],
+            "stolen_requests": s["stolen_requests"],
+            "steal_rate": s["stolen_requests"] / max(1, len(events)),
+            "max_queue_depth": max(w["max_queue_depth"] for w in workers),
+            "mean_queue_depth": float(np.mean(
+                [w["mean_queue_depth"] for w in workers])),
+            "per_worker_requests": [w["requests"] for w in workers],
+            "workers": workers,
+        })
+
+    # replay bit-parity: the acceptance invariant, checked on a prefix
+    evs = events[:parity_events]
+    ref = StreamingEngine(params, cfg, EngineConfig(max_batch=max_batch))
+    s_ref = ref.replay(evs).scores_by_order()
+    bit_identical = True
+    for n in worker_counts:
+        eng = StreamingEngine(params, cfg, EngineConfig(
+            max_batch=max_batch, num_workers=n,
+            service_model_s=service_model_s, steal_threshold=steal_threshold))
+        s_n = eng.replay(evs).scores_by_order()
+        bit_identical &= (set(s_n) == set(s_ref)
+                          and all(s_n[o] == s_ref[o] for o in s_ref))
+    out["parity"] = {"bit_identical": bool(bit_identical),
+                     "checked_events": len(evs),
+                     "worker_counts": list(worker_counts)}
+    return out
+
+
+def _print_multiworker(r: dict) -> None:
+    print("\n# Multi-worker sharded speed layer "
+          f"(virtual service {r['config']['service_model_s']*1e3:.1f} ms/flush)")
+    for p in r["sweep"]:
+        pct = p["latency_ms"]
+        print(f"  N={p['num_workers']}: p50={pct['p50']:.2f}ms "
+              f"p95={pct['p95']:.2f}ms p99={pct['p99']:.2f}ms "
+              f"max_depth={p['max_queue_depth']} "
+              f"steal_rate={p['steal_rate']:.3f} "
+              f"wall={p['events_per_s_wall']:.0f} eps")
+    par = r["parity"]
+    print(f"  replay parity: bit_identical={par['bit_identical']} "
+          f"over N={par['worker_counts']} ({par['checked_events']} events)")
+
+
+def main(smoke: bool = False) -> dict:
+    if smoke:
+        r = run_streaming_bench(num_users=60, num_rings=2, batch_sizes=(1, 8),
+                                loads_per_s=(200.0,), refresh_intervals=(1, 4),
+                                train_epochs=0)
+        mw = run_multiworker_bench(num_users=60, num_rings=2,
+                                   worker_counts=(1, 2), parity_events=60)
+    else:
+        r = run_streaming_bench()
+        mw = run_multiworker_bench()
     print("\n# Streaming serving engine")
     for bs, t in r["throughput"].items():
         print(f"  throughput/{bs}: {t['events_per_s']:.0f} events/s "
               f"({t['us_per_event']:.0f} us/event)")
     print(f"  micro-batch speedup (batch>=8 vs per-request): "
           f"{r['microbatch_speedup']:.1f}x")
-    for load, l in r["latency"].items():
-        print(f"  latency/{load}: p50={l['p50']:.2f}ms p95={l['p95']:.2f}ms "
-              f"p99={l['p99']:.2f}ms (mean batch {l['mean_batch']:.1f})")
+    for load, pct in r["latency"].items():
+        print(f"  latency/{load}: p50={pct['p50']:.2f}ms p95={pct['p95']:.2f}ms "
+              f"p99={pct['p99']:.2f}ms (mean batch {pct['mean_batch']:.1f})")
     for p in r["staleness_curve"]:
         auc = f" auc={p['roc_auc']:.4f}" if "roc_auc" in p else ""
         print(f"  staleness/refresh_every={p['refresh_every']}: "
               f"mean={p['staleness_mean']:.2f} snapshots, "
               f"stale_frac={p['stale_frac']:.2f}{auc}")
-    os.makedirs("experiments", exist_ok=True)
-    with open("experiments/BENCH_streaming.json", "w") as f:
+    _print_multiworker(mw)
+    # smoke records land in experiments/smoke/ so a local `--smoke` run can
+    # never clobber the curated full-run records
+    outdir = os.path.join("experiments", "smoke") if smoke else "experiments"
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, "BENCH_streaming.json"), "w") as f:
         json.dump(r, f, indent=1)
+    with open(os.path.join(outdir, "BENCH_multiworker.json"), "w") as f:
+        json.dump(mw, f, indent=1)
+    r["multiworker"] = mw
     return r
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI smoke (seconds, not minutes)")
+    main(smoke=ap.parse_args().smoke)

@@ -16,7 +16,6 @@ import numpy as np
 
 
 def run_table3(seeds=(0, 1, 2), epochs: int = 30, verbose: bool = True):
-    import jax
 
     from repro.baselines import GBDTConfig, train_gbdt
     from repro.baselines.mlp import MLPConfig, predict_mlp, train_mlp

@@ -44,9 +44,9 @@ class StaticGraph:
     num_orders: int
     num_entities: int
     edges: np.ndarray              # [E, 2] (order, entity)
-    order_snapshot: np.ndarray     # [O] int — snapshot index of checkout
-    order_features: np.ndarray     # [O, F] float32 — raw checkout features
-    labels: np.ndarray             # [O] {0,1} — unauthenticated chargeback
+    order_snapshot: np.ndarray     # [n_ord] int — snapshot index of checkout
+    order_features: np.ndarray     # [n_ord, F] float32 — raw checkout features
+    labels: np.ndarray             # [n_ord] {0,1} — unauthenticated chargeback
     entity_type: np.ndarray | None = None   # [num_entities] int — optional
     num_snapshots: int = field(default=0)
 
@@ -60,8 +60,8 @@ class DDSGraph:
     """The DDS graph plus bookkeeping to map back to static ids."""
 
     coo: COOGraph
-    # node-id layout: [0, O) effective orders; [O, 2O) shadows;
-    # [2O, 2O + num_entity_snap_nodes) entity-snapshot vertices.
+    # node-id layout: [0, n_ord) effective orders; [n_ord, 2*n_ord) shadows;
+    # [2*n_ord, 2*n_ord + num_entity_snap_nodes) entity-snapshot vertices.
     num_orders: int
     entity_snap_ids: dict          # (entity, t) -> node id
     # the final-hop table (speed-layer input): for each order, the entity
@@ -91,7 +91,7 @@ def build_dds(
     """
     if entity_history not in ("all", "consecutive"):
         raise ValueError(entity_history)
-    O = g.num_orders
+    n_ord = g.num_orders
 
     # --- which (entity, t) pairs are active (linked to >= 1 order in t) ----
     order_of_edge = g.edges[:, 0]
@@ -104,8 +104,8 @@ def build_dds(
     uniq_t = uniq_keys % (g.num_snapshots + 1)
     entity_snap_ids: dict = {}
     for i, (ent, t) in enumerate(zip(uniq_entity.tolist(), uniq_t.tolist())):
-        entity_snap_ids[(ent, t)] = 2 * O + i
-    n_nodes = 2 * O + len(entity_snap_ids)
+        entity_snap_ids[(ent, t)] = 2 * n_ord + i
+    n_nodes = 2 * n_ord + len(entity_snap_ids)
 
     # active snapshots per entity, sorted ascending
     active: dict = {}
@@ -119,7 +119,7 @@ def build_dds(
     # --- shadow <-> entity (same snapshot) --------------------------------
     for o, ent, t in zip(order_of_edge.tolist(), entity_of_edge.tolist(), t_of_edge.tolist()):
         e_node = entity_snap_ids[(ent, t)]
-        s_node = O + o  # shadow clone of order o
+        s_node = n_ord + o  # shadow clone of order o
         src.append(s_node); dst.append(e_node); et.append(EdgeType.SHADOW_TO_ENTITY)
         src.append(e_node); dst.append(s_node); et.append(EdgeType.ENTITY_TO_SHADOW)
 
@@ -153,24 +153,24 @@ def build_dds(
     # --- node tables -------------------------------------------------------
     F = g.order_features.shape[1]
     features = np.zeros((n_nodes, F), np.float32)
-    features[:O] = g.order_features
-    features[O : 2 * O] = g.order_features  # shadows share raw features
+    features[:n_ord] = g.order_features
+    features[n_ord : 2 * n_ord] = g.order_features  # shadows share raw features
     # entity features are zero per paper §4.2 ("initial features set to zero")
 
     node_type = np.full(n_nodes, NodeType.ENTITY, np.int32)
-    node_type[:O] = NodeType.ORDER
-    node_type[O : 2 * O] = NodeType.SHADOW
+    node_type[:n_ord] = NodeType.ORDER
+    node_type[n_ord : 2 * n_ord] = NodeType.SHADOW
 
     snapshot = np.zeros(n_nodes, np.int32)
-    snapshot[:O] = g.order_snapshot
-    snapshot[O : 2 * O] = g.order_snapshot
+    snapshot[:n_ord] = g.order_snapshot
+    snapshot[n_ord : 2 * n_ord] = g.order_snapshot
     for (ent, t), nid in entity_snap_ids.items():
         snapshot[nid] = t
 
     label = np.zeros(n_nodes, np.float32)
-    label[:O] = g.labels
+    label[:n_ord] = g.labels
     label_mask = np.zeros(n_nodes, np.float32)
-    label_mask[:O] = 1.0  # only effective orders are supervised
+    label_mask[:n_ord] = 1.0  # only effective orders are supervised
 
     coo = COOGraph(
         num_nodes=n_nodes,
@@ -183,7 +183,7 @@ def build_dds(
         label=label,
         label_mask=label_mask,
     )
-    return DDSGraph(coo=coo, num_orders=O, entity_snap_ids=entity_snap_ids, last_hop=last_hop)
+    return DDSGraph(coo=coo, num_orders=n_ord, entity_snap_ids=entity_snap_ids, last_hop=last_hop)
 
 
 class IncrementalDDSBuilder:
@@ -322,21 +322,21 @@ class IncrementalDDSBuilder:
     def build(self) -> DDSGraph:
         """Materialize the accumulated DDS graph.
 
-        Node ids: [0, O) orders, [O, 2O) shadows, then entity-snapshot
+        Node ids: [0, n_ord) orders, [n_ord, 2*n_ord) shadows, then entity-snapshot
         vertices in sorted (entity, t) order — the ``build_dds`` layout.
         Per-destination edge order also matches ``build_dds`` (shadow edges
         in event order, history self-loop before ascending past, final-hop
         in event order), so ``pad_graph`` output is identical.
         """
-        O = self.num_orders
+        n_ord = self.num_orders
         entity_snap_ids = {
-            pair: 2 * O + i for i, pair in enumerate(sorted(self._pair_seq))
+            pair: 2 * n_ord + i for i, pair in enumerate(sorted(self._pair_seq))
         }
         src, dst, et = [], [], []
         for o, ent, t in self._shadow_edges:
             e_node = entity_snap_ids[(ent, t)]
-            src.append(O + o); dst.append(e_node); et.append(EdgeType.SHADOW_TO_ENTITY)
-            src.append(e_node); dst.append(O + o); et.append(EdgeType.ENTITY_TO_SHADOW)
+            src.append(n_ord + o); dst.append(e_node); et.append(EdgeType.SHADOW_TO_ENTITY)
+            src.append(e_node); dst.append(n_ord + o); et.append(EdgeType.ENTITY_TO_SHADOW)
         for ent, t_src, t_dst in self._hist_edges:
             src.append(entity_snap_ids[(ent, t_src)])
             dst.append(entity_snap_ids[(ent, t_dst)])
@@ -347,24 +347,24 @@ class IncrementalDDSBuilder:
             src.append(e_node); dst.append(o); et.append(EdgeType.ENTITY_TO_ORDER)
             last_hop.setdefault(o, []).append((ent, t_e, e_node))
 
-        n_nodes = 2 * O + len(entity_snap_ids)
+        n_nodes = 2 * n_ord + len(entity_snap_ids)
         features = np.zeros((n_nodes, self.feat_dim), np.float32)
-        if O:
+        if n_ord:
             of = np.stack(self._order_features)
-            features[:O] = of
-            features[O : 2 * O] = of
+            features[:n_ord] = of
+            features[n_ord : 2 * n_ord] = of
         node_type = np.full(n_nodes, NodeType.ENTITY, np.int32)
-        node_type[:O] = NodeType.ORDER
-        node_type[O : 2 * O] = NodeType.SHADOW
+        node_type[:n_ord] = NodeType.ORDER
+        node_type[n_ord : 2 * n_ord] = NodeType.SHADOW
         snapshot = np.zeros(n_nodes, np.int32)
-        snapshot[:O] = self._order_snapshot
-        snapshot[O : 2 * O] = self._order_snapshot
+        snapshot[:n_ord] = self._order_snapshot
+        snapshot[n_ord : 2 * n_ord] = self._order_snapshot
         for (ent, t), nid in entity_snap_ids.items():
             snapshot[nid] = t
         label = np.zeros(n_nodes, np.float32)
-        label[:O] = self._labels
+        label[:n_ord] = self._labels
         label_mask = np.zeros(n_nodes, np.float32)
-        label_mask[:O] = 1.0
+        label_mask[:n_ord] = 1.0
         coo = COOGraph(
             num_nodes=n_nodes,
             src=np.asarray(src, np.int64),
@@ -376,7 +376,7 @@ class IncrementalDDSBuilder:
             label=label,
             label_mask=label_mask,
         )
-        dds = DDSGraph(coo=coo, num_orders=O, entity_snap_ids=entity_snap_ids,
+        dds = DDSGraph(coo=coo, num_orders=n_ord, entity_snap_ids=entity_snap_ids,
                        last_hop=last_hop)
         return dds
 

@@ -194,23 +194,23 @@ def generate_transactions(cfg: SynthConfig) -> tuple[StaticGraph, np.ndarray]:
         ents = {et: new_entity(i) for i, et in enumerate(ENTITY_TYPES)}
         emit(ents, int(t), 1, ("lone", -1))
 
-    O = len(order_snapshot)
+    n_ord = len(order_snapshot)
     order_snapshot = np.asarray(order_snapshot, np.int64)
     labels = np.asarray(order_is_fraud, np.float32)
 
     # --- features (past_chargebacks needs account history with delay) -------
     # account id per order = the 'account' entity
     edges = np.asarray(rows_edges, np.int64)
-    account_of = np.full(O, -1, np.int64)
+    account_of = np.full(n_ord, -1, np.int64)
     acct_idx = ENTITY_TYPES.index("account")
     for o, eid in rows_edges:
         if entity_type[eid] == acct_idx:
             account_of[o] = eid
-    features = np.zeros((O, NUM_RAW_FEATURES), np.float64)
+    features = np.zeros((n_ord, NUM_RAW_FEATURES), np.float64)
     # delayed chargeback counts per account
     order_by_time = np.argsort(order_snapshot, kind="stable")
     cb_count: dict[int, list[tuple[int, int]]] = {}
-    past_cb = np.zeros(O)
+    past_cb = np.zeros(n_ord)
     for o in order_by_time:
         acct = account_of[o]
         t = order_snapshot[o]
@@ -221,7 +221,7 @@ def generate_transactions(cfg: SynthConfig) -> tuple[StaticGraph, np.ndarray]:
 
     legit_mask = labels == 0
     n_legit = int(legit_mask.sum())
-    n_fraud = O - n_legit
+    n_fraud = n_ord - n_legit
     if n_legit:
         features[legit_mask] = _legit_features(rng, n_legit, None, past_cb[legit_mask])
     if n_fraud:
@@ -230,7 +230,7 @@ def generate_transactions(cfg: SynthConfig) -> tuple[StaticGraph, np.ndarray]:
         )
 
     g = StaticGraph(
-        num_orders=O,
+        num_orders=n_ord,
         num_entities=next_entity,
         edges=edges,
         order_snapshot=order_snapshot,

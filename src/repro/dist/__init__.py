@@ -4,9 +4,12 @@ from repro.dist.sharding import (
     enable_sharding_hints,
     model_axis_size,
     param_sharding,
+    rendezvous_shard,
     resolve_spec,
     shard_hint,
     shard_spec,
+    splitmix64,
+    stable_shard,
 )
 
 __all__ = [
@@ -15,7 +18,10 @@ __all__ = [
     "enable_sharding_hints",
     "model_axis_size",
     "param_sharding",
+    "rendezvous_shard",
     "resolve_spec",
     "shard_hint",
     "shard_spec",
+    "splitmix64",
+    "stable_shard",
 ]

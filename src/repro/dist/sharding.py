@@ -28,6 +28,48 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+# ---------------------------------------------------------------------------
+# key-space sharding (host-side): the hash the KV store and the speed-layer
+# worker router share, so "the worker that owns an entity's KV shard" is a
+# well-defined statement (see serve/kvstore.py and stream/workers.py)
+# ---------------------------------------------------------------------------
+
+_MASK64 = (1 << 64) - 1
+
+
+def splitmix64(x: int) -> int:
+    """Full splitmix64 avalanche — uniform over arbitrary integer keys."""
+    x = (int(x) + 0x9E3779B97F4A7C15) & _MASK64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _MASK64
+    return x ^ (x >> 31)
+
+
+def stable_shard(key: int, num_shards: int) -> int:
+    """Deterministic shard of ``key`` over ``num_shards`` buckets."""
+    return (splitmix64(key) >> 32) % num_shards
+
+
+def rendezvous_shard(key: int, num_shards: int) -> int:
+    """Highest-random-weight (rendezvous) shard of ``key``.
+
+    Unlike modulo placement, growing ``num_shards`` by one moves only
+    ~1/(n+1) of the keys — and every moved key lands on the *new* shard,
+    never migrating between surviving shards.  That minimal-movement
+    property is what lets the speed-layer worker pool reshard explicitly
+    (``ShardRouter.reshard``) without invalidating most workers' warm
+    state.  O(num_shards) per lookup; shard counts here are small.
+    """
+    if num_shards < 1:
+        raise ValueError("num_shards must be >= 1")
+    k = int(key)
+    best, best_w = 0, -1
+    for s in range(num_shards):
+        w = splitmix64(k ^ splitmix64(s))
+        if w > best_w:
+            best, best_w = s, w
+    return best
+
 # v5e per-chip HBM; used by the serve_auto heuristic (_fits_tp_only)
 HBM_BYTES_PER_CHIP = 16e9
 _HBM_HEADROOM = 0.6       # leave room for activations / cache / workspace
@@ -165,7 +207,7 @@ def _leaf_bytes(leaf) -> int:
 def _fits_tp_only(mesh, params_spec) -> bool:
     """True when TP-only replication of the weights fits per-chip HBM —
     the serve_auto resolver uses this to pick the decode weight layout."""
-    total = sum(_leaf_bytes(l) for l in jax.tree_util.tree_leaves(params_spec))
+    total = sum(_leaf_bytes(leaf) for leaf in jax.tree_util.tree_leaves(params_spec))
     mdl = int(mesh.shape.get("model", 1)) if hasattr(mesh.shape, "get") else 1
     return total / max(mdl, 1) <= _HBM_HEADROOM * HBM_BYTES_PER_CHIP
 

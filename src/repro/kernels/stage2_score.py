@@ -78,8 +78,8 @@ def _make_stage2_kernel(gnn_type: str, n_tower: int, n_mlp_extra: int):
         # ---- order tower: input projection + stage-1 self transforms ----
         h = feats @ w_in_ref[...] + b_in_ref[...] + type_ref[...]
         h = jnp.maximum(h, 0.0)
-        for l in range(n_tower):
-            h = jnp.maximum(h @ tw_ref[l] + tb_ref[l], 0.0)
+        for li in range(n_tower):
+            h = jnp.maximum(h @ tw_ref[li] + tb_ref[li], 0.0)
 
         # ---- masked aggregation over the K entity slots ----
         if gnn_type in ("gcn", "sage"):
@@ -142,8 +142,8 @@ def flatten_stage2_params(params, gnn_type: str):
         params["input"]["w"],
         params["input"]["b"][None, :],
         params["type_emb"][NodeType.ORDER][None, :],
-        jnp.stack([l["w_self"] for l in params["gnn"]]),
-        jnp.stack([l["b"] for l in params["gnn"]]),
+        jnp.stack([lyr["w_self"] for lyr in params["gnn"]]),
+        jnp.stack([lyr["b"] for lyr in params["gnn"]]),
     ]
     p = params["last"]
     if gnn_type == "gcn":

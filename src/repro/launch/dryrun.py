@@ -22,12 +22,11 @@ import json
 import time
 import traceback
 
-import jax
 
 from repro.configs import CLI_ALIASES, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import analyze
-from repro.launch.specs import input_specs, supports_shape
+from repro.launch.specs import supports_shape
 from repro.launch.steps import make_step
 from repro.models.config import INPUT_SHAPES
 

@@ -60,7 +60,6 @@ def collective_bytes(hlo_text: str) -> dict:
     """Per-collective-type output bytes summed over the module (one shard)."""
     out = {k: 0 for k in _COLLECTIVES}
     counts = {k: 0 for k in _COLLECTIVES}
-    seen_done = set()
     for m in _OP_RE.finditer(hlo_text):
         shape_str, kind = m.group(1), m.group(2)
         # async pairs: count the -start, skip the -done (same tensor)
@@ -110,13 +109,13 @@ def model_flops(cfg, shape) -> float:
 
 def active_param_count(cfg) -> float:
     """Active (per-token) parameter count from the logical config."""
-    d, l = cfg.d_model, cfg.num_layers
+    d, nl = cfg.d_model, cfg.num_layers
     v = cfg.vocab_size
     emb = 2 * v * d                     # embed + head
     if cfg.arch_type == "ssm":
         di, n_s, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
         per = d * (2 * di + 2 * n_s + h) + di * d
-        return emb + l * per
+        return emb + nl * per
     attn = d * (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim \
         + cfg.num_heads * cfg.head_dim * d
     if cfg.ffn_type == "swiglu":
@@ -130,13 +129,13 @@ def active_param_count(cfg) -> float:
         di, n_s, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
         mamba_per = d * (2 * di + 2 * n_s + h) + di * d
         n_attn = cfg.num_layers // cfg.attn_every
-        return emb + l * mamba_per + n_attn * per
+        return emb + nl * mamba_per + n_attn * per
     if cfg.arch_type == "vlm":
-        return emb + l * per            # cross layers ~ self layers in size
+        return emb + nl * per            # cross layers ~ self layers in size
     if cfg.arch_type == "audio":
         dec_per = per + attn            # + cross attention
-        return emb + l * per + l * dec_per
-    return emb + l * per
+        return emb + nl * per + nl * dec_per
+    return emb + nl * per
 
 
 def analyze(cfg, shape, mesh_name: str, chips: int, cost: dict, hlo_text: str,

@@ -7,10 +7,8 @@ dry-run — nothing is allocated.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist.sharding import (
@@ -24,7 +22,6 @@ from repro.models.config import ArchConfig, InputShape
 from repro.models.transformer import (
     decode_step,
     forward_train,
-    init_cache,
     init_params,
     prefill,
 )

@@ -6,7 +6,6 @@ lowering without retracing surprises.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -152,12 +151,12 @@ def blockwise_attention(q, k, v, *, causal=True, window=None, block_k=512,
     m0 = jnp.full((b, hkv, rep, sq), -1e30, jnp.float32)
     l0 = jnp.zeros((b, hkv, rep, sq), jnp.float32)
     acc0 = jnp.zeros((b, hkv, rep, sq, dh), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(
+    (m, denom, acc), _ = jax.lax.scan(
         step,
         (m0, l0, acc0),
         (jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0), jnp.arange(nb)),
     )
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = acc / jnp.maximum(denom, 1e-30)[..., None]
     return out.reshape(b, hq, sq, dh).astype(q.dtype)
 
 
@@ -196,8 +195,6 @@ def banded_attention(q, k, v, *, window: int, block_k: int = 512):
             kpos[None] > qpos[:, None, None] - window
         )
         # clipped duplicate blocks (i < nband-1) are masked by position
-        dup = (idx[:, None] * block_k + jnp.arange(block_k)[None, :])[None] \
-            != kpos[None]
         logits = jnp.where(mask[None, None, None], logits, -1e30)
         p = jax.nn.softmax(
             logits.reshape(*logits.shape[:4], nband * block_k), axis=-1
@@ -228,7 +225,6 @@ def softmax_cross_entropy(logits, labels, mask=None):
     """
     logits = logits.astype(jnp.float32)
     logz = jax.nn.logsumexp(logits, axis=-1)
-    v = logits.shape[-1]
     onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
               == labels[..., None])
     gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)

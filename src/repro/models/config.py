@@ -6,7 +6,7 @@ dataclass via ``reduced()``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 from repro.utils.padding import pad_to_multiple
 

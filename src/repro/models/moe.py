@@ -94,11 +94,7 @@ def moe_apply(params, cfg, x, full_capacity: bool = False):
     flat_e = expert_idx.reshape(groups, tg * k)                    # [G, kT]
     order = jnp.argsort(flat_e, axis=-1)
     sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
-    # rank of each sorted entry within its expert segment
-    seg_start = jnp.sum(
-        sorted_e[:, :, None] > jnp.arange(e)[None, None, :], axis=1
-    )                                                              # [G, E] count < e+1
-    # seg_start[g, e] = #entries with expert < e  -> prepend 0-based offsets
+    # offsets[g, e] = #entries with expert < e (0-based segment starts)
     offsets = jnp.concatenate(
         [jnp.zeros((groups, 1), sorted_e.dtype),
          jnp.cumsum(jnp.sum(jax.nn.one_hot(sorted_e, e, dtype=jnp.int32), axis=1),

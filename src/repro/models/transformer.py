@@ -17,7 +17,6 @@ Entry points: ``init_params``, ``forward_train`` (loss), ``prefill``
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -247,7 +246,6 @@ def _run_groups(params, cfg: ArchConfig, h, extra, *, want_cache, use_remat,
             continue  # e.g. 'enc' handled separately by _encode for audio
         gp = params["groups"][gname]
         if gname == "decoder" or gname == "enc":
-            causal_cfg = cfg
             def body(carry, p, _g=gname):
                 h, aux = carry
                 if _g == "enc":

@@ -30,6 +30,8 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.dist.sharding import rendezvous_shard, stable_shard
+
 SNAPSHOT_BITS = 20
 MAX_SNAPSHOT = (1 << SNAPSHOT_BITS) - 1
 MAX_ENTITY = (1 << (63 - SNAPSHOT_BITS)) - 1
@@ -51,6 +53,18 @@ def pack_key(entity: int, snapshot: int) -> int:
 
 def unpack_key(key: int) -> tuple[int, int]:
     return int(key) >> SNAPSHOT_BITS, int(key) & MAX_SNAPSHOT
+
+
+def entity_shard(entity: int, num_shards: int) -> int:
+    """Shard an *entity* (all its snapshots together) over ``num_shards``.
+
+    Rendezvous placement over the entity id — the same function the
+    speed-layer :class:`~repro.stream.workers.ShardRouter` uses, so a store
+    built with ``shard_by_entity=True`` and ``num_shards == num_workers``
+    puts every snapshot of an entity on exactly the worker that scores its
+    requests (key-affinity, see docs/streaming.md).
+    """
+    return rendezvous_shard(int(entity), num_shards)
 
 
 class _Entry:
@@ -78,6 +92,7 @@ class KVStore:
         ttl_seconds: float | None = None,
         num_shards: int = 1,
         clock=time.time,
+        shard_by_entity: bool = False,
     ):
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
@@ -85,6 +100,7 @@ class KVStore:
         self.capacity = capacity
         self.ttl_seconds = ttl_seconds
         self.num_shards = num_shards
+        self.shard_by_entity = shard_by_entity
         self._clock = clock
         self._shards: list[OrderedDict[int, _Entry]] = [
             OrderedDict() for _ in range(num_shards)
@@ -101,9 +117,32 @@ class KVStore:
 
     # ---------------------------------------------------------------- shards
     def shard_of(self, key: int) -> int:
-        # splitmix-style avalanche so consecutive snapshots spread shards
-        h = (int(key) * 0x9E3779B97F4A7C15) & (1 << 64) - 1
-        return (h >> 32) % self.num_shards
+        """Shard index for a packed (entity, snapshot) key.
+
+        Default: splitmix avalanche over the whole key, so consecutive
+        snapshots spread shards (load balance).  ``shard_by_entity=True``
+        switches to rendezvous placement over the entity bits alone, so all
+        snapshots of an entity co-locate — the layout the multi-worker
+        speed layer needs for key-affine routing (workers own whole
+        entities, not scattered snapshots)."""
+        if self.shard_by_entity:
+            return entity_shard(int(key) >> SNAPSHOT_BITS, self.num_shards)
+        return stable_shard(key, self.num_shards)
+
+    def reshard(self, num_shards: int) -> None:
+        """Re-place every entry under a new shard count (entity-affine or
+        key-spread, per the store's mode).  O(total entries) — the explicit
+        migration a real cluster would run; ``WorkerPool.reshard`` calls
+        this so worker ownership and shard layout change together.
+        Per-shard LRU recency is preserved within each old shard."""
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        with self._lock:
+            entries = [(k, e) for shard in self._shards for k, e in shard.items()]
+            self.num_shards = int(num_shards)
+            self._shards = [OrderedDict() for _ in range(num_shards)]
+            for k, e in entries:
+                self._shards[self.shard_of(k)][k] = e
 
     def _index_add(self, key: int):
         ent, t = unpack_key(key)

@@ -14,13 +14,12 @@
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import NodeType
 from repro.core.lnn import (
     LNNConfig,
     lnn_forward,
@@ -144,7 +143,6 @@ class LambdaPipeline:
         worst = 0.0
         for b in batches:
             full = np.asarray(jax.nn.sigmoid(fwd(self.params, b.graph)))
-            n_orders = b.global_order_ids.size
             requests, rows = [], []
             for o, hops in b.dds.last_hop.items():
                 keys = [(BatchLayer._global_entity(b, ent), t) for ent, t, _ in hops]

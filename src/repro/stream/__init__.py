@@ -1,10 +1,17 @@
 """repro.stream — real-time streaming ingestion + micro-batched speed-layer
-serving engine (the closed Lambda loop).  See docs/streaming.md."""
+serving engine (the closed Lambda loop), with a multi-worker sharded speed
+layer (``repro.stream.workers``).  See docs/streaming.md."""
 from repro.stream.engine import EngineConfig, ReplayReport, StreamingEngine
 from repro.stream.events import CheckoutEvent, events_from_static, order_event_tuples
 from repro.stream.ingest import IngestResult, StreamIngester
 from repro.stream.microbatch import MicroBatcher, ScoredResult, ScoreRequest
 from repro.stream.refresh import RefreshDriver
+from repro.stream.workers import (
+    ShardRouter,
+    SpeedLayerWorker,
+    Stage2Scorer,
+    WorkerPool,
+)
 
 __all__ = [
     "CheckoutEvent",
@@ -15,8 +22,12 @@ __all__ = [
     "ReplayReport",
     "ScoreRequest",
     "ScoredResult",
+    "ShardRouter",
+    "SpeedLayerWorker",
+    "Stage2Scorer",
     "StreamIngester",
     "StreamingEngine",
+    "WorkerPool",
     "events_from_static",
     "order_event_tuples",
 ]

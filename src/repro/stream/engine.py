@@ -5,8 +5,10 @@ Per checkout event:
   event ──> StreamIngester ──────────────┐ (extends DDS graph, dirty marks)
         │        │ window closed?        │
         │        └─> RefreshDriver ──────┤ (stage 1 on closed windows,
-        │                                │  versioned KV puts)
-        └─> entity keys ─> MicroBatcher ─┴─> speed-layer stage 2 ─> score
+        │                                │  per-shard versioned KV puts)
+        └─> entity keys ─> ShardRouter ──┴─> SpeedLayerWorker[i] ─> score
+                              (key-affine fan-out, N micro-batch queues,
+                               reorder buffer reassembles event order)
 
 Scoring is exact with respect to the paper's monolithic forward: when the
 refresh driver runs every closed window, each request's ``(entity, t_e)``
@@ -16,31 +18,37 @@ micro-batched speed-layer scores equal ``lnn_forward`` on the full graph
 trade exactness for batch-layer cost; the KV fallback then serves older
 snapshots and reports staleness per request.
 
-The engine runs a deterministic discrete-event simulation of a single-server
-queue: *virtual* arrival times drive flush triggers, *real* wall time is
-measured for each jitted flush, and per-request latency = queue wait +
-service — so benchmark numbers are reproducible yet reflect true compute
-cost.
+The engine is a thin façade over :class:`~repro.stream.workers.WorkerPool`:
+``num_workers=1`` (default) is behaviorally identical to the original
+single-queue engine, ``num_workers=N`` shards the micro-batch queue across
+N key-affine workers with private jit caches and work stealing — and the
+replayed scores stay bit-identical for any N (replay-parity test).
+
+The engine runs a deterministic discrete-event simulation of an N-server
+queue: *virtual* arrival times drive flush triggers and the per-flush
+virtual service model, *real* wall time is measured for each jitted flush,
+and per-request latency = queue wait + service — so benchmark numbers are
+reproducible yet reflect true compute cost.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-import jax
 import numpy as np
 
-from repro.core.lnn import LNNConfig, lnn_stage2_online
+from repro.core.lnn import LNNConfig
 from repro.serve.kvstore import KVStore
 from repro.stream.events import CheckoutEvent
 from repro.stream.ingest import StreamIngester
-from repro.stream.microbatch import MicroBatcher, ScoredResult, ScoreRequest
+from repro.stream.microbatch import ScoredResult, ScoreRequest
 from repro.stream.refresh import RefreshDriver
+from repro.stream.workers import WorkerPool
 
 
 @dataclass
 class EngineConfig:
     k_max: int = 8                  # entity slots per request
-    max_batch: int = 16             # micro-batch size trigger
+    max_batch: int = 16             # micro-batch size trigger (per worker)
     max_wait_s: float = 0.005       # micro-batch deadline trigger (virtual s)
     refresh_every: int = 1          # batch-layer cadence, in closed windows
     entity_history: str = "all"     # DDS history mode (see core.dds)
@@ -50,6 +58,13 @@ class EngineConfig:
     store_capacity: int | None = None    # KV LRU cap (None = unbounded)
     store_ttl_s: float | None = None     # KV TTL (None = no expiry)
     store_shards: int = 4
+    # ------------------------------------------------- multi-worker speed layer
+    num_workers: int = 1            # sharded micro-batch queues (1 = classic)
+    service_model_s: float = 0.0    # virtual service time per flush (0 = instant)
+    steal_threshold: int | None = None   # queue depth that triggers stealing
+    # None = auto: entity-affine KV shards (num_shards == num_workers) when
+    # num_workers > 1, classic key-spread shards otherwise
+    shard_by_entity: bool | None = None
 
 
 class StreamingEngine:
@@ -57,16 +72,18 @@ class StreamingEngine:
 
     ``submit(event)`` ingests one :class:`CheckoutEvent` (growing the
     incremental DDS, triggering batch-layer refreshes on window close) and
-    returns whatever :class:`ScoredResult` lists the event's arrival flushed
-    out of the micro-batch queue; ``flush()`` force-drains the queue and
+    returns whatever :class:`ScoredResult` lists completed by the event's
+    arrival — in submission order, reassembled by the pool's reorder
+    buffer; ``flush()`` force-drains every worker queue and
     ``replay(events)`` drives a whole stream and returns a
     :class:`ReplayReport`.
 
-    Per micro-batch flush the speed layer makes one versioned KV multi-get
-    and ONE jitted stage-2 dispatch (``lnn_stage2_online`` — the fused
+    Per micro-batch flush a worker makes one versioned KV multi-get and ONE
+    jitted stage-2 dispatch (``lnn_stage2_online`` — the fused
     ``kernels.stage2_score`` Pallas launch when ``cfg.use_pallas``); the
     order tower is folded into that call, so the hot path is a single
-    fixed-shape kernel per flush.
+    fixed-shape kernel per flush, per worker, each worker with its own jit
+    cache.
     """
 
     def __init__(self, params, cfg: LNNConfig, engine_cfg: EngineConfig | None = None,
@@ -74,67 +91,63 @@ class StreamingEngine:
         self.params = params
         self.cfg = cfg
         self.ecfg = engine_cfg or EngineConfig()
+        by_entity = self.ecfg.shard_by_entity
+        if by_entity is None:
+            by_entity = self.ecfg.num_workers > 1
         self.store = store or KVStore(
             cfg.hidden_dim,
             capacity=self.ecfg.store_capacity,
             ttl_seconds=self.ecfg.store_ttl_s,
-            num_shards=self.ecfg.store_shards,
+            # entity-affine mode: one KV shard per worker, placed by the
+            # same rendezvous hash the router uses (key-affinity)
+            num_shards=(self.ecfg.num_workers if by_entity
+                        else self.ecfg.store_shards),
+            shard_by_entity=by_entity,
         )
         self.ingester = StreamIngester(
             cfg.feat_dim,
             entity_history=self.ecfg.entity_history,
             max_history=self.ecfg.max_history,
         )
+        self.pool = WorkerPool(
+            params, cfg, self.store,
+            num_workers=self.ecfg.num_workers,
+            k_max=self.ecfg.k_max,
+            max_batch=self.ecfg.max_batch,
+            max_wait_s=self.ecfg.max_wait_s,
+            service_model_s=self.ecfg.service_model_s,
+            steal_threshold=self.ecfg.steal_threshold,
+        )
         self.refresher = RefreshDriver(
             params, cfg, self.store, self.ingester,
             max_deg=self.ecfg.max_deg,
             refresh_every=self.ecfg.refresh_every,
             async_mode=self.ecfg.async_refresh,
-        )
-        self.batcher = MicroBatcher(
-            self._score_batch,
-            max_batch=self.ecfg.max_batch,
-            max_wait_s=self.ecfg.max_wait_s,
-        )
-        self._stage2 = jax.jit(
-            lambda p, emb, mask, feats: lnn_stage2_online(
-                p, self.cfg, emb, mask, feats
-            )
+            router=self.pool.router,
         )
 
     # ------------------------------------------------------------- speed layer
     def _score_batch(self, feats: np.ndarray, entity_t_lists: list):
         """[B, F] features + per-row (entity, t_e) lists -> (probs, staleness).
 
-        One KV multi-get (with snapshot fallback) and one jitted stage-2
-        call (tower folded in) — the checkout-approval hot path."""
-        emb, mask, stale = self.store.lookup_batch_versioned(
-            entity_t_lists, self.ecfg.k_max
-        )
-        f = np.ascontiguousarray(feats, np.float32)
-        logits = self._stage2(self.params, emb, mask, f)
-        probs = np.asarray(jax.nn.sigmoid(logits))
-        return probs, stale.max(axis=1)
+        Worker 0's scorer — one KV multi-get (with snapshot fallback) and
+        one jitted stage-2 call, the checkout-approval hot path.  Kept as
+        the direct entry the benches and parity tests drive."""
+        return self.pool.workers[0].scorer(feats, entity_t_lists)
 
     def warmup(self):
-        """Compile every micro-batch bucket shape up front (cold-start off
-        the measured path).  Buckets are the pow2 sizes capped at max_batch
-        — exactly what ``bucket_size`` can produce, including a
-        non-power-of-two max_batch itself."""
-        from repro.stream.microbatch import bucket_size
-
-        feat_dim = self.cfg.feat_dim
-        buckets = sorted({bucket_size(n, self.ecfg.max_batch)
-                          for n in range(1, self.ecfg.max_batch + 1)})
-        for b in buckets:
-            self._score_batch(np.zeros((b, feat_dim), np.float32),
-                              [[] for _ in range(b)])
+        """Compile every micro-batch bucket shape on every worker up front
+        (cold-start off the measured path).  Buckets are the pow2 sizes
+        floored at 2 and capped at max_batch — exactly what
+        ``bucket_size`` can produce."""
+        self.pool.warmup()
 
     # ----------------------------------------------------------------- events
     def submit(self, event: CheckoutEvent) -> list[ScoredResult]:
-        """Ingest one event and return any requests whose flush it triggered
-        (deadline flushes for older queued requests fire first)."""
-        out = self.batcher.poll(event.arrival)
+        """Ingest one event and return any requests whose flush completed by
+        its arrival (deadline flushes for older queued requests fire first,
+        then work stealing, then this event's own size trigger)."""
+        out = self.pool.poll(event.arrival)
         ing = self.ingester.ingest(event)
         if ing.closed_window is not None:
             self.refresher.on_windows_closed(ing.closed_window)
@@ -144,18 +157,16 @@ class StreamingEngine:
             arrival=event.arrival,
             tag=event,
         )
-        out.extend(self.batcher.submit(req, event.arrival))
+        out.extend(self.pool.submit(req, event.arrival))
         return out
 
     def flush(self, now: float | None = None) -> list[ScoredResult]:
-        """Force-drain the queue (stream end).  Without an explicit ``now``
-        the flush is stamped at the queue's deadline — the residual batch
-        would have flushed then anyway, so its recorded queue waits match
+        """Force-drain every worker queue (stream end).  Without an explicit
+        ``now`` each residual batch is stamped at its own queue's deadline —
+        it would have flushed then anyway, so recorded queue waits match
         the timer semantics instead of collapsing to zero."""
         self.refresher.drain()
-        if now is None:
-            now = self.batcher.deadline() or 0.0
-        return self.batcher.flush(now)
+        return self.pool.flush(now)
 
     # ------------------------------------------------------------------ replay
     def replay(self, events, warmup: bool = True) -> "ReplayReport":
@@ -209,14 +220,18 @@ class ReplayReport:
     def summary(self) -> dict:
         eng = self.engine
         lat = self.latencies_s()
+        pool = eng.pool.stats
         service = float(np.mean([r.service_s for r in self.results])) \
             if self.results else 0.0
         return {
             "events": eng.ingester.num_events,
             "scored": len(self.results),
-            "flushes": eng.batcher.stats["flushes"],
-            "size_flushes": eng.batcher.stats["size_flushes"],
-            "deadline_flushes": eng.batcher.stats["deadline_flushes"],
+            "num_workers": eng.pool.num_workers,
+            "flushes": pool["flushes"],
+            "size_flushes": pool["size_flushes"],
+            "deadline_flushes": pool["deadline_flushes"],
+            "steals": pool["steals"],
+            "stolen_requests": pool["stolen_requests"],
             "mean_batch": float(np.mean([r.batch_size for r in self.results]))
             if self.results else 0.0,
             "latency_ms": self.percentiles_ms(),
@@ -227,4 +242,5 @@ class ReplayReport:
             "store_size": len(eng.store),
             "store_stats": dict(eng.store.stats),
             "mean_latency_ms": float(lat.mean() * 1e3) if lat.size else 0.0,
+            "workers": eng.pool.worker_summary(),
         }

@@ -17,7 +17,7 @@ enough to sit on the hot path (O(K·history) per event).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core.dds import DDSGraph, IncrementalDDSBuilder
 from repro.stream.events import CheckoutEvent

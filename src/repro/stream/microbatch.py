@@ -9,14 +9,21 @@ them as one fixed-shape batch when either trigger fires:
   (virtual seconds), bounding tail latency under light traffic.
 
 Flushed batches are right-padded up to the next power-of-two bucket
-(1, 2, 4, ..., max_batch) so the jit cache holds O(log max_batch) shapes
+(2, 4, ..., max_batch) so the jit cache holds O(log max_batch) shapes
 forever — no recompiles under arbitrary traffic, the classic serving-engine
 shape-bucketing trick.  Padding rows carry zero features and empty key
 lists; their scores are sliced off before results are returned, so batched
 scores are bit-identical to unbatched ones (tested).
+
+The queue is guarded by a lock: the multi-worker pool's work stealing
+(:meth:`MicroBatcher.take`) and the async refresh thread may drain or grow
+the queue between a flush trigger firing and the flush popping the batch.
+A flush that loses that race simply emits nothing — it never scores an
+empty batch and never inflates the flush counters (regression-tested).
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 
@@ -29,6 +36,7 @@ class ScoreRequest:
     entity_keys: list             # [(entity, t_e)]
     arrival: float                # virtual arrival time (s)
     tag: object = None            # caller-opaque id (e.g. CheckoutEvent)
+    seq: int = -1                 # submission order (pool reorder key)
 
 
 @dataclass
@@ -39,11 +47,20 @@ class ScoredResult:
     queued_s: float               # arrival -> flush trigger (virtual)
     service_s: float              # batch compute wall time (shared)
     batch_size: int               # real requests in the flush
+    worker: int = 0               # speed-layer worker that scored the flush
 
 
 def bucket_size(n: int, max_batch: int) -> int:
-    """Next power-of-two >= n, capped at max_batch."""
-    b = 1
+    """Smallest power-of-two >= n, floored at 2, capped at max_batch.
+
+    The floor of 2 is a determinism guarantee, not a perf knob: XLA CPU
+    lowers a batch-1 matmul through a gemv path whose reduction order
+    differs bitwise from the gemm used at batch >= 2, so singleton flushes
+    are padded to bucket 2 — every request's score is then bit-identical
+    no matter which flush composition it rode in.  That invariance is what
+    makes N-worker replay scores equal single-worker scores exactly
+    (``tests/test_stream.py`` replay-parity)."""
+    b = 2
     while b < n and b < max_batch:
         b *= 2
     return min(b, max_batch)
@@ -58,7 +75,9 @@ class MicroBatcher:
     ``poll(now)`` deadline-flushes once the oldest request has waited
     ``max_wait_s``, and ``flush(now)`` drains unconditionally.  Flushes are
     right-padded to the next power-of-two bucket (``bucket_size``) so the
-    jit cache holds O(log max_batch) shapes.
+    jit cache holds O(log max_batch) shapes.  ``enqueue``/``take`` are the
+    policy-free primitives the multi-worker pool composes: enqueue without
+    flushing, and atomically steal the oldest queued requests.
     """
 
     def __init__(self, score_fn, max_batch: int = 16, max_wait_s: float = 0.005):
@@ -68,29 +87,59 @@ class MicroBatcher:
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
         self._queue: list[ScoreRequest] = []
+        self._lock = threading.Lock()
         self.stats = {"flushes": 0, "size_flushes": 0, "deadline_flushes": 0,
-                      "requests": 0, "padded_rows": 0}
+                      "requests": 0, "padded_rows": 0, "empty_flushes": 0,
+                      "stolen": 0}
 
     def __len__(self) -> int:
-        return len(self._queue)
+        with self._lock:
+            return len(self._queue)
 
     @property
     def oldest_arrival(self) -> float | None:
-        return self._queue[0].arrival if self._queue else None
+        with self._lock:
+            return self._queue[0].arrival if self._queue else None
 
     def deadline(self) -> float | None:
         """Virtual time at which the current queue must flush."""
-        return None if not self._queue else self._queue[0].arrival + self.max_wait_s
+        with self._lock:
+            return None if not self._queue \
+                else self._queue[0].arrival + self.max_wait_s
+
+    def nth_arrival(self, i: int) -> float | None:
+        """Arrival time of the i-th oldest queued request (trigger stamps)."""
+        with self._lock:
+            return self._queue[i].arrival if i < len(self._queue) else None
 
     # ------------------------------------------------------------------ queue
+    def enqueue(self, request: ScoreRequest) -> None:
+        """Append without any flush decision (pool-managed workers)."""
+        with self._lock:
+            self._queue.append(request)
+            self.stats["requests"] += 1
+
+    def take(self, n: int) -> list[ScoreRequest]:
+        """Atomically pop up to ``n`` oldest queued requests (work stealing —
+        the thief re-enqueues them on another worker)."""
+        if n <= 0:
+            return []
+        with self._lock:
+            taken, self._queue = self._queue[:n], self._queue[n:]
+            self.stats["stolen"] += len(taken)
+        return taken
+
     def submit(self, request: ScoreRequest, now: float) -> list[ScoredResult]:
         """Enqueue; flush immediately if the size trigger fires."""
-        self._queue.append(request)
-        self.stats["requests"] += 1
-        if len(self._queue) >= self.max_batch:
+        self.enqueue(request)
+        with self._lock:
+            full = len(self._queue) >= self.max_batch
+        if not full:
+            return []
+        out = self.flush(now)
+        if out:
             self.stats["size_flushes"] += 1
-            return self.flush(now)
-        return []
+        return out
 
     def poll(self, now: float) -> list[ScoredResult]:
         """Deadline trigger: flush if the oldest request exceeded max_wait.
@@ -99,17 +148,26 @@ class MicroBatcher:
         fires then), not at ``now`` — otherwise a request's recorded queue
         wait would stretch to the next arrival under light traffic."""
         dl = self.deadline()
-        if dl is not None and now >= dl:
+        if dl is None or now < dl:
+            return []
+        out = self.flush(dl)
+        if out:
             self.stats["deadline_flushes"] += 1
-            return self.flush(dl)
-        return []
+        return out
 
     # ------------------------------------------------------------------ flush
     def flush(self, now: float) -> list[ScoredResult]:
-        """Score everything queued as one padded fixed-shape batch."""
-        if not self._queue:
-            return []
-        batch, self._queue = self._queue[: self.max_batch], self._queue[self.max_batch:]
+        """Score everything queued as one padded fixed-shape batch.
+
+        The pop is atomic and re-checks emptiness: a concurrent drain (work
+        steal, another flush) between the trigger firing and this pop must
+        yield an empty no-op, never a zero-row ``score_fn`` call."""
+        with self._lock:
+            if not self._queue:
+                self.stats["empty_flushes"] += 1
+                return []
+            batch, self._queue = (self._queue[: self.max_batch],
+                                  self._queue[self.max_batch:])
         n = len(batch)
         b = bucket_size(n, self.max_batch)
         feat_dim = batch[0].features.shape[0]

@@ -8,6 +8,15 @@ in-neighborhood is final once snapshot ``t`` closes, so its stage-1
 embedding computed from the *partial* stream equals the one the full batch
 graph would produce — refreshing incrementally loses nothing.
 
+Worker-aware fan-out: when the engine runs a sharded speed layer, the
+driver groups each refresh's puts by the router's entity -> worker map and
+writes shard by shard (``stats["per_shard_written"]``).  With an
+entity-affine store each group touches exactly one KV shard — the write
+pattern a real deployment has, where every worker's KV shard is refreshed
+by its own feed from the batch layer.  The refresh version is global (one
+batch-layer run is one version, however many shards it fans out to), and
+within a group writes stay sorted, so the fan-out is deterministic.
+
 Staleness model: an entity key requested as ``(e, t_e)`` but served from an
 older stored snapshot ``t' < t_e`` is ``t_e - t'`` snapshots stale (the KV
 store tracks this, see ``lookup_batch_versioned``).  Refreshing every
@@ -51,6 +60,7 @@ class RefreshDriver:
         max_deg: int = 32,
         refresh_every: int = 1,
         async_mode: bool = False,
+        router=None,
     ):
         self.params = params
         self.cfg = cfg
@@ -58,6 +68,9 @@ class RefreshDriver:
         self.ingester = ingester
         self.max_deg = max_deg
         self.refresh_every = max(1, int(refresh_every))
+        # anything with worker_of(entity) -> int (stream.workers.ShardRouter);
+        # None = single feed, no fan-out grouping
+        self.router = router
         self.version = 0
         self._stage1 = jax.jit(lambda p, g: lnn_stage1(p, self.cfg, g))
         self._windows_since_refresh = 0
@@ -65,7 +78,7 @@ class RefreshDriver:
         self._pool = ThreadPoolExecutor(max_workers=1) if async_mode else None
         self._inflight = []
         self.stats = {"refreshes": 0, "entities_written": 0, "seconds": 0.0,
-                      "last_budget": 0}
+                      "last_budget": 0, "per_shard_written": {}}
 
     # ----------------------------------------------------------------- policy
     def on_windows_closed(self, closed_window) -> bool:
@@ -110,6 +123,17 @@ class RefreshDriver:
             return {"entities_written": 0, "seconds": 0.0}
         return self._run(pending, dds)
 
+    def _shard_groups(self, pending) -> list[tuple[int, list]]:
+        """Group dirty (entity, t) pairs by owning speed-layer shard, shard
+        order ascending, sorted within each group — the deterministic
+        per-shard write feeds of one batch-layer run."""
+        if self.router is None:
+            return [(0, sorted(pending))]
+        groups: dict[int, list] = {}
+        for pair in pending:
+            groups.setdefault(self.router.worker_of(pair[0]), []).append(pair)
+        return [(s, sorted(groups[s])) for s in sorted(groups)]
+
     def _run(self, pending, dds) -> dict:
         t0 = time.time()
         # pad to a power-of-two node budget so jit recompiles O(log N) times
@@ -117,18 +141,25 @@ class RefreshDriver:
         budget = _pow2_at_least(dds.coo.num_nodes)
         pg = pad_graph(dds.coo, num_nodes=budget, max_deg=self.max_deg)
         h = np.asarray(self._stage1(self.params, pg))
+        groups = self._shard_groups(pending)
         with self._lock:
             self.version += 1
             written = 0
-            for ent, t in pending:
-                nid = dds.entity_snap_ids.get((ent, t))
-                if nid is None:
-                    continue
-                self.store.put(pack_key(ent, t), h[nid], version=self.version)
-                written += 1
+            for shard, pairs in groups:
+                shard_written = 0
+                for ent, t in pairs:
+                    nid = dds.entity_snap_ids.get((ent, t))
+                    if nid is None:
+                        continue
+                    self.store.put(pack_key(ent, t), h[nid], version=self.version)
+                    shard_written += 1
+                per = self.stats["per_shard_written"]
+                per[shard] = per.get(shard, 0) + shard_written
+                written += shard_written
         dt = time.time() - t0
         self.stats["refreshes"] += 1
         self.stats["entities_written"] += written
         self.stats["seconds"] += dt
         self.stats["last_budget"] = budget
-        return {"entities_written": written, "seconds": dt, "version": self.version}
+        return {"entities_written": written, "seconds": dt, "version": self.version,
+                "shards_touched": len(groups)}

@@ -57,7 +57,6 @@ def load_checkpoint(path: str, like):
     """
     with np.load(path) as data:
         step = int(data["__step__"]) if "__step__" in data else None
-        keys = _flatten_with_paths(like)
         restored_flat = []
         paths_leaves = jax.tree_util.tree_flatten_with_path(like)
         for path, leaf in paths_leaves[0]:

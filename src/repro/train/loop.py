@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import NodeType, PaddedGraph
+from repro.core.graph import PaddedGraph
 from repro.core.lnn import LNNConfig, lnn_forward, lnn_init, lnn_loss
 from repro.train.metrics import average_precision, roc_auc
 from repro.train.optim import adamw, cosine_schedule

@@ -5,7 +5,6 @@ import sys
 # backend; only launch/dryrun.py creates the 512 placeholder devices.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
 import pytest
 
 

@@ -66,8 +66,6 @@ def test_deterministic_routing():
 def test_serve_mode_resolution():
     """serve_auto must pick TP-only for small models and FSDP for llama-90b,
     resolved against the FULL depth (the 1-layer-variant bug regression)."""
-    from repro.launch.mesh import make_host_mesh
-
     # use the resolver logic directly with a fake 16-way mesh
     class FakeMesh:
         shape = {"data": 16, "model": 16}

@@ -12,7 +12,7 @@ from repro.core.partition import (
     partition_transactions,
 )
 from repro.data import SynthConfig, generate_transactions, make_split_masks
-from repro.data.pipeline import apply_split_to_batches, build_communities
+from repro.data.pipeline import apply_split_to_batches
 
 
 @settings(max_examples=15, deadline=None)

@@ -15,7 +15,6 @@ from repro.stream import (
     MicroBatcher,
     ScoreRequest,
     StreamingEngine,
-    events_from_static,
 )
 
 
@@ -185,6 +184,145 @@ def test_streaming_fused_stage2_matches_unfused(stream_world):
     assert set(s_fused) == set(s_ref)
     err = max(abs(s_fused[o] - s_ref[o]) for o in s_ref)
     assert err < 1e-5, err
+
+
+# ------------------------------------------------ flush/drain race (regression)
+def test_deadline_flush_racing_concurrent_drain_is_empty_noop():
+    """A deadline flush may race a concurrent drain of the same queue (work
+    stealing, another thread's flush).  The loser must emit nothing: no
+    zero-row score_fn call, no phantom deadline_flushes count."""
+    calls = []
+
+    def score_fn(feats, key_lists):
+        calls.append(feats.shape[0])
+        return np.full(feats.shape[0], 0.5), np.zeros(feats.shape[0], np.int32)
+
+    mb = MicroBatcher(score_fn, max_batch=8, max_wait_s=0.005)
+    mb.submit(_req(arrival=1.0), now=1.0)
+    dl = mb.deadline()
+    assert dl == pytest.approx(1.005)               # trigger armed...
+    stolen = mb.take(1)                             # ...queue drained under it
+    assert len(stolen) == 1
+    out = mb.flush(dl)                  # the armed trigger fires on empty queue
+    assert out == []
+    assert calls == []                              # score_fn never saw 0 rows
+    assert mb.stats["deadline_flushes"] == 0
+    assert mb.stats["flushes"] == 0
+    assert mb.stats["empty_flushes"] == 1
+    assert mb.poll(now=2.0) == []                   # re-poll: nothing queued
+    # the queue still works afterwards
+    out = mb.submit(_req(arrival=3.0), now=3.0) + mb.poll(now=3.1)
+    assert len(out) == 1 and mb.stats["deadline_flushes"] == 1
+
+
+# ------------------------------------------- multi-worker replay parity
+@pytest.mark.parametrize("num_workers", [1, 2, 4])
+def test_replay_parity_nworkers_bit_identical(stream_world, num_workers):
+    """Acceptance: N-worker WorkerPool scores are BIT-identical to the
+    single-worker StreamingEngine for N in {1, 2, 4} — same events, same
+    refresh cadence, arbitrary per-worker flush interleavings."""
+    events, g, cfg, params = stream_world
+    ref = StreamingEngine(params, cfg, EngineConfig(max_batch=8))
+    s_ref = ref.replay(events).scores_by_order()
+    eng = StreamingEngine(params, cfg,
+                          EngineConfig(max_batch=8, num_workers=num_workers))
+    rep = eng.replay(events)
+    s = rep.scores_by_order()
+    assert set(s) == set(s_ref)
+    assert all(s[o] == s_ref[o] for o in s_ref), \
+        max(abs(s[o] - s_ref[o]) for o in s_ref)
+    if num_workers > 1:
+        # the queue really sharded: more than one worker served traffic
+        served = [w for w in rep.summary()["workers"] if w["requests"] > 0]
+        assert len(served) > 1
+
+
+def test_replay_parity_under_randomized_flush_interleavings(stream_world):
+    """Bit-parity must hold for ANY flush interleaving: randomize every
+    knob that changes when and how flushes fire (deadline, batch size,
+    virtual service occupancy, stealing) and replay against the
+    single-worker reference."""
+    events, g, cfg, params = stream_world
+    evs = events[:150]
+    ref = StreamingEngine(params, cfg, EngineConfig(max_batch=8))
+    s_ref = ref.replay(evs).scores_by_order()
+    rng = np.random.default_rng(0)
+    for trial in range(4):
+        ecfg = EngineConfig(
+            num_workers=int(rng.integers(2, 5)),
+            max_batch=int(rng.choice([4, 8, 16])),
+            max_wait_s=float(rng.choice([0.001, 0.005, 0.02])),
+            service_model_s=float(rng.choice([0.0, 0.01, 0.05])),
+            steal_threshold=int(rng.choice([6, 10])),
+        )
+        s = StreamingEngine(params, cfg, ecfg).replay(evs).scores_by_order()
+        assert set(s) == set(s_ref)
+        assert all(s[o] == s_ref[o] for o in s_ref), (trial, ecfg)
+
+
+def test_multiworker_results_arrive_in_submission_order(stream_world):
+    events, g, cfg, params = stream_world
+    eng = StreamingEngine(params, cfg, EngineConfig(max_batch=8, num_workers=4))
+    rep = eng.replay(events[:120])
+    seqs = [r.request.seq for r in rep.results]
+    assert seqs == sorted(seqs) == list(range(len(seqs)))
+
+
+def test_multiworker_work_stealing_preserves_scores(stream_world):
+    """Drive a slow-worker scenario (virtual service model) so shards back
+    up and stealing engages; scores must still match the reference."""
+    events, g, cfg, params = stream_world
+    evs = events[:150]
+    ref = StreamingEngine(params, cfg, EngineConfig(max_batch=8))
+    s_ref = ref.replay(evs).scores_by_order()
+    eng = StreamingEngine(params, cfg, EngineConfig(
+        max_batch=8, num_workers=4, service_model_s=0.05, steal_threshold=10))
+    rep = eng.replay(evs)
+    s = rep.scores_by_order()
+    assert eng.pool.pool_stats["steals"] > 0
+    assert all(s[o] == s_ref[o] for o in s_ref)
+    # stolen requests really were served off their affine worker
+    off_affine = [r for r in rep.results
+                  if r.worker != eng.pool.router.route(r.request.entity_keys)]
+    assert 0 < len(off_affine) <= eng.pool.pool_stats["stolen_requests"]
+
+
+def test_live_pool_reshard_preserves_scores_and_affinity(stream_world):
+    """Resharding a live pool mid-stream (drain -> router+store+workers
+    migrate together) keeps scores bit-identical and the affinity contract
+    intact; resharding the router alone is caught, never silent."""
+    events, g, cfg, params = stream_world
+    ref = StreamingEngine(params, cfg, EngineConfig(max_batch=8))
+    s_ref = ref.replay(events).scores_by_order()
+
+    eng = StreamingEngine(params, cfg, EngineConfig(max_batch=8, num_workers=2))
+    eng.warmup()
+    results = []
+    half = len(events) // 2
+    for ev in events[:half]:
+        results.extend(eng.submit(ev))
+    results.extend(eng.pool.reshard(4))       # drained under the old topology
+    assert eng.pool.num_workers == 4 and len(eng.pool.workers) == 4
+    assert eng.store.num_shards == 4          # store migrated with the router
+    from repro.serve.kvstore import pack_key
+    for ent in range(50):
+        assert (eng.store.shard_of(pack_key(ent, 0))
+                == eng.pool.router.worker_of(ent))
+    for ev in events[half:]:
+        results.extend(eng.submit(ev))
+    results.extend(eng.flush())
+    scores = {r.request.tag.order_id: r.score for r in results}
+    assert set(scores) == set(s_ref)
+    assert all(scores[o] == s_ref[o] for o in s_ref)
+
+    # router resharded out from under the pool -> loud failure, not silence
+    # (both directions: grown past the pool and shrunk below it)
+    for n0, n1 in ((2, 8), (4, 2)):
+        bad = StreamingEngine(params, cfg,
+                              EngineConfig(max_batch=8, num_workers=n0))
+        bad.pool.router.reshard(n1)
+        with pytest.raises(RuntimeError, match="WorkerPool.reshard"):
+            bad.submit(events[0])
 
 
 def test_engine_cold_start_scores_without_history():

@@ -13,7 +13,7 @@ from hypothesis import given, settings, strategies as st
 from repro.train.metrics import average_precision, roc_auc
 from repro.train.optim import adamw, clip_by_global_norm, cosine_schedule
 from repro.train.checkpoint import load_checkpoint, save_checkpoint
-from repro.utils.padding import ceil_div, pad_axis_to, pad_to_multiple
+from repro.utils.padding import pad_axis_to, pad_to_multiple
 
 
 # ------------------------------------------------------------------- metrics
@@ -67,7 +67,8 @@ def test_adamw_minimizes_quadratic():
     init_fn, update_fn = adamw(0.1, weight_decay=0.0)
     params = {"w": jnp.asarray([3.0, -2.0])}
     state = init_fn(params)
-    loss = lambda p: jnp.sum(jnp.square(p["w"] - jnp.asarray([1.0, 1.0])))
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - jnp.asarray([1.0, 1.0])))
     for _ in range(200):
         grads = jax.grad(loss)(params)
         params, state, _ = update_fn(grads, state, params)

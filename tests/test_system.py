@@ -1,7 +1,6 @@
 """End-to-end behaviour test for the paper's system: synthetic data ->
 partition -> DDS -> short LNN training -> the paper's Table-3 ordering
 (LNN beats the tabular baselines on ring-structured fraud)."""
-import jax
 import numpy as np
 import pytest
 

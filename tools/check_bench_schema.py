@@ -1,0 +1,141 @@
+"""Benchmark-record schema gate (the CI ``bench-smoke`` job).
+
+Validates the structure of the emitted ``experiments/BENCH_*.json`` records
+so a refactor can't silently drop a metric (schema drift) or ship a
+benchmark that crashes only on full runs.  Checks presence and type of
+every load-bearing field; numeric fields must be finite numbers.  The
+multiworker record's ``parity.bit_identical`` flag is asserted True — the
+replay-parity invariant is a gate, not a statistic.
+
+Run:  python tools/check_bench_schema.py [paths...]
+Default paths: experiments/BENCH_streaming.json, BENCH_stage2.json,
+BENCH_multiworker.json.  Exit 1 with a per-record report on any violation.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+DEFAULT_RECORDS = [
+    "experiments/BENCH_streaming.json",
+    "experiments/BENCH_stage2.json",
+    "experiments/BENCH_multiworker.json",
+]
+
+PCTS = ("p50", "p95", "p99")
+
+
+def _num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool) \
+        and math.isfinite(x)
+
+
+def _require(errors, cond: bool, msg: str) -> None:
+    if not cond:
+        errors.append(msg)
+
+
+def check_streaming(d: dict) -> list[str]:
+    e: list[str] = []
+    _require(e, _num(d.get("n_events")), "n_events: finite number required")
+    thr = d.get("throughput")
+    _require(e, isinstance(thr, dict) and thr, "throughput: non-empty dict")
+    for name, t in (thr or {}).items():
+        for k in ("events_per_s", "us_per_event"):
+            _require(e, _num(t.get(k)), f"throughput[{name}].{k}: number")
+    _require(e, _num(d.get("microbatch_speedup")), "microbatch_speedup: number")
+    lat = d.get("latency")
+    _require(e, isinstance(lat, dict) and lat, "latency: non-empty dict")
+    for name, rec in (lat or {}).items():
+        for k in PCTS:
+            _require(e, _num(rec.get(k)), f"latency[{name}].{k}: number")
+    curve = d.get("staleness_curve")
+    _require(e, isinstance(curve, list) and curve, "staleness_curve: non-empty list")
+    for i, p in enumerate(curve or []):
+        for k in ("refresh_every", "staleness_mean", "stale_frac"):
+            _require(e, _num(p.get(k)), f"staleness_curve[{i}].{k}: number")
+    return e
+
+
+def check_stage2(d: dict) -> list[str]:
+    e: list[str] = []
+    _require(e, isinstance(d.get("config"), dict), "config: dict required")
+    per = d.get("per_batch")
+    _require(e, isinstance(per, dict) and per, "per_batch: non-empty dict")
+    for b, r in (per or {}).items():
+        for k in ("unfused_us", "fused_us", "pallas_interpret_us", "speedup",
+                  "gflops", "arith_intensity", "v5e_roofline_us"):
+            _require(e, _num(r.get(k)), f"per_batch[{b}].{k}: number")
+    _require(e, isinstance(d.get("note"), str), "note: string required")
+    return e
+
+
+def check_multiworker(d: dict) -> list[str]:
+    e: list[str] = []
+    _require(e, _num(d.get("n_events")), "n_events: finite number required")
+    cfg = d.get("config") or {}
+    for k in ("service_model_s", "steal_threshold", "max_batch"):
+        _require(e, _num(cfg.get(k)), f"config.{k}: number")
+    sweep = d.get("sweep")
+    _require(e, isinstance(sweep, list) and sweep, "sweep: non-empty list")
+    for i, p in enumerate(sweep or []):
+        for k in ("num_workers", "events_per_s_wall", "mean_latency_ms",
+                  "steals", "stolen_requests", "steal_rate",
+                  "max_queue_depth", "mean_queue_depth"):
+            _require(e, _num(p.get(k)), f"sweep[{i}].{k}: number")
+        lat = p.get("latency_ms") or {}
+        for k in PCTS:
+            _require(e, _num(lat.get(k)), f"sweep[{i}].latency_ms.{k}: number")
+        _require(e, isinstance(p.get("per_worker_requests"), list),
+                 f"sweep[{i}].per_worker_requests: list")
+    par = d.get("parity") or {}
+    _require(e, par.get("bit_identical") is True,
+             "parity.bit_identical: must be True (replay-parity gate)")
+    _require(e, _num(par.get("checked_events")), "parity.checked_events: number")
+    return e
+
+
+CHECKERS = {
+    "BENCH_streaming.json": check_streaming,
+    "BENCH_stage2.json": check_stage2,
+    "BENCH_multiworker.json": check_multiworker,
+}
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or DEFAULT_RECORDS
+    failed = False
+    for rel in paths:
+        # resolve against CWD, like the benches that write the records —
+        # the gate must inspect what the run just produced, never a stale
+        # copy at some other root
+        path = Path(rel)
+        checker = CHECKERS.get(path.name)
+        if checker is None:
+            print(f"FAIL {rel}: no schema registered for {path.name}")
+            failed = True
+            continue
+        if not path.exists():
+            print(f"FAIL {rel}: record missing (bench did not emit it)")
+            failed = True
+            continue
+        try:
+            record = json.loads(path.read_text())
+        except json.JSONDecodeError as exc:
+            print(f"FAIL {rel}: invalid JSON ({exc})")
+            failed = True
+            continue
+        errors = checker(record)
+        for err in errors:
+            print(f"FAIL {rel}: {err}")
+        failed |= bool(errors)
+    if failed:
+        return 1
+    print(f"bench schema OK ({len(paths)} records)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
