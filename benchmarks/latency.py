@@ -19,8 +19,8 @@ def run_latency(n_requests: int = 200):
     from repro.core import LNNConfig, lnn_forward, lnn_init
     from repro.data import SynthConfig, build_communities, generate_transactions, make_split_masks
     from repro.data.pipeline import standardize_features
-    from repro.serve import LambdaPipeline
-    from repro.serve.lambda_pipeline import BatchLayer
+    from repro.serve import history_requests
+    from repro.service import FraudService, ModelSection, ServiceConfig
 
     scfg = SynthConfig(num_users=300, num_rings=6, feature_noise=0.8, seed=0)
     g, _ = generate_transactions(scfg)
@@ -31,33 +31,37 @@ def run_latency(n_requests: int = 200):
     cfg = LNNConfig(num_gnn_layers=3, hidden_dim=64, feat_dim=feats.shape[1])
     params = lnn_init(jax.random.PRNGKey(0), cfg)
 
-    pipe = LambdaPipeline(params, cfg, k_max=8)
-    refresh_stats = pipe.refresh(batches)
+    svc = FraudService(
+        ServiceConfig(mode="batch", model=ModelSection.from_lnn_config(cfg)),
+        params=params).build().warmup()
+    refresh_stats = svc.refresh(batches)
 
-    # build request stream from real orders
+    # build request stream from real orders (and remember each owner
+    # community for the monolithic comparison)
     requests, owners = [], []
     for b in batches:
-        for o, hops in b.dds.last_hop.items():
-            keys = [(BatchLayer._global_entity(b, ent), t) for ent, t, _ in hops]
-            requests.append({"features": np.asarray(b.graph.features[o]),
-                             "entity_keys": keys})
+        for r in history_requests([b]):
+            requests.append(r)
             owners.append(b)
             if len(requests) >= n_requests:
                 break
         if len(requests) >= n_requests:
             break
 
+    def score(reqs):
+        return np.asarray([resp.score for resp in svc.score(reqs)])
+
     # --- speed layer (lambda path), single-request latency -----------------
-    pipe.score(requests[:1])                       # warm the jit
+    score(requests[:1])                            # warm the jit
     t0 = time.time()
     for r in requests:
-        pipe.score([r])
+        score([r])
     lam_ms = (time.time() - t0) / len(requests) * 1e3
 
     # --- batched speed layer ------------------------------------------------
-    pipe.score(requests)                           # warm the batch-shape jit
+    score(requests)                                # warm the batch-shape jit
     t0 = time.time()
-    pipe.score(requests)
+    score(requests)
     lam_batch_ms = (time.time() - t0) / len(requests) * 1e3
 
     # --- monolithic: full community forward per request ---------------------

@@ -45,6 +45,10 @@ def _streaming_rows(csv_rows, stream) -> None:
     par = stream["multiworker"]["parity"]
     csv_rows.append(("multiworker/parity", "",
                      f"bit_identical={par['bit_identical']}"))
+    pb = stream["refresh_put_batch"]
+    csv_rows.append(("streaming/put_batch_speedup",
+                     f"{pb['put_batch_s']*1e6/max(1, pb['n']):.2f}",
+                     f"{pb['speedup']:.1f}x"))
 
 
 def _stage2_rows(csv_rows, s2) -> None:

@@ -15,7 +15,13 @@ Drives synthetic checkout streams through the full engine
   steal-rate counters vs worker count N under a virtual per-flush service
   cost — the N-server queueing win of sharding the micro-batch queue, plus
   the replay bit-parity check.  Lands in
-  ``experiments/BENCH_multiworker.json``.
+  ``experiments/BENCH_multiworker.json``;
+* **batched refresh puts**: per-embedding ``KVStore.put`` loop vs one
+  ``put_batch`` call (what ``BatchLayer.refresh`` / ``RefreshDriver`` now
+  use) — single lock/clock acquisition amortized over a whole refresh.
+
+Every engine here is constructed through the one ``ServiceConfig`` artifact
+(``repro.service``) — no hand-wired kwargs.
 
 Run:  PYTHONPATH=src python benchmarks/streaming_bench.py [--smoke]
 JSON lands in experiments/BENCH_streaming.json + BENCH_multiworker.json
@@ -35,10 +41,45 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 
-def _fresh_engine(params, cfg, **kw):
-    from repro.stream import EngineConfig, StreamingEngine
+def _fresh_service(params, cfg, *, max_batch=16, max_wait_s=0.005,
+                   refresh_every=1, num_workers=1, service_model_s=0.0,
+                   steal_threshold=None, store_shards=4):
+    """Construct a streaming FraudService from ONE ServiceConfig artifact —
+    the only way benches build engines now."""
+    from repro.service import FraudService, ModelSection, ServiceConfig
 
-    return StreamingEngine(params, cfg, EngineConfig(**kw))
+    sc = ServiceConfig(
+        mode="streaming", model=ModelSection.from_lnn_config(cfg),
+    ).replace(
+        engine={"max_batch": max_batch, "max_wait_s": max_wait_s,
+                "num_workers": num_workers,
+                "service_model_s": service_model_s,
+                "steal_threshold": steal_threshold},
+        store={"num_shards": store_shards},
+        refresh={"refresh_every": refresh_every},
+    )
+    return FraudService(sc, params=params).build()
+
+
+def run_put_batch_bench(dim: int = 64, n: int = 20000, shards: int = 4) -> dict:
+    """Refresh write path: per-embedding ``put`` loop vs one ``put_batch``
+    (single lock + clock acquisition, one eviction sweep per shard)."""
+    from repro.serve.kvstore import KVStore, pack_key
+
+    vals = np.random.default_rng(0).standard_normal((n, dim)).astype(np.float32)
+    keys = [pack_key(i, 0) for i in range(n)]
+    loop_store = KVStore(dim, num_shards=shards)
+    t0 = time.perf_counter()
+    for k, v in zip(keys, vals):
+        loop_store.put(k, v, version=1)
+    loop_s = time.perf_counter() - t0
+    batch_store = KVStore(dim, num_shards=shards)
+    t0 = time.perf_counter()
+    batch_store.put_batch(keys, vals, version=1)
+    batch_s = time.perf_counter() - t0
+    assert len(batch_store) == len(loop_store) == n
+    return {"n": n, "dim": dim, "loop_put_s": loop_s, "put_batch_s": batch_s,
+            "speedup": loop_s / batch_s}
 
 
 def run_streaming_bench(
@@ -78,8 +119,9 @@ def run_streaming_bench(
     # ---- throughput: closed loop (arrivals never throttle the engine) ------
     # one ingest+refresh pass populates the store; scoring is then re-driven
     # back-to-back per batch size so only the speed-layer path is timed.
-    eng = _fresh_engine(params, cfg, max_batch=max(batch_sizes), refresh_every=1)
-    eng.replay(events)
+    svc = _fresh_service(params, cfg, max_batch=max(batch_sizes), refresh_every=1)
+    svc.replay(events)
+    eng = svc.engine
     key_lists = [eng.ingester.builder.entity_keys(ev.entities, ev.snapshot)
                  for ev in events]
     feats = np.stack([ev.features for ev in events]).astype(np.float32)
@@ -119,9 +161,8 @@ def run_streaming_bench(
     lat = {}
     for rate in loads_per_s:
         evs, _, _ = generate_event_stream(scfg, rate_per_s=rate)
-        e = _fresh_engine(params, cfg, max_batch=16, max_wait_s=0.005,
-                          refresh_every=1)
-        rep = e.replay(evs)
+        rep = _fresh_service(params, cfg, max_batch=16, max_wait_s=0.005,
+                             refresh_every=1).replay(evs)
         s = rep.summary()
         lat[f"load_{int(rate)}eps"] = {
             **s["latency_ms"],
@@ -136,16 +177,16 @@ def run_streaming_bench(
     labels = np.asarray([ev.label for ev in events])
     curve = []
     for every in refresh_intervals:
-        e = _fresh_engine(params, cfg, max_batch=16, refresh_every=every)
-        rep = e.replay(events)
+        lazy = _fresh_service(params, cfg, max_batch=16, refresh_every=every)
+        rep = lazy.replay(events)
         scores_by_order = rep.scores_by_order()
         scores = np.asarray([scores_by_order[ev.order_id] for ev in events])
         point = {
             "refresh_every": every,
-            "refreshes": e.refresher.stats["refreshes"],
+            "refreshes": lazy.engine.refresher.stats["refreshes"],
             "staleness_mean": rep.staleness_summary()["mean"],
             "stale_frac": rep.staleness_summary()["stale_frac"],
-            "kv_misses": e.store.stats["misses"],
+            "kv_misses": lazy.store.stats["misses"],
         }
         if 0 < labels.sum() < labels.size:
             point["roc_auc"] = roc_auc(labels, scores)
@@ -182,7 +223,6 @@ def run_multiworker_bench(
 
     from repro.core import LNNConfig, lnn_init
     from repro.data import SynthConfig, generate_event_stream
-    from repro.stream import EngineConfig, StreamingEngine
 
     scfg = SynthConfig(num_users=num_users, num_rings=num_rings,
                        feature_noise=0.8, seed=seed)
@@ -204,11 +244,12 @@ def run_multiworker_bench(
     }
 
     for n in worker_counts:
-        eng = StreamingEngine(params, cfg, EngineConfig(
-            max_batch=max_batch, max_wait_s=max_wait_s, num_workers=n,
-            service_model_s=service_model_s, steal_threshold=steal_threshold))
+        svc = _fresh_service(params, cfg, max_batch=max_batch,
+                             max_wait_s=max_wait_s, num_workers=n,
+                             service_model_s=service_model_s,
+                             steal_threshold=steal_threshold)
         t0 = time.perf_counter()
-        rep = eng.replay(events)
+        rep = svc.replay(events)
         wall = time.perf_counter() - t0
         s = rep.summary()
         workers = s["workers"]
@@ -231,14 +272,14 @@ def run_multiworker_bench(
 
     # replay bit-parity: the acceptance invariant, checked on a prefix
     evs = events[:parity_events]
-    ref = StreamingEngine(params, cfg, EngineConfig(max_batch=max_batch))
+    ref = _fresh_service(params, cfg, max_batch=max_batch)
     s_ref = ref.replay(evs).scores_by_order()
     bit_identical = True
     for n in worker_counts:
-        eng = StreamingEngine(params, cfg, EngineConfig(
-            max_batch=max_batch, num_workers=n,
-            service_model_s=service_model_s, steal_threshold=steal_threshold))
-        s_n = eng.replay(evs).scores_by_order()
+        svc = _fresh_service(params, cfg, max_batch=max_batch, num_workers=n,
+                             service_model_s=service_model_s,
+                             steal_threshold=steal_threshold)
+        s_n = svc.replay(evs).scores_by_order()
         bit_identical &= (set(s_n) == set(s_ref)
                           and all(s_n[o] == s_ref[o] for o in s_ref))
     out["parity"] = {"bit_identical": bool(bit_identical),
@@ -269,9 +310,11 @@ def main(smoke: bool = False) -> dict:
                                 train_epochs=0)
         mw = run_multiworker_bench(num_users=60, num_rings=2,
                                    worker_counts=(1, 2), parity_events=60)
+        r["refresh_put_batch"] = run_put_batch_bench(n=5000)
     else:
         r = run_streaming_bench()
         mw = run_multiworker_bench()
+        r["refresh_put_batch"] = run_put_batch_bench()
     print("\n# Streaming serving engine")
     for bs, t in r["throughput"].items():
         print(f"  throughput/{bs}: {t['events_per_s']:.0f} events/s "
@@ -286,6 +329,10 @@ def main(smoke: bool = False) -> dict:
         print(f"  staleness/refresh_every={p['refresh_every']}: "
               f"mean={p['staleness_mean']:.2f} snapshots, "
               f"stale_frac={p['stale_frac']:.2f}{auc}")
+    pb = r["refresh_put_batch"]
+    print(f"  refresh writes: {pb['n']} embeddings, put-loop "
+          f"{pb['loop_put_s']*1e3:.1f}ms vs put_batch "
+          f"{pb['put_batch_s']*1e3:.1f}ms ({pb['speedup']:.1f}x)")
     _print_multiworker(mw)
     # smoke records land in experiments/smoke/ so a local `--smoke` run can
     # never clobber the curated full-run records

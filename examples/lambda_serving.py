@@ -1,12 +1,15 @@
-"""Lambda serving demo: the paper's production architecture.
+"""Lambda serving demo: the paper's production architecture, behind the one
+typed serving API (``repro.service``).
 
-Trains a small LNN, then:
-  1. BATCH LAYER — periodic stage-1 refresh pushes entity embeddings into
-     the key-value store;
-  2. SPEED LAYER — simulated checkout stream scored online with one KV
-     lookup per linked entity (no graph traversal);
+Trains a small LNN, builds a ``FraudService`` in ``mode="batch"`` from a
+single ``ServiceConfig`` artifact, then:
+  1. BATCH LAYER — ``service.refresh`` pushes entity embeddings into the
+     key-value store (one batched, model-version-stamped put per community);
+  2. SPEED LAYER — a simulated checkout stream scored online through typed
+     ``ScoreRequest``/``ScoreResponse`` (one KV lookup per linked entity,
+     no graph traversal);
   3. proves the two-stage scores equal the monolithic GNN forward, and
-     reports the latency gap.
+     reports the latency gap plus the service's structured stats.
 
 Run:  PYTHONPATH=src python examples/lambda_serving.py
 """
@@ -22,8 +25,8 @@ from repro.core import LNNConfig
 from repro.data import (SynthConfig, build_communities, generate_transactions,
                         make_split_masks)
 from repro.data.pipeline import standardize_features
-from repro.serve import LambdaPipeline
-from repro.serve.lambda_pipeline import BatchLayer
+from repro.serve import history_requests
+from repro.service import FraudService, ModelSection, ServiceConfig
 from repro.train.loop import train_lnn
 
 
@@ -39,38 +42,42 @@ def main():
     print("== training a small LNN ==")
     res = train_lnn(batches, split, cfg, epochs=15, patience=5)
 
-    pipe = LambdaPipeline(res.params, cfg, k_max=8)
+    # ONE artifact describes the whole service; save/load it like a model
+    config = ServiceConfig(mode="batch",
+                           model=ModelSection.from_lnn_config(cfg))
+    print("\n== building the FraudService from one ServiceConfig artifact ==")
+    svc = FraudService(config, params=res.params).build().warmup()
+    print(f"   lifecycle state: {svc.state}  (build -> warmup -> serve)")
 
     print("\n== batch layer: periodic entity-embedding refresh ==")
-    stats = pipe.refresh(batches)
+    stats = svc.refresh(batches)
     print(f"   wrote {stats['entities_written']} entity embeddings "
           f"in {stats['seconds']:.2f}s -> KV store size {stats['store_size']}")
 
     print("\n== correctness: two-stage == monolithic ==")
-    worst = pipe.score_equivalence_check(batches)
+    worst = svc.score_equivalence_check(batches)
     print(f"   max |online - full forward| = {worst:.2e}")
 
     print("\n== speed layer: scoring a checkout stream ==")
-    requests = []
-    for b in batches:
-        for o, hops in b.dds.last_hop.items():
-            keys = [(BatchLayer._global_entity(b, ent), t) for ent, t, _ in hops]
-            requests.append({"features": np.asarray(b.graph.features[o]),
-                             "entity_keys": keys})
-    requests = requests[:300]
-    pipe.score(requests[:1])   # warm jit
+    requests = history_requests(batches)[:300]
+    svc.score(requests[:1])   # warm jit
     lat = []
     risky = 0
     for r in requests:
         t0 = time.time()
-        p = pipe.score([r])[0]
+        resp = svc.score([r])[0]
         lat.append((time.time() - t0) * 1e3)
-        risky += p > 0.5
+        risky += resp.score > 0.5
     lat = np.asarray(lat)
     print(f"   {len(requests)} checkouts, {risky} flagged risky")
     print(f"   latency p50={np.percentile(lat, 50):.2f}ms "
           f"p95={np.percentile(lat, 95):.2f}ms p99={np.percentile(lat, 99):.2f}ms")
-    print(f"   KV store stats: {pipe.store.stats}")
+    st = svc.stats()
+    print(f"   service stats: {st.scored} scored under model v{st.model_version}, "
+          f"KV {st.store_stats}")
+    svc.drain()
+    svc.close()
+    print(f"   closed cleanly (state: {svc.state})")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,20 @@
-"""Streaming serving demo: the Lambda loop closed end-to-end.
+"""Streaming serving demo: the Lambda loop closed end-to-end behind the one
+typed serving API (``repro.service``).
 
-Replays a synthetic checkout stream through the real-time engine:
+Replays a synthetic checkout stream through a ``FraudService`` in
+``mode="streaming"``, built from a single ``ServiceConfig`` artifact:
 
   1. INGEST       — each event extends the DDS graph incrementally
                     (no-future-leak invariant held at every prefix);
   2. BATCH LAYER  — the refresh driver re-runs LNN stage 1 when snapshot
-                    windows close, pushing versioned entity embeddings into
-                    the sharded KV store;
+                    windows close, pushing versioned, model-stamped entity
+                    embeddings into the sharded KV store;
   3. SPEED LAYER  — concurrent checkouts coalesce into fixed-shape
-                    micro-batches (size- and deadline-triggered flushes) and
-                    score through one jitted stage-2 call;
+                    micro-batches and score through one jitted stage-2 call;
   4. proves the streamed micro-batched scores equal the monolithic
-    ``lnn_forward`` over the final graph, then shows the staleness
-    trade-off when the batch layer refreshes lazily.
+     ``lnn_forward``, shows the staleness trade-off, the 4-worker sharded
+     speed layer (bit-identical scores), a live **model hot-swap**
+     mid-stream, and **admission control** under overload.
 
 Run:  PYTHONPATH=src python examples/streaming_serving.py
 """
@@ -27,7 +29,7 @@ import numpy as np
 from repro.core import LNNConfig, lnn_forward
 from repro.core.graph import pad_graph
 from repro.data import SynthConfig, build_communities, generate_event_stream
-from repro.stream import EngineConfig, StreamingEngine
+from repro.service import FraudService, ModelSection, ServiceConfig
 from repro.train.loop import train_lnn
 
 
@@ -43,10 +45,15 @@ def main():
     comm = build_communities(g, community_size=256, max_deg=24)
     res = train_lnn(comm, split, cfg, epochs=15, patience=5)
 
-    print(f"\n== replaying {len(events)} checkout events through the engine ==")
-    eng = StreamingEngine(res.params, cfg, EngineConfig(
-        max_batch=16, max_wait_s=0.005, refresh_every=1, store_shards=4))
-    report = eng.replay(events)
+    # the whole engine in one serializable artifact
+    config = ServiceConfig(
+        mode="streaming", model=ModelSection.from_lnn_config(cfg),
+    ).replace(engine={"max_batch": 16, "max_wait_s": 0.005},
+              store={"num_shards": 4}, refresh={"refresh_every": 1})
+
+    print(f"\n== replaying {len(events)} checkout events through the service ==")
+    svc = FraudService(config, params=res.params).build()
+    report = svc.replay(events)
     s = report.summary()
     print(f"   scored {s['scored']} checkouts in {s['flushes']} micro-batches "
           f"(mean batch {s['mean_batch']:.1f}; "
@@ -61,7 +68,7 @@ def main():
     print(f"   {risky} checkouts flagged risky")
 
     print("\n== correctness: streamed scores == monolithic forward ==")
-    pg = pad_graph(eng.ingester.materialize().coo, max_deg=32)
+    pg = pad_graph(svc.engine.ingester.materialize().coo, max_deg=32)
     full = np.asarray(jax.nn.sigmoid(
         jax.jit(lambda p, gg: lnn_forward(p, cfg, gg))(res.params, pg)))
     scores = report.scores_by_order()
@@ -69,20 +76,22 @@ def main():
     print(f"   max |streamed - monolithic| = {err:.2e}")
 
     print("\n== staleness: refreshing every 6 windows instead of every 1 ==")
-    lazy = StreamingEngine(res.params, cfg, EngineConfig(
-        max_batch=16, refresh_every=6))
+    lazy = FraudService(config.replace(refresh={"refresh_every": 6}),
+                        params=res.params).build()
     lazy_rep = lazy.replay(events)
     st = lazy_rep.staleness_summary()
-    print(f"   {lazy.refresher.stats['refreshes']} refreshes "
+    print(f"   {lazy.engine.refresher.stats['refreshes']} refreshes "
           f"(vs {s['refreshes']}); stale lookups: {st['stale_frac']:.0%}, "
           f"mean staleness {st['mean']:.2f} snapshots, max {st['max']}")
     print(f"   KV fallback stats: {lazy.store.stats['stale_hits']} stale hits, "
           f"{lazy.store.stats['misses']} cold misses")
 
     print("\n== multi-worker speed layer: 4 key-affine workers ==")
-    mw = StreamingEngine(res.params, cfg, EngineConfig(
-        max_batch=16, num_workers=4, service_model_s=0.004,
-        steal_threshold=24))
+    mw = FraudService(
+        config.replace(engine={"max_batch": 16, "num_workers": 4,
+                               "service_model_s": 0.004,
+                               "steal_threshold": 24}),
+        params=res.params).build()
     mw_rep = mw.replay(events)
     ms = mw_rep.summary()
     mw_scores = mw_rep.scores_by_order()
@@ -95,6 +104,37 @@ def main():
     bit_identical = all(mw_scores[o] == scores[o] for o in scores)
     print(f"   scores bit-identical to the single-worker engine: "
           f"{bit_identical}")
+
+    print("\n== versioned model hot-swap, mid-stream ==")
+    swap = FraudService(config, params=res.params).build().warmup()
+    out = []
+    half = len(events) // 2
+    for ev in events[:half]:
+        out.extend(swap.submit(ev))
+    v = swap.load_model(jax.tree_util.tree_map(np.asarray, res.params))
+    for ev in events[half:]:
+        out.extend(swap.submit(ev))
+    out.extend(swap.drain())
+    swapped = sum(1 for r in out if r.model_version == v)
+    same = all(r.score == scores[r.request.tag.order_id] for r in out)
+    print(f"   activated v{v} after {half} events: {swapped} checkouts scored "
+          f"on the new version, {len(out) - swapped} finished on v0")
+    print(f"   identical-weights swap left every score bit-identical: {same}")
+    print(f"   model-stale KV reads detected: "
+          f"{swap.store.stats['model_stale_reads']}")
+
+    print("\n== admission control: shed vs block under overload ==")
+    overload = config.replace(engine={"max_batch": 16, "num_workers": 2,
+                                      "service_model_s": 0.05})
+    for policy in ("shed", "block"):
+        adm = FraudService(
+            overload.replace(admission={"max_queue_depth": 8,
+                                        "policy": policy}),
+            params=res.params).build()
+        adm.replay(events)
+        a = adm.stats()
+        print(f"   policy={policy}: {a.scored} scored, {a.shed} shed, "
+              f"{a.blocked} blocked (peak depth {a.queue_depth_peak})")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,11 @@
 """The paper's own model: LNN on DDS graphs (fraud detection).
 
 Not part of the transformer zoo; exposes the LNNConfig used by the paper
-reproduction benchmarks and examples.
+reproduction benchmarks and examples, plus the canonical ``ServiceConfig``
+serving artifacts built on it (``repro.service``).
 """
 from repro.core.lnn import LNNConfig
+from repro.service import ModelSection, ServiceConfig
 
 CONFIG = LNNConfig(
     gnn_type="gcn",
@@ -13,3 +15,13 @@ CONFIG = LNNConfig(
     feat_dim=48,          # 12 raw + 36 GBDT-encoded (paper §4.2 encoding)
     pos_weight=3.0,
 )
+
+# the one serving artifact benches/examples derive from (`.replace(...)`
+# for local overrides): same model, streaming Lambda loop, exact refresh
+SERVICE = ServiceConfig(
+    mode="streaming",
+    model=ModelSection.from_lnn_config(CONFIG),
+)
+
+# offline batch/speed split over a static store (the old LambdaPipeline)
+SERVICE_BATCH = SERVICE.replace(mode="batch")

@@ -1,4 +1,23 @@
-from repro.serve.kvstore import KVStore
-from repro.serve.lambda_pipeline import BatchLayer, SpeedLayer, LambdaPipeline
+"""``repro.serve`` — KV store + the offline batch/speed Lambda split.
 
-__all__ = ["KVStore", "BatchLayer", "SpeedLayer", "LambdaPipeline"]
+``LambdaPipeline`` is a deprecation shim: new code constructs a
+``repro.service.FraudService`` with ``mode="batch"`` (see
+docs/serving_api.md); ``BatchLayer``/``SpeedLayer`` remain the real layers
+the facade wraps."""
+from repro.serve.kvstore import KVStore
+from repro.serve.lambda_pipeline import (
+    BatchLayer,
+    LambdaPipeline,
+    SpeedLayer,
+    history_requests,
+    split_equivalence_check,
+)
+
+__all__ = [
+    "BatchLayer",
+    "KVStore",
+    "LambdaPipeline",
+    "SpeedLayer",
+    "history_requests",
+    "split_equivalence_check",
+]

@@ -68,12 +68,16 @@ def entity_shard(entity: int, num_shards: int) -> int:
 
 
 class _Entry:
-    __slots__ = ("value", "version", "stamp")
+    __slots__ = ("value", "version", "stamp", "model_version")
 
-    def __init__(self, value, version, stamp):
+    def __init__(self, value, version, stamp, model_version=0):
         self.value = value
         self.version = version
         self.stamp = stamp
+        # which parameter version computed this embedding: a hot-swapped
+        # model makes pre-swap embeddings detectably stale (see
+        # lookup_batch_versioned's expected_model_version)
+        self.model_version = model_version
 
 
 class KVStore:
@@ -113,7 +117,8 @@ class KVStore:
         # consistent with the shards.  RLock: batched reads call get().
         self._lock = threading.RLock()
         self.stats = {"puts": 0, "gets": 0, "misses": 0,
-                      "evictions": 0, "expired": 0, "stale_hits": 0}
+                      "evictions": 0, "expired": 0, "stale_hits": 0,
+                      "model_stale_reads": 0}
 
     # ---------------------------------------------------------------- shards
     def shard_of(self, key: int) -> int:
@@ -163,12 +168,13 @@ class KVStore:
                 del self._snaps[ent]
 
     # ----------------------------------------------------------------- write
-    def put(self, key: int, value: np.ndarray, version: int = 0):
+    def put(self, key: int, value: np.ndarray, version: int = 0,
+            model_version: int = 0):
         key = int(key)
         with self._lock:
             shard = self._shards[self.shard_of(key)]
             shard[key] = _Entry(np.asarray(value, np.float32), int(version),
-                                self._clock())
+                                self._clock(), int(model_version))
             shard.move_to_end(key)
             self._index_add(key)
             self.stats["puts"] += 1
@@ -180,9 +186,37 @@ class KVStore:
                     self._index_drop(old_key)
                     self.stats["evictions"] += 1
 
-    def put_batch(self, keys, values, version: int = 0):
-        for k, v in zip(keys, values):
-            self.put(int(k), v, version)
+    def put_batch(self, keys, values, version: int = 0,
+                  model_version: int = 0) -> int:
+        """Write many (key, value) pairs under ONE lock acquisition and one
+        clock read — the batch-layer refresh path.  Per-entry ``put`` pays
+        lock + clock + eviction scan per embedding; a refresh writing
+        thousands of entities amortizes all three here (eviction runs once
+        per touched shard at the end).  Returns the number written.
+        """
+        keys = [int(k) for k in keys]
+        version, model_version = int(version), int(model_version)
+        with self._lock:
+            stamp = self._clock()
+            touched = set()
+            for k, v in zip(keys, values):
+                s = self.shard_of(k)
+                shard = self._shards[s]
+                shard[k] = _Entry(np.asarray(v, np.float32), version, stamp,
+                                  model_version)
+                shard.move_to_end(k)
+                self._index_add(k)
+                touched.add(s)
+            self.stats["puts"] += len(keys)
+            if self.capacity is not None:
+                cap = max(1, self.capacity // self.num_shards)
+                for s in touched:
+                    shard = self._shards[s]
+                    while len(shard) > cap:
+                        old_key, _ = shard.popitem(last=False)
+                        self._index_drop(old_key)
+                        self.stats["evictions"] += 1
+        return len(keys)
 
     # ------------------------------------------------------------------ read
     def _entry(self, key: int, touch: bool = True) -> _Entry | None:
@@ -246,7 +280,8 @@ class KVStore:
                     mask[i, j] = 1.0
         return emb, mask
 
-    def lookup_batch_versioned(self, entity_t_lists: list, k_max: int):
+    def lookup_batch_versioned(self, entity_t_lists: list, k_max: int,
+                               expected_model_version: int | None = None):
         """Speed-layer lookup with snapshot fallback.
 
         ``entity_t_lists``: per request, a list of ``(entity, t_e)`` pairs.
@@ -255,6 +290,11 @@ class KVStore:
         staleness is ``t_e - t_found`` snapshots; truly cold entities stay
         masked with staleness -1.
 
+        ``expected_model_version``: when given, every served slot whose
+        embedding was written by a *different* parameter version counts in
+        ``stats["model_stale_reads"]`` — after a hot-swap, reads of
+        pre-swap embeddings are detectable, not silent.
+
         Returns (emb [B, K, H], mask [B, K], staleness [B, K] int32).
         """
         b = len(entity_t_lists)
@@ -262,10 +302,12 @@ class KVStore:
         mask = np.zeros((b, k_max), np.float32)
         stale = np.full((b, k_max), -1, np.int32)
         with self._lock:
-            self._lookup_versioned_into(entity_t_lists, k_max, emb, mask, stale)
+            self._lookup_versioned_into(entity_t_lists, k_max, emb, mask,
+                                        stale, expected_model_version)
         return emb, mask, stale
 
-    def _lookup_versioned_into(self, entity_t_lists, k_max, emb, mask, stale):
+    def _lookup_versioned_into(self, entity_t_lists, k_max, emb, mask, stale,
+                               expected_model_version=None):
         for i, pairs in enumerate(entity_t_lists):
             for j, (ent, t_e) in enumerate(pairs[:k_max]):
                 self.stats["gets"] += 1
@@ -282,6 +324,9 @@ class KVStore:
                 stale[i, j] = int(t_e) - int(t_found)
                 if t_found != t_e:
                     self.stats["stale_hits"] += 1
+                if (expected_model_version is not None
+                        and e.model_version != expected_model_version):
+                    self.stats["model_stale_reads"] += 1
 
     def __len__(self):
         with self._lock:
@@ -303,8 +348,10 @@ class KVStore:
         )
         versions = np.asarray([e.version for _, e in items], np.int64)
         stamps = np.asarray([e.stamp for _, e in items], np.float64)
+        model_versions = np.asarray([e.model_version for _, e in items], np.int64)
         np.savez(path, keys=keys, values=vals.astype(np.float32),
-                 versions=versions, stamps=stamps, dim=self.dim)
+                 versions=versions, stamps=stamps,
+                 model_versions=model_versions, dim=self.dim)
 
     @classmethod
     def load(cls, path: str, **kwargs) -> "KVStore":
@@ -313,10 +360,12 @@ class KVStore:
             n = len(data["keys"])
             versions = data["versions"] if "versions" in data else np.zeros(n, np.int64)
             stamps = data["stamps"] if "stamps" in data else None
+            model_versions = (data["model_versions"] if "model_versions" in data
+                              else np.zeros(n, np.int64))
             values = data["values"].astype(np.float32)
             for i, (k, v, ver) in enumerate(zip(data["keys"], values, versions)):
                 k = int(k)
-                store.put(k, v, int(ver))
+                store.put(k, v, int(ver), model_version=int(model_versions[i]))
                 if stamps is not None:
                     # restore the original write time: TTL must keep counting
                     # from the real put, not restart at load

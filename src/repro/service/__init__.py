@@ -1,0 +1,64 @@
+"""``repro.service`` — the one typed serving API.
+
+* :class:`ServiceConfig` (+ its sections) — a single serializable config
+  tree subsuming ``LNNConfig`` + ``EngineConfig`` + KV-store kwargs, with
+  JSON round-trip and unknown-key rejection;
+* :class:`ScoreRequest` / :class:`ScoreResponse` / :class:`ServiceStats` —
+  the typed request/response vocabulary shared by every path;
+* :class:`FraudService` — one facade with an explicit lifecycle
+  (``build -> warmup -> serve -> drain -> close``), ``mode="batch"`` or
+  ``mode="streaming"``, versioned model hot-swap, and admission control.
+
+See ``docs/serving_api.md`` for the lifecycle diagram and the migration
+table from the legacy entry points.
+
+Exports resolve lazily (PEP 562): ``repro.service.types`` stays importable
+from ``repro.stream``/``repro.serve`` leaf modules without a cycle, and
+importing just the config machinery doesn't drag the whole engine in.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "AdmissionSection",
+    "EngineSection",
+    "FraudService",
+    "ModelSection",
+    "RefreshSection",
+    "ScoreRequest",
+    "ScoreResponse",
+    "ServiceConfig",
+    "ServiceLifecycleError",
+    "ServiceStats",
+    "StoreSection",
+    "build_service",
+]
+
+_HOMES = {
+    "AdmissionSection": "repro.service.config",
+    "EngineSection": "repro.service.config",
+    "ModelSection": "repro.service.config",
+    "RefreshSection": "repro.service.config",
+    "ServiceConfig": "repro.service.config",
+    "StoreSection": "repro.service.config",
+    "ScoreRequest": "repro.service.types",
+    "ScoreResponse": "repro.service.types",
+    "ServiceStats": "repro.service.types",
+    "FraudService": "repro.service.service",
+    "ServiceLifecycleError": "repro.service.service",
+    "build_service": "repro.service.service",
+}
+
+
+def __getattr__(name: str):
+    home = _HOMES.get(name)
+    if home is None:
+        raise AttributeError(f"module 'repro.service' has no attribute {name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(home), name)
+    globals()[name] = value    # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

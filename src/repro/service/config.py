@@ -1,0 +1,238 @@
+"""``ServiceConfig`` — one serializable config tree for every serving path.
+
+Before ``repro.service`` existed, each entry point re-assembled
+``params + LNNConfig + EngineConfig + KVStore kwargs`` by hand: the batch
+pipeline took (cfg, k_max, store), the streaming engine took (cfg,
+EngineConfig, store), and every benchmark wired its own variant.
+``ServiceConfig`` subsumes all of them in five sections:
+
+* :class:`ModelSection`     — the LNN itself (mirrors ``LNNConfig``);
+* :class:`EngineSection`    — speed-layer scheduling: micro-batch triggers,
+  worker count, virtual service model, DDS ingest knobs;
+* :class:`StoreSection`     — KV store: capacity / TTL / sharding;
+* :class:`RefreshSection`   — batch-layer cadence and threading;
+* :class:`AdmissionSection` — overload policy: queue-depth / in-flight caps
+  with shed-vs-block.
+
+The tree round-trips through ``to_dict``/``from_dict`` and JSON
+(``to_json``/``from_json``, ``save``/``load``), with **unknown-key
+rejection** at every level — a typo'd artifact fails loudly at load time,
+never as a silently-defaulted knob.  One JSON artifact is enough to rebuild
+the exact service anywhere (params travel separately as a checkpoint).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+
+from repro.core.lnn import LNNConfig
+
+
+def _section_from_dict(cls, d: dict, path: str):
+    """Build a section dataclass from a plain dict, rejecting unknown keys
+    (``path`` names the offending subtree in the error)."""
+    if not isinstance(d, dict):
+        raise TypeError(f"{path}: expected a dict, got {type(d).__name__}")
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - names)
+    if unknown:
+        raise ValueError(
+            f"unknown key(s) {unknown} in {path} — valid keys: {sorted(names)}"
+        )
+    return cls(**d)
+
+
+@dataclass(frozen=True)
+class ModelSection:
+    """The LNN model — field-for-field mirror of ``core.lnn.LNNConfig`` so
+    a service artifact fully determines the architecture."""
+
+    gnn_type: str = "gcn"            # 'gcn' | 'gat' | 'sage'
+    num_gnn_layers: int = 3
+    hidden_dim: int = 64
+    mlp_dims: tuple = (64, 32)
+    feat_dim: int = 16
+    use_pallas: bool = False
+    pos_weight: float = 1.0
+
+    def __post_init__(self):
+        # JSON round-trips tuples as lists; normalize back
+        object.__setattr__(self, "mlp_dims", tuple(self.mlp_dims))
+
+    def to_lnn_config(self) -> LNNConfig:
+        return LNNConfig(**dataclasses.asdict(self))
+
+    @classmethod
+    def from_lnn_config(cls, cfg: LNNConfig) -> "ModelSection":
+        return cls(**dataclasses.asdict(cfg))
+
+
+@dataclass(frozen=True)
+class EngineSection:
+    """Speed-layer scheduling + ingest knobs (the old ``EngineConfig``)."""
+
+    k_max: int = 8                  # entity slots per request
+    max_batch: int = 16             # micro-batch size trigger (per worker)
+    max_wait_s: float = 0.005       # micro-batch deadline trigger (virtual s)
+    entity_history: str = "all"     # DDS history mode (see core.dds)
+    max_history: int | None = 8
+    max_deg: int = 32               # padded in-degree for the batch graph
+    num_workers: int = 1            # sharded micro-batch queues (1 = classic)
+    service_model_s: float = 0.0    # virtual service time per flush
+    steal_threshold: int | None = None   # queue depth that triggers stealing
+
+    def __post_init__(self):
+        if self.num_workers < 1:
+            raise ValueError("engine.num_workers must be >= 1")
+        if self.max_batch < 1:
+            raise ValueError("engine.max_batch must be >= 1")
+
+
+@dataclass(frozen=True)
+class StoreSection:
+    """KV store bounds and layout."""
+
+    capacity: int | None = None          # LRU cap (None = unbounded)
+    ttl_seconds: float | None = None     # lazy expiry (None = no expiry)
+    num_shards: int = 4                  # shard-by-key count
+    # None = auto: entity-affine shards (num_shards == num_workers) when
+    # the engine runs multiple workers, classic key-spread otherwise
+    shard_by_entity: bool | None = None
+
+
+@dataclass(frozen=True)
+class RefreshSection:
+    """Batch-layer cadence."""
+
+    refresh_every: int = 1          # closed windows per refresh (1 = exact)
+    async_refresh: bool = False     # stage 1 on a background thread
+
+    def __post_init__(self):
+        if self.refresh_every < 1:
+            raise ValueError("refresh.refresh_every must be >= 1")
+
+
+@dataclass(frozen=True)
+class AdmissionSection:
+    """Overload policy.  ``None`` caps disable the corresponding check.
+
+    * ``max_queue_depth`` — total queued requests across workers a new
+      request may observe; at the cap, ``shed`` rejects it (NaN score,
+      ``admitted=False``) while ``block`` force-flushes the deepest queue
+      until there is room (the producer stalls — backpressure).
+    * ``max_in_flight`` — concurrently busy workers (open virtual service
+      windows); at the cap, ``shed`` rejects, ``block`` admits but counts
+      the stall.
+    """
+
+    max_queue_depth: int | None = None
+    max_in_flight: int | None = None
+    policy: str = "shed"            # 'shed' | 'block'
+
+    def __post_init__(self):
+        if self.policy not in ("shed", "block"):
+            raise ValueError(
+                f"admission.policy must be 'shed' or 'block', got {self.policy!r}"
+            )
+        for name in ("max_queue_depth", "max_in_flight"):
+            v = getattr(self, name)
+            if v is not None and v < 1:
+                raise ValueError(f"admission.{name} must be >= 1 or None")
+
+
+_SECTIONS = {
+    "model": ModelSection,
+    "engine": EngineSection,
+    "store": StoreSection,
+    "refresh": RefreshSection,
+    "admission": AdmissionSection,
+}
+
+
+@dataclass(frozen=True)
+class ServiceConfig:
+    """The one artifact every serving entry point is constructed from."""
+
+    mode: str = "streaming"         # 'batch' | 'streaming'
+    model: ModelSection = field(default_factory=ModelSection)
+    engine: EngineSection = field(default_factory=EngineSection)
+    store: StoreSection = field(default_factory=StoreSection)
+    refresh: RefreshSection = field(default_factory=RefreshSection)
+    admission: AdmissionSection = field(default_factory=AdmissionSection)
+
+    def __post_init__(self):
+        if self.mode not in ("batch", "streaming"):
+            raise ValueError(f"mode must be 'batch' or 'streaming', got {self.mode!r}")
+
+    # ------------------------------------------------------------- conversion
+    def to_lnn_config(self) -> LNNConfig:
+        return self.model.to_lnn_config()
+
+    def to_engine_config(self):
+        """The legacy ``repro.stream.EngineConfig`` equivalent (shim paths
+        and the engine the streaming facade wraps are built from this)."""
+        from repro.stream.engine import EngineConfig
+
+        e, s, r = self.engine, self.store, self.refresh
+        return EngineConfig(
+            k_max=e.k_max, max_batch=e.max_batch, max_wait_s=e.max_wait_s,
+            refresh_every=r.refresh_every, entity_history=e.entity_history,
+            max_history=e.max_history, max_deg=e.max_deg,
+            async_refresh=r.async_refresh, store_capacity=s.capacity,
+            store_ttl_s=s.ttl_seconds, store_shards=s.num_shards,
+            num_workers=e.num_workers, service_model_s=e.service_model_s,
+            steal_threshold=e.steal_threshold, shard_by_entity=s.shard_by_entity,
+        )
+
+    # ---------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServiceConfig":
+        if not isinstance(d, dict):
+            raise TypeError(f"ServiceConfig: expected a dict, got {type(d).__name__}")
+        unknown = sorted(set(d) - set(_SECTIONS) - {"mode"})
+        if unknown:
+            raise ValueError(
+                f"unknown key(s) {unknown} in ServiceConfig — valid keys: "
+                f"{['mode', *sorted(_SECTIONS)]}"
+            )
+        sections = {
+            name: _section_from_dict(sec_cls, d.get(name, {}), f"ServiceConfig.{name}")
+            for name, sec_cls in _SECTIONS.items()
+        }
+        return cls(mode=d.get("mode", "streaming"), **sections)
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ServiceConfig":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "ServiceConfig":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # -------------------------------------------------------------- ergonomics
+    def replace(self, **kwargs) -> "ServiceConfig":
+        """``dataclasses.replace`` convenience accepting section dicts too:
+        ``cfg.replace(engine={"num_workers": 4})`` rebuilds only the named
+        section fields (unknown keys rejected as in ``from_dict``)."""
+        resolved = {}
+        for k, v in kwargs.items():
+            if k in _SECTIONS and isinstance(v, dict):
+                cur = getattr(self, k)
+                merged = {**dataclasses.asdict(cur), **v}
+                resolved[k] = _section_from_dict(
+                    _SECTIONS[k], merged, f"ServiceConfig.{k}")
+            else:
+                resolved[k] = v
+        return dataclasses.replace(self, **resolved)

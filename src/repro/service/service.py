@@ -1,0 +1,428 @@
+"""``FraudService`` — the one serving facade over both Lambda halves.
+
+One class, one explicit lifecycle::
+
+    build() -> warmup() -> serve (score / submit / replay / refresh)
+            -> drain() -> close()
+
+constructed from a single :class:`~repro.service.config.ServiceConfig`
+artifact plus a parameter pytree.  ``mode="batch"`` wraps the offline
+:class:`~repro.serve.lambda_pipeline.BatchLayer` /
+:class:`~repro.serve.lambda_pipeline.SpeedLayer` pair over one KV store;
+``mode="streaming"`` wraps the event-time
+:class:`~repro.stream.engine.StreamingEngine` (and its
+:class:`~repro.stream.workers.WorkerPool`) over the same store design.
+Scores are **bit-identical** to the legacy entry points — the facade calls
+the exact same layers in the exact same order (``tests/test_service.py``).
+
+On top of the legacy paths it adds:
+
+* **versioned model hot-swap** — :meth:`load_model` registers a parameter
+  version; in-flight micro-batches finish on the jit cache they captured,
+  new flushes score under the new version, and batch-layer KV puts are
+  stamped with the model version so post-swap reads of pre-swap embeddings
+  are detectable (``store.stats['model_stale_reads']``);
+* **admission control** — queue-depth / in-flight caps with a
+  shed-vs-block policy, accounted in :class:`~repro.service.types.ServiceStats`.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.serve.kvstore import KVStore
+from repro.service.config import ServiceConfig
+from repro.service.types import ScoreRequest, ScoreResponse, ServiceStats
+
+
+class ServiceLifecycleError(RuntimeError):
+    """An operation was invoked in a lifecycle state that forbids it."""
+
+
+#: states in which serving operations (score/submit/refresh/drain) are legal
+_SERVABLE = ("built", "ready", "serving", "drained")
+
+
+class FraudService:
+    """One typed serving API for the Lambda fraud detector.
+
+    Parameters
+    ----------
+    config:
+        The :class:`ServiceConfig` artifact (or a dict / JSON produced by
+        one — see :meth:`from_artifact`).
+    params:
+        LNN parameter pytree for the initial model version.  May instead be
+        registered later via :meth:`load_model` before :meth:`build`.
+    store:
+        Optional pre-populated :class:`KVStore`; by default the service
+        builds its own from ``config.store``.
+    """
+
+    def __init__(self, config: ServiceConfig, params=None,
+                 store: KVStore | None = None):
+        if isinstance(config, dict):
+            config = ServiceConfig.from_dict(config)
+        self.config = config
+        self.mode = config.mode
+        self._external_store = store
+        self.store: KVStore | None = store
+        self._state = "created"
+        self._models: dict[int, object] = {}
+        self._model_version = 0
+        self._model_swaps = 0
+        self._params = None
+        if params is not None:
+            self.load_model(params, version=0)
+        # admission + traffic accounting (ServiceStats surface)
+        self._acct = {"requests": 0, "scored": 0, "shed": 0, "blocked": 0,
+                      "queue_depth_peak": 0, "in_flight_peak": 0}
+        # mode-specific internals (populated by build)
+        self._engine = None          # streaming
+        self._batch_layer = None     # batch
+        self._speed_layer = None     # batch
+
+    @classmethod
+    def from_artifact(cls, path: str, params=None,
+                      store: KVStore | None = None) -> "FraudService":
+        """Construct from a saved ``ServiceConfig`` JSON artifact."""
+        return cls(ServiceConfig.load(path), params=params, store=store)
+
+    # ------------------------------------------------------------- lifecycle
+    @property
+    def state(self) -> str:
+        return self._state
+
+    def _ensure(self, allowed: tuple, op: str) -> None:
+        if self._state not in allowed:
+            raise ServiceLifecycleError(
+                f"FraudService.{op}() is illegal in state {self._state!r} "
+                f"(allowed: {allowed}); lifecycle is "
+                "build -> warmup -> serve -> drain -> close"
+            )
+
+    def build(self) -> "FraudService":
+        """Construct the store and the mode's serving layers.  Requires a
+        registered model (constructor ``params`` or :meth:`load_model`)."""
+        self._ensure(("created",), "build")
+        if self._params is None:
+            raise ServiceLifecycleError(
+                "build() needs a model: pass params to the constructor or "
+                "call load_model() first")
+        cfg = self.config
+        lnn = cfg.to_lnn_config()
+        if self.mode == "streaming":
+            from repro.stream.engine import StreamingEngine
+
+            self._engine = StreamingEngine(
+                self._params, lnn, cfg.to_engine_config(),
+                store=self._external_store, _via_service=True)
+            self._engine.model_version = self._model_version
+            self._engine.pool.set_model(self._params, self._model_version)
+            self._engine.refresher.set_model(self._params, self._model_version)
+            self.store = self._engine.store
+        else:
+            from repro.serve.lambda_pipeline import BatchLayer, SpeedLayer
+
+            if self.store is None:
+                s = cfg.store
+                self.store = KVStore(
+                    lnn.hidden_dim, capacity=s.capacity,
+                    ttl_seconds=s.ttl_seconds, num_shards=s.num_shards,
+                    shard_by_entity=bool(s.shard_by_entity),
+                )
+            self._batch_layer = BatchLayer(
+                self._params, lnn, self.store,
+                model_version=self._model_version)
+            self._speed_layer = SpeedLayer(
+                self._params, lnn, self.store, cfg.engine.k_max,
+                model_version=self._model_version)
+        self._state = "built"
+        return self
+
+    def warmup(self) -> "FraudService":
+        """Compile every hot-path jit shape up front (cold start off the
+        measured path)."""
+        self._ensure(("built", "ready"), "warmup")
+        if self.mode == "streaming":
+            self._engine.warmup()
+        else:
+            import jax.numpy as jnp
+
+            lnn = self.config.to_lnn_config()
+            k = self.config.engine.k_max
+            # compile the batch-1 stage-2 shape without touching the store
+            self._speed_layer._stage2(
+                self._params,
+                jnp.zeros((1, k, lnn.hidden_dim)), jnp.zeros((1, k)),
+                jnp.zeros((1, lnn.feat_dim)),
+            )
+        self._state = "ready"
+        return self
+
+    def drain(self, now: float | None = None) -> list[ScoreResponse]:
+        """Barrier: finish outstanding work (streaming: join async refreshes
+        and force-flush every worker queue).  The service may keep serving
+        afterwards; ``close()`` ends it for good."""
+        self._ensure(_SERVABLE, "drain")
+        out: list[ScoreResponse] = []
+        if self.mode == "streaming":
+            out = self._engine.flush(now)
+            self._engine.refresher.drain()
+            self._acct["scored"] += len(out)
+        self._state = "drained"
+        return out
+
+    def close(self) -> None:
+        """Terminal: no operation is legal afterwards (idempotent)."""
+        if self._state == "closed":
+            return
+        if self.mode == "streaming" and self._engine is not None \
+                and self._state in _SERVABLE:
+            # never strand queued work on close
+            self._engine.flush()
+            self._engine.refresher.drain()
+        self._state = "closed"
+
+    # -------------------------------------------------------------- hot-swap
+    def load_model(self, params, version: int | None = None) -> int:
+        """Register ``params`` as a model version and activate it.
+
+        In-flight micro-batches finish on the jit cache (and version stamp)
+        they captured at flush entry; every later flush scores under the
+        new version.  Batch-layer KV puts are stamped with the active model
+        version, so reads of embeddings computed by an older model are
+        detectable (``store.stats['model_stale_reads']``).  Versions are
+        kept in a registry; re-activating an old version reuses its
+        still-compiled jit cache.
+        """
+        if self._state == "closed":
+            raise ServiceLifecycleError("load_model() on a closed service")
+        if version is None:
+            version = (max(self._models) + 1) if self._models else 0
+        version = int(version)
+        self._models[version] = params
+        self._params = params
+        self._model_version = version
+        if self._state != "created":
+            self._model_swaps += 1
+            if self.mode == "streaming":
+                self._engine.load_model(params, version)
+            else:
+                self._batch_layer.set_model(params, version)
+                self._speed_layer.set_model(params, version)
+        return version
+
+    @property
+    def model_version(self) -> int:
+        return self._model_version
+
+    def model_versions(self) -> tuple:
+        """Every registered version, ascending."""
+        return tuple(sorted(self._models))
+
+    # ------------------------------------------------------------ batch mode
+    def refresh(self, batches) -> dict:
+        """Batch-layer refresh over community batches (mode='batch')."""
+        self._ensure(_SERVABLE, "refresh")
+        self._require_mode("batch", "refresh")
+        self._state = "serving"
+        return self._batch_layer.refresh(batches)
+
+    def score(self, requests: list) -> list[ScoreResponse]:
+        """Score a request list synchronously (mode='batch').
+
+        Accepts typed :class:`ScoreRequest`s (legacy dicts tolerated).
+        Admission: with ``max_queue_depth = D`` set, ``shed`` rejects
+        requests beyond the first D per call (NaN score,
+        ``admitted=False``); ``block`` scores everything in D-sized
+        chunks, counting the overflow as blocked.
+        """
+        self._ensure(_SERVABLE, "score")
+        self._require_mode("batch", "score")
+        self._state = "serving"
+        reqs = [ScoreRequest.from_legacy(r) for r in requests]
+        self._acct["requests"] += len(reqs)
+        adm = self.config.admission
+        cap = adm.max_queue_depth
+        shed: list[ScoreRequest] = []
+        chunks: list[list[ScoreRequest]]
+        if cap is None or len(reqs) <= cap:
+            chunks = [reqs] if reqs else []
+        elif adm.policy == "shed":
+            chunks, shed = [reqs[:cap]], reqs[cap:]
+            self._acct["shed"] += len(shed)
+        else:  # block: everything scores, in cap-sized waves
+            chunks = [reqs[i:i + cap] for i in range(0, len(reqs), cap)]
+            self._acct["blocked"] += len(reqs) - cap
+        self._acct["queue_depth_peak"] = max(
+            self._acct["queue_depth_peak"], len(reqs))
+        out: list[ScoreResponse] = []
+        for chunk in chunks:
+            probs = self._speed_layer.score(chunk)
+            out.extend(
+                ScoreResponse(request=r, score=float(p),
+                              batch_size=len(chunk),
+                              model_version=self._model_version)
+                for r, p in zip(chunk, probs)
+            )
+        self._acct["scored"] += sum(len(c) for c in chunks)
+        out.extend(
+            ScoreResponse(request=r, score=math.nan, admitted=False,
+                          model_version=self._model_version)
+            for r in shed
+        )
+        return out
+
+    def score_equivalence_check(self, batches, atol: float = 1e-4) -> float:
+        """Two-stage-vs-monolithic bound through the real store
+        (mode='batch'); see ``LambdaPipeline.score_equivalence_check``."""
+        self._ensure(_SERVABLE, "score_equivalence_check")
+        self._require_mode("batch", "score_equivalence_check")
+        from repro.serve.lambda_pipeline import split_equivalence_check
+
+        # drive the speed layer directly: an internal verification replay
+        # must neither count as served traffic nor be subject to admission
+        # shedding (a shed NaN would fail the check spuriously)
+        return split_equivalence_check(
+            self._speed_layer.score,
+            self._params, self.config.to_lnn_config(), batches, atol)
+
+    # -------------------------------------------------------- streaming mode
+    def submit(self, event) -> list[ScoreResponse]:
+        """Ingest one :class:`~repro.stream.events.CheckoutEvent` and return
+        whatever responses completed by its arrival — the legacy engine path
+        with the admission controller between ingest and enqueue."""
+        self._ensure(_SERVABLE, "submit")
+        self._require_mode("streaming", "submit")
+        self._state = "serving"
+        eng, pool, adm = self._engine, self._engine.pool, self.config.admission
+        now = event.arrival
+        out = pool.poll(now)
+        req = eng.ingest(event)
+        self._acct["requests"] += 1
+        self._acct["in_flight_peak"] = max(
+            self._acct["in_flight_peak"], pool.busy_workers(now))
+
+        if not self._admit(req, pool, adm, now, out):
+            self._acct["scored"] += len(out)
+            out.append(ScoreResponse(
+                request=req, score=math.nan, admitted=False,
+                model_version=self._model_version))
+            return out
+        # peak records the depth the admitted request actually observed
+        # (post block-drain), so it never exceeds an enforced cap + 1 frame
+        self._acct["queue_depth_peak"] = max(
+            self._acct["queue_depth_peak"], len(pool) + 1)
+        out.extend(pool.submit(req, now))
+        self._acct["scored"] += len(out)
+        return out
+
+    def _admit(self, req, pool, adm, now: float, out: list) -> bool:
+        """Admission decision for one streaming request.  Returns False to
+        shed.  Block-policy stalls (forced flushes / busy-worker waits) are
+        applied here and counted."""
+        if adm.max_queue_depth is not None and len(pool) >= adm.max_queue_depth:
+            if adm.policy == "shed":
+                self._acct["shed"] += 1
+                return False
+            # block: the producer stalls while the deepest queue drains.
+            # Progress is measured by pool depth, NOT by returned results —
+            # the reorder buffer may withhold a flushed batch until earlier
+            # sequence numbers complete, so an empty return is routine with
+            # multiple workers while the flush itself still freed capacity.
+            self._acct["blocked"] += 1
+            while len(pool) >= adm.max_queue_depth:
+                before = len(pool)
+                out.extend(pool.force_flush_deepest(now))
+                if len(pool) >= before:
+                    break  # every queue empty — nothing left to drain
+        if adm.max_in_flight is not None \
+                and pool.busy_workers(now) >= adm.max_in_flight:
+            if adm.policy == "shed":
+                self._acct["shed"] += 1
+                return False
+            self._acct["blocked"] += 1  # admitted, but the stall is visible
+        return True
+
+    def replay(self, events, warmup: bool = True):
+        """Drive a whole event stream; returns the engine's
+        :class:`~repro.stream.engine.ReplayReport` (admission-shed requests
+        are accounted in :meth:`stats`, not in the report)."""
+        self._ensure(_SERVABLE, "replay")
+        self._require_mode("streaming", "replay")
+        if warmup:
+            # same semantics as the legacy engine replay: compile every
+            # bucket shape before the measured loop (idempotent)
+            self._engine.warmup()
+            if self._state == "built":
+                self._state = "ready"
+        from repro.stream.engine import ReplayReport
+
+        results: list[ScoreResponse] = []
+        for ev in events:
+            results.extend(self.submit(ev))
+        results.extend(self.drain())
+        return ReplayReport(
+            results=[r for r in results if r.admitted], engine=self._engine)
+
+    # ----------------------------------------------------------------- stats
+    def stats(self) -> ServiceStats:
+        """One structured snapshot of the whole service."""
+        acct = self._acct
+        st = ServiceStats(
+            mode=self.mode, state=self._state,
+            model_version=self._model_version,
+            model_versions=self.model_versions(),
+            model_swaps=self._model_swaps,
+            requests=acct["requests"], scored=acct["scored"],
+            shed=acct["shed"], blocked=acct["blocked"],
+            queue_depth_peak=acct["queue_depth_peak"],
+            in_flight_peak=acct["in_flight_peak"],
+        )
+        if self.store is not None:
+            st.store_size = len(self.store)
+            st.store_stats = dict(self.store.stats)
+            st.model_stale_reads = self.store.stats["model_stale_reads"]
+        if self.mode == "streaming" and self._engine is not None:
+            pool = self._engine.pool
+            st.queue_depth = len(pool)
+            st.flushes = pool.stats["flushes"]
+            st.refreshes = self._engine.refresher.stats["refreshes"]
+            st.entities_written = self._engine.refresher.stats["entities_written"]
+            st.extra = {"pool": dict(pool.stats),
+                        "workers": pool.worker_summary()}
+        elif self._batch_layer is not None:
+            st.extra = {"speed_k_max": self.config.engine.k_max}
+        return st
+
+    # ------------------------------------------------------------- internals
+    def _require_mode(self, mode: str, op: str) -> None:
+        if self.mode != mode:
+            raise ServiceLifecycleError(
+                f"FraudService.{op}() requires mode={mode!r}; this service "
+                f"runs mode={self.mode!r}")
+
+    # quiet passthroughs the benches/tests reach for
+    @property
+    def engine(self):
+        """The wrapped StreamingEngine (streaming mode) — internals access
+        for benches and tests; scoring must go through the facade."""
+        return self._engine
+
+    def __enter__(self) -> "FraudService":
+        if self._state == "created":
+            self.build()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def build_service(config: ServiceConfig, params, *,
+                  warmup: bool = False) -> FraudService:
+    """One-liner construction: ``build()`` (and optionally ``warmup()``)."""
+    svc = FraudService(config, params=params).build()
+    return svc.warmup() if warmup else svc
+
+
+__all__ = ["FraudService", "ServiceLifecycleError", "build_service"]

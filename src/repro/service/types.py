@@ -1,0 +1,101 @@
+"""Typed serving-API datatypes — ``repro.service.types``.
+
+One request/response vocabulary for every serving path.  The batch
+pipeline's ``{'features': ..., 'entity_keys': ...}`` dicts and the
+streaming engine's private request class used to be two incompatible
+spellings of the same thing; both now speak :class:`ScoreRequest` /
+:class:`ScoreResponse` (``repro.stream.microbatch`` re-exports them under
+its historical names ``ScoreRequest`` / ``ScoredResult``).
+
+This module is a dependency leaf — numpy only — so ``repro.serve`` and
+``repro.stream`` can both import it without cycles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class ScoreRequest:
+    """One checkout to score.
+
+    ``features`` are the raw order features ([F] float32); ``entity_keys``
+    the exact ``(entity, t_e)`` KV keys of its final-hop in-edges (empty =
+    cold start).  ``arrival`` is the virtual arrival time the streaming
+    scheduler queues on; batch-mode callers may leave it 0.  ``tag`` is a
+    caller-opaque id (the engine stores the :class:`CheckoutEvent` there);
+    ``seq`` is the pool's submission-order reorder key.
+    """
+
+    features: np.ndarray          # [F]
+    entity_keys: list             # [(entity, t_e)]
+    arrival: float = 0.0          # virtual arrival time (s)
+    tag: object = None            # caller-opaque id (e.g. CheckoutEvent)
+    seq: int = -1                 # submission order (pool reorder key)
+
+    @classmethod
+    def from_legacy(cls, r: "ScoreRequest | dict") -> "ScoreRequest":
+        """Accept the pre-`repro.service` dict spelling."""
+        if isinstance(r, ScoreRequest):
+            return r
+        return cls(features=np.asarray(r["features"], np.float32),
+                   entity_keys=list(r["entity_keys"]),
+                   arrival=float(r.get("arrival", 0.0)))
+
+
+@dataclass
+class ScoreResponse:
+    """One scored (or shed) checkout.
+
+    ``model_version`` is the parameter version whose jit cache scored the
+    flush (hot-swap observability); ``admitted=False`` marks a request the
+    admission controller shed — its ``score`` is NaN and it never entered a
+    micro-batch.
+    """
+
+    request: ScoreRequest
+    score: float
+    staleness: int = -1           # max snapshot-staleness over served slots
+    queued_s: float = 0.0         # arrival -> flush trigger (virtual)
+    service_s: float = 0.0        # batch compute wall time (shared)
+    batch_size: int = 1           # real requests in the flush
+    worker: int = 0               # speed-layer worker that scored the flush
+    model_version: int = 0        # param version whose jit cache scored it
+    admitted: bool = True         # False = shed by admission control
+
+
+@dataclass
+class ServiceStats:
+    """One structured snapshot of a :class:`~repro.service.FraudService`.
+
+    Everything a dashboard needs: lifecycle state, admission accounting,
+    model-registry state, micro-batch/flush counters, batch-layer refresh
+    counters, and KV-store internals.  ``to_dict`` flattens for JSON.
+    """
+
+    mode: str = ""                          # "batch" | "streaming"
+    state: str = ""                         # lifecycle state
+    model_version: int = 0                  # active param version
+    model_versions: tuple = ()              # every registered version
+    model_swaps: int = 0                    # load_model calls after build
+    requests: int = 0                       # offered to the service
+    scored: int = 0                         # responses actually scored
+    shed: int = 0                           # rejected by admission (policy=shed)
+    blocked: int = 0                        # stalled by admission (policy=block)
+    queue_depth: int = 0                    # queued right now (streaming)
+    queue_depth_peak: int = 0               # high-water mark since build
+    in_flight_peak: int = 0                 # busy-worker high-water mark
+    flushes: int = 0
+    refreshes: int = 0
+    entities_written: int = 0
+    model_stale_reads: int = 0              # KV hits stamped by an older model
+    store_size: int = 0
+    store_stats: dict = field(default_factory=dict)
+    extra: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        d = dict(self.__dict__)
+        d["model_versions"] = list(self.model_versions)
+        return d

@@ -32,6 +32,7 @@ reproducible yet reflect true compute cost.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -87,9 +88,20 @@ class StreamingEngine:
     """
 
     def __init__(self, params, cfg: LNNConfig, engine_cfg: EngineConfig | None = None,
-                 store: KVStore | None = None):
+                 store: KVStore | None = None, _via_service: bool = False):
+        if not _via_service:
+            # direct construction is the legacy entry point; the facade
+            # (repro.service.FraudService, mode="streaming") wraps this
+            # engine bit-identically and adds lifecycle/hot-swap/admission
+            warnings.warn(
+                "constructing StreamingEngine directly is deprecated; use "
+                "repro.service.FraudService(mode='streaming') — see "
+                "docs/serving_api.md",
+                DeprecationWarning, stacklevel=2,
+            )
         self.params = params
         self.cfg = cfg
+        self.model_version = 0
         self.ecfg = engine_cfg or EngineConfig()
         by_entity = self.ecfg.shard_by_entity
         if by_entity is None:
@@ -132,8 +144,10 @@ class StreamingEngine:
 
         Worker 0's scorer — one KV multi-get (with snapshot fallback) and
         one jitted stage-2 call, the checkout-approval hot path.  Kept as
-        the direct entry the benches and parity tests drive."""
-        return self.pool.workers[0].scorer(feats, entity_t_lists)
+        the direct entry the benches and parity tests drive (the scorer's
+        model-version stamp is dropped here; results carry it)."""
+        probs, staleness, _ = self.pool.workers[0].scorer(feats, entity_t_lists)
+        return probs, staleness
 
     def warmup(self):
         """Compile every micro-batch bucket shape on every worker up front
@@ -142,21 +156,46 @@ class StreamingEngine:
         ``bucket_size`` can produce."""
         self.pool.warmup()
 
+    # --------------------------------------------------------------- hot-swap
+    def load_model(self, params, version: int | None = None) -> int:
+        """Versioned model hot-swap: register ``params`` as the active
+        version on every speed-layer worker AND the refresh driver.
+        In-flight flushes finish on the jit cache they captured at entry;
+        every subsequent flush scores under the new version; subsequent
+        batch-layer puts are stamped with it (so reads of pre-swap
+        embeddings are detectable via ``store.stats['model_stale_reads']``).
+        Returns the version activated (default: current + 1)."""
+        if version is None:
+            version = self.model_version + 1
+        self.params = params
+        self.model_version = int(version)
+        self.pool.set_model(params, self.model_version)
+        self.refresher.set_model(params, self.model_version)
+        return self.model_version
+
     # ----------------------------------------------------------------- events
-    def submit(self, event: CheckoutEvent) -> list[ScoredResult]:
-        """Ingest one event and return any requests whose flush completed by
-        its arrival (deadline flushes for older queued requests fire first,
-        then work stealing, then this event's own size trigger)."""
-        out = self.pool.poll(event.arrival)
+    def ingest(self, event: CheckoutEvent) -> ScoreRequest:
+        """The ingest half of ``submit``: advance the virtual clock is NOT
+        done here — callers poll first.  Extends the DDS, fires the refresh
+        hook on window close, and returns the typed request ready for the
+        pool (the facade's admission controller sits between this and
+        ``pool.submit``)."""
         ing = self.ingester.ingest(event)
         if ing.closed_window is not None:
             self.refresher.on_windows_closed(ing.closed_window)
-        req = ScoreRequest(
+        return ScoreRequest(
             features=np.asarray(event.features, np.float32),
             entity_keys=ing.entity_keys,
             arrival=event.arrival,
             tag=event,
         )
+
+    def submit(self, event: CheckoutEvent) -> list[ScoredResult]:
+        """Ingest one event and return any requests whose flush completed by
+        its arrival (deadline flushes for older queued requests fire first,
+        then work stealing, then this event's own size trigger)."""
+        out = self.pool.poll(event.arrival)
+        req = self.ingest(event)
         out.extend(self.pool.submit(req, event.arrival))
         return out
 
@@ -196,14 +235,15 @@ class ReplayReport:
         return self._lat
 
     def percentiles_ms(self) -> dict:
+        """p50/p95/p99 + mean, all from the one cached latency pass —
+        ``summary`` reads this dict instead of recomputing percentiles and
+        the mean through separate paths."""
         lat = self.latencies_s() * 1e3
         if lat.size == 0:
-            return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
-        return {
-            "p50": float(np.percentile(lat, 50)),
-            "p95": float(np.percentile(lat, 95)),
-            "p99": float(np.percentile(lat, 99)),
-        }
+            return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0}
+        p50, p95, p99 = np.percentile(lat, (50, 95, 99))
+        return {"p50": float(p50), "p95": float(p95), "p99": float(p99),
+                "mean": float(lat.mean())}
 
     def scores_by_order(self) -> dict:
         return {r.request.tag.order_id: r.score for r in self.results}
@@ -219,7 +259,9 @@ class ReplayReport:
 
     def summary(self) -> dict:
         eng = self.engine
-        lat = self.latencies_s()
+        # ONE latency pass: percentiles_ms() carries the mean too, so the
+        # old second walk over latencies_s() for mean_latency_ms is gone
+        pct = self.percentiles_ms()
         pool = eng.pool.stats
         service = float(np.mean([r.service_s for r in self.results])) \
             if self.results else 0.0
@@ -234,13 +276,13 @@ class ReplayReport:
             "stolen_requests": pool["stolen_requests"],
             "mean_batch": float(np.mean([r.batch_size for r in self.results]))
             if self.results else 0.0,
-            "latency_ms": self.percentiles_ms(),
+            "latency_ms": pct,
             "mean_service_ms": service * 1e3,
             "staleness": self.staleness_summary(),
             "refreshes": eng.refresher.stats["refreshes"],
             "entities_written": eng.refresher.stats["entities_written"],
             "store_size": len(eng.store),
             "store_stats": dict(eng.store.stats),
-            "mean_latency_ms": float(lat.mean() * 1e3) if lat.size else 0.0,
+            "mean_latency_ms": pct["mean"],
             "workers": eng.pool.worker_summary(),
         }

@@ -25,29 +25,15 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass
 
 import numpy as np
 
+# the canonical typed request/response — repro.service.types is a numpy-only
+# leaf module, so this import introduces no package cycle.  ScoredResult is
+# the historical streaming name for the service-wide ScoreResponse.
+from repro.service.types import ScoreRequest, ScoreResponse
 
-@dataclass
-class ScoreRequest:
-    features: np.ndarray          # [F]
-    entity_keys: list             # [(entity, t_e)]
-    arrival: float                # virtual arrival time (s)
-    tag: object = None            # caller-opaque id (e.g. CheckoutEvent)
-    seq: int = -1                 # submission order (pool reorder key)
-
-
-@dataclass
-class ScoredResult:
-    request: ScoreRequest
-    score: float
-    staleness: int                # max snapshot-staleness over served slots
-    queued_s: float               # arrival -> flush trigger (virtual)
-    service_s: float              # batch compute wall time (shared)
-    batch_size: int               # real requests in the flush
-    worker: int = 0               # speed-layer worker that scored the flush
+ScoredResult = ScoreResponse
 
 
 def bucket_size(n: int, max_batch: int) -> int:
@@ -89,8 +75,8 @@ class MicroBatcher:
         self._queue: list[ScoreRequest] = []
         self._lock = threading.Lock()
         self.stats = {"flushes": 0, "size_flushes": 0, "deadline_flushes": 0,
-                      "requests": 0, "padded_rows": 0, "empty_flushes": 0,
-                      "stolen": 0}
+                      "forced_flushes": 0, "requests": 0, "padded_rows": 0,
+                      "empty_flushes": 0, "stolen": 0}
 
     def __len__(self) -> int:
         with self._lock:
@@ -179,8 +165,13 @@ class MicroBatcher:
         self.stats["padded_rows"] += b - n
 
         t0 = time.perf_counter()
-        probs, staleness = self.score_fn(feats, key_lists)
+        # scorers may return (probs, staleness) or, when version-aware,
+        # (probs, staleness, model_version) — the version whose jit cache
+        # served this flush (hot-swap observability)
+        out = self.score_fn(feats, key_lists)
         service = time.perf_counter() - t0
+        probs, staleness = out[0], out[1]
+        model_version = int(out[2]) if len(out) > 2 else 0
 
         self.stats["flushes"] += 1
         return [
@@ -191,6 +182,7 @@ class MicroBatcher:
                 queued_s=max(0.0, now - r.arrival),
                 service_s=service,
                 batch_size=n,
+                model_version=model_version,
             )
             for i, r in enumerate(batch)
         ]

@@ -72,6 +72,7 @@ class RefreshDriver:
         # None = single feed, no fan-out grouping
         self.router = router
         self.version = 0
+        self.model_version = 0
         self._stage1 = jax.jit(lambda p, g: lnn_stage1(p, self.cfg, g))
         self._windows_since_refresh = 0
         self._lock = threading.Lock()
@@ -79,6 +80,15 @@ class RefreshDriver:
         self._inflight = []
         self.stats = {"refreshes": 0, "entities_written": 0, "seconds": 0.0,
                       "last_budget": 0, "per_shard_written": {}}
+
+    # --------------------------------------------------------------- hot-swap
+    def set_model(self, params, model_version: int) -> None:
+        """Swap to a new parameter version: refreshes *started* after this
+        call compute with it and stamp their KV puts with it (an async
+        refresh already snapshotted keeps the params it captured)."""
+        with self._lock:
+            self.params = params
+            self.model_version = int(model_version)
 
     # ----------------------------------------------------------------- policy
     def on_windows_closed(self, closed_window) -> bool:
@@ -97,11 +107,15 @@ class RefreshDriver:
         if self._pool is None:
             self.refresh(up_to)
         else:
-            # snapshot the ingester state on the calling thread (it keeps
-            # mutating under new events); only stage 1 + puts go async
+            # snapshot the ingester state AND the active model on the
+            # calling thread (both keep mutating under new events /
+            # hot-swaps); only stage 1 + puts go async
             pending, dds = self._snapshot_graph(up_to)
+            params, model_version = self.params, self.model_version
             if pending:
-                self._inflight.append(self._pool.submit(self._run, pending, dds))
+                self._inflight.append(
+                    self._pool.submit(self._run, pending, dds,
+                                      params, model_version))
         return True
 
     def drain(self):
@@ -121,7 +135,7 @@ class RefreshDriver:
         pending, dds = self._snapshot_graph(up_to_snapshot)
         if not pending:
             return {"entities_written": 0, "seconds": 0.0}
-        return self._run(pending, dds)
+        return self._run(pending, dds, self.params, self.model_version)
 
     def _shard_groups(self, pending) -> list[tuple[int, list]]:
         """Group dirty (entity, t) pairs by owning speed-layer shard, shard
@@ -134,25 +148,28 @@ class RefreshDriver:
             groups.setdefault(self.router.worker_of(pair[0]), []).append(pair)
         return [(s, sorted(groups[s])) for s in sorted(groups)]
 
-    def _run(self, pending, dds) -> dict:
+    def _run(self, pending, dds, params, model_version: int) -> dict:
         t0 = time.time()
         # pad to a power-of-two node budget so jit recompiles O(log N) times
         # over an unbounded stream, not once per event window
         budget = _pow2_at_least(dds.coo.num_nodes)
         pg = pad_graph(dds.coo, num_nodes=budget, max_deg=self.max_deg)
-        h = np.asarray(self._stage1(self.params, pg))
+        h = np.asarray(self._stage1(params, pg))
         groups = self._shard_groups(pending)
         with self._lock:
             self.version += 1
             written = 0
             for shard, pairs in groups:
-                shard_written = 0
-                for ent, t in pairs:
-                    nid = dds.entity_snap_ids.get((ent, t))
-                    if nid is None:
-                        continue
-                    self.store.put(pack_key(ent, t), h[nid], version=self.version)
-                    shard_written += 1
+                # one batched put per shard feed: a single store lock
+                # acquisition per group instead of one per embedding
+                resolved = [(pack_key(ent, t), dds.entity_snap_ids[(ent, t)])
+                            for ent, t in pairs
+                            if (ent, t) in dds.entity_snap_ids]
+                shard_written = self.store.put_batch(
+                    [k for k, _ in resolved],
+                    (h[nid] for _, nid in resolved),
+                    version=self.version, model_version=model_version,
+                ) if resolved else 0
                 per = self.stats["per_shard_written"]
                 per[shard] = per.get(shard, 0) + shard_written
                 written += shard_written

@@ -108,29 +108,57 @@ class Stage2Scorer:
     """The speed-layer scoring callable for one worker: one versioned KV
     multi-get (snapshot fallback + staleness) and ONE jitted stage-2
     dispatch (the fused Pallas launch when ``cfg.use_pallas``).  Each
-    worker owns its own instance, hence its own jit cache."""
+    worker owns its own instance, hence its own jit caches.
 
-    def __init__(self, params, cfg: LNNConfig, store: KVStore, k_max: int):
-        self.params = params
+    The jit cache is **version-aware**: :meth:`set_model` registers a new
+    parameter version under its own ``jax.jit`` wrapper, so swapping back
+    to a previously-served version reuses its still-compiled cache, and a
+    flush that already entered ``__call__`` finishes on the (params,
+    version, jit) triple it captured at entry — in-flight micro-batches
+    complete on the old model, the next flush scores on the new one.
+    """
+
+    def __init__(self, params, cfg: LNNConfig, store: KVStore, k_max: int,
+                 model_version: int = 0):
         self.cfg = cfg
         self.store = store
         self.k_max = int(k_max)
-        self._stage2 = jax.jit(
-            lambda p, emb, mask, feats: lnn_stage2_online(p, cfg, emb, mask, feats)
-        )
+        self._jits: dict[int, object] = {}
+        self.set_model(params, model_version)
+
+    def set_model(self, params, model_version: int) -> None:
+        """Activate a parameter version.  New flushes score under it; the
+        per-version jit wrapper keeps every version's compiled cache warm."""
+        version = int(model_version)
+        if version not in self._jits:
+            cfg = self.cfg
+            self._jits[version] = jax.jit(
+                lambda p, emb, mask, feats: lnn_stage2_online(
+                    p, cfg, emb, mask, feats)
+            )
+        # assign the triple last-to-first so a concurrent flush reading
+        # (params, version, jit) at entry never pairs new params with an
+        # old version stamp
+        self._stage2 = self._jits[version]
+        self.model_version = version
+        self.params = params
 
     def __call__(self, feats: np.ndarray, entity_t_lists: list):
+        # capture the active model ONCE per flush: an in-flight micro-batch
+        # finishes on the version it started with even if set_model lands
+        # mid-flush (async refresh thread / live hot-swap)
+        params, version, stage2 = self.params, self.model_version, self._stage2
         emb, mask, stale = self.store.lookup_batch_versioned(
-            entity_t_lists, self.k_max
+            entity_t_lists, self.k_max, expected_model_version=version
         )
         f = np.ascontiguousarray(feats, np.float32)
-        logits = np.asarray(self._stage2(self.params, emb, mask, f), np.float64)
+        logits = np.asarray(stage2(params, emb, mask, f), np.float64)
         # host-side f64 sigmoid, NOT jax.nn.sigmoid: XLA CPU's vectorized
         # exp rounds differently per array length (bucket 2 vs 4 diverge by
         # 1 ulp), while numpy ufuncs are element-deterministic for any
         # shape — required for the bit-exact replay-parity guarantee
         probs = (1.0 / (1.0 + np.exp(-logits))).astype(np.float32)
-        return probs, stale.max(axis=1)
+        return probs, stale.max(axis=1), version
 
     def warmup(self, max_batch: int):
         """Compile every pow2 bucket shape this worker's batcher can emit."""
@@ -387,7 +415,8 @@ class WorkerPool:
             SpeedLayerWorker(
                 w,
                 Stage2Scorer(tmpl.scorer.params, tmpl.scorer.cfg,
-                             self.store, tmpl.scorer.k_max),
+                             self.store, tmpl.scorer.k_max,
+                             model_version=tmpl.scorer.model_version),
                 max_batch=tmpl.batcher.max_batch,
                 max_wait_s=tmpl.batcher.max_wait_s,
                 service_model_s=tmpl.service_model_s,
@@ -395,6 +424,32 @@ class WorkerPool:
             for w in range(num_workers)
         ]
         return out
+
+    # ------------------------------------------------------------- hot-swap
+    def set_model(self, params, model_version: int) -> None:
+        """Activate a parameter version on every worker.  Flushes already
+        executing finish on the version they captured at entry; every
+        subsequent flush (on any worker) scores under the new one."""
+        for w in self.workers:
+            w.scorer.set_model(params, model_version)
+
+    # ------------------------------------------------------------ admission
+    def busy_workers(self, now: float) -> int:
+        """Workers whose virtual service window is open at ``now`` — the
+        admission controller's in-flight count."""
+        return sum(1 for w in self.workers if not w.free(now))
+
+    def force_flush_deepest(self, now: float) -> list[ScoredResult]:
+        """Flush one batch off the deepest queue at virtual time ``now`` —
+        the admission controller's block policy: the producer stalls while
+        the most backed-up worker drains a batch.  Returns completed
+        results in submission order (empty if every queue is empty)."""
+        victim = max(self.workers, key=lambda w: (len(w), -w.wid))
+        if len(victim) == 0:
+            return []
+        results = victim._flush_at(now, "forced_flushes")
+        self._reorder.add(results)
+        return self._reorder.release()
 
     # ----------------------------------------------------------------- drain
     def flush(self, now: float | None = None) -> list[ScoredResult]:

@@ -160,3 +160,68 @@ def test_sharded_store_spreads_and_serves_identically():
     emb8, m8 = s8.lookup_batch([keys[:5]], k_max=5)
     np.testing.assert_array_equal(emb1, emb8)
     np.testing.assert_array_equal(m1, m8)
+
+
+# ----------------------------------------------------------------- put_batch
+def test_put_batch_matches_put_loop():
+    """One batched write must leave the store byte-for-byte equivalent to
+    the per-entry loop: same values, versions, model stamps, LRU order per
+    shard, and fallback index."""
+    rng = np.random.default_rng(3)
+    keys = [pack_key(e, t) for e in range(30) for t in range(2)]
+    vals = rng.normal(size=(len(keys), 4)).astype(np.float32)
+    loop = KVStore(dim=4, num_shards=4)
+    for k, v in zip(keys, vals):
+        loop.put(k, v, version=5, model_version=2)
+    batch = KVStore(dim=4, num_shards=4)
+    n = batch.put_batch(keys, vals, version=5, model_version=2)
+    assert n == len(keys)
+    assert len(batch) == len(loop)
+    assert batch.stats["puts"] == loop.stats["puts"] == len(keys)
+    for shard_b, shard_l in zip(batch._shards, loop._shards):
+        assert list(shard_b.keys()) == list(shard_l.keys())   # LRU order
+    for k, v in zip(keys, vals):
+        np.testing.assert_array_equal(batch.get(k), v)
+        assert batch.version_of(k) == 5
+    assert batch._snaps == loop._snaps
+    emb_b, _, st_b = batch.lookup_batch_versioned([[(0, 5)]], k_max=1)
+    emb_l, _, st_l = loop.lookup_batch_versioned([[(0, 5)]], k_max=1)
+    np.testing.assert_array_equal(emb_b, emb_l)
+    np.testing.assert_array_equal(st_b, st_l)
+
+
+def test_put_batch_enforces_capacity_per_shard():
+    s = KVStore(dim=1, capacity=4, num_shards=2)
+    keys = [pack_key(e, 0) for e in range(20)]
+    s.put_batch(keys, [np.full(1, float(e)) for e in range(20)])
+    cap = max(1, s.capacity // s.num_shards)
+    assert all(len(shard) <= cap for shard in s._shards)
+    assert len(s) <= s.capacity
+    assert s.stats["evictions"] == 20 - len(s)
+
+
+# ----------------------------------------------------------- model versions
+def test_model_version_stamp_roundtrip(tmp_path):
+    s = KVStore(dim=2)
+    s.put(pack_key(1, 0), np.zeros(2), version=1, model_version=3)
+    s.put_batch([pack_key(2, 0)], [np.ones(2)], version=1, model_version=4)
+    path = os.path.join(tmp_path, "mv.npz")
+    s.save(path)
+    s2 = KVStore.load(path)
+    stamps = {k: s2._shards[s2.shard_of(k)][k].model_version for k in s2.keys()}
+    assert stamps == {pack_key(1, 0): 3, pack_key(2, 0): 4}
+
+
+def test_lookup_versioned_counts_model_stale_reads():
+    """After a hot-swap, reads of embeddings written by an older model are
+    detectable: expected_model_version flags every mismatched slot."""
+    s = KVStore(dim=2)
+    s.put(pack_key(1, 0), np.zeros(2), model_version=0)
+    s.put(pack_key(2, 0), np.ones(2), model_version=1)
+    s.lookup_batch_versioned([[(1, 0), (2, 0)]], k_max=2)
+    assert s.stats["model_stale_reads"] == 0      # no expectation, no count
+    s.lookup_batch_versioned([[(1, 0), (2, 0)]], k_max=2,
+                             expected_model_version=1)
+    assert s.stats["model_stale_reads"] == 1      # only the v0 slot
+    s.lookup_batch_versioned([[(1, 0)]], k_max=1, expected_model_version=0)
+    assert s.stats["model_stale_reads"] == 1      # matching reads stay silent

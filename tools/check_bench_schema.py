@@ -56,6 +56,9 @@ def check_streaming(d: dict) -> list[str]:
     for i, p in enumerate(curve or []):
         for k in ("refresh_every", "staleness_mean", "stale_frac"):
             _require(e, _num(p.get(k)), f"staleness_curve[{i}].{k}: number")
+    pb = d.get("refresh_put_batch") or {}
+    for k in ("n", "loop_put_s", "put_batch_s", "speedup"):
+        _require(e, _num(pb.get(k)), f"refresh_put_batch.{k}: number")
     return e
 
 
