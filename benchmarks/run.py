@@ -49,6 +49,11 @@ def _streaming_rows(csv_rows, stream) -> None:
     csv_rows.append(("streaming/put_batch_speedup",
                      f"{pb['put_batch_s']*1e6/max(1, pb['n']):.2f}",
                      f"{pb['speedup']:.1f}x"))
+    rf = stream["refresh_scope"]
+    csv_rows.append(("refresh/community_local", "",
+                     f"nodes_speedup_final={rf['nodes_speedup_final']:.1f}x,"
+                     f"sublinear={rf['sublinear']},"
+                     f"parity={rf['parity']['bit_identical']}"))
 
 
 def _stage2_rows(csv_rows, s2) -> None:
@@ -75,7 +80,7 @@ def run_smoke() -> None:
     from tools.check_bench_schema import main as schema_main
     rc = schema_main([os.path.join("experiments", "smoke", name) for name in
                       ("BENCH_streaming.json", "BENCH_stage2.json",
-                       "BENCH_multiworker.json")])
+                       "BENCH_multiworker.json", "BENCH_refresh.json")])
     if rc != 0:
         raise SystemExit(rc)
 

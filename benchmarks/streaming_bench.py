@@ -43,7 +43,8 @@ import numpy as np
 
 def _fresh_service(params, cfg, *, max_batch=16, max_wait_s=0.005,
                    refresh_every=1, num_workers=1, service_model_s=0.0,
-                   steal_threshold=None, store_shards=4):
+                   steal_threshold=None, store_shards=4,
+                   community_local=True, community_size=4096):
     """Construct a streaming FraudService from ONE ServiceConfig artifact —
     the only way benches build engines now."""
     from repro.service import FraudService, ModelSection, ServiceConfig
@@ -56,7 +57,9 @@ def _fresh_service(params, cfg, *, max_batch=16, max_wait_s=0.005,
                 "service_model_s": service_model_s,
                 "steal_threshold": steal_threshold},
         store={"num_shards": store_shards},
-        refresh={"refresh_every": refresh_every},
+        refresh={"refresh_every": refresh_every,
+                 "community_local": community_local,
+                 "community_size": community_size},
     )
     return FraudService(sc, params=params).build()
 
@@ -195,6 +198,144 @@ def run_streaming_bench(
     return out
 
 
+def _cohort_stream(num_cohorts: int, cohort_users: int, cohort_snapshots: int,
+                   rate_per_s: float, seed: int):
+    """A growing-universe event stream: cohort k's users are active only in
+    snapshot window [k*S, (k+1)*S) with fresh entity ids, so the accumulated
+    graph grows linearly while per-window traffic stays bounded — the
+    unbounded-replay regime where whole-graph refresh cost diverges and
+    community-local cost should stay flat."""
+    import dataclasses
+
+    from repro.data import SynthConfig, generate_event_stream
+
+    events = []
+    ent_off = 0
+    t_off = 0.0
+    for k in range(num_cohorts):
+        evs, g, _ = generate_event_stream(
+            SynthConfig(num_users=cohort_users, num_rings=1,
+                        num_snapshots=cohort_snapshots, feature_noise=0.8,
+                        seed=seed + k),
+            rate_per_s=rate_per_s,
+        )
+        for ev in evs:
+            events.append(dataclasses.replace(
+                ev,
+                order_id=len(events),
+                snapshot=ev.snapshot + k * cohort_snapshots,
+                entities=tuple(e + ent_off for e in ev.entities),
+                arrival=ev.arrival + t_off,
+            ))
+        ent_off += g.num_entities
+        t_off = events[-1].arrival if events else 0.0
+    return events
+
+
+def run_refresh_bench(
+    num_cohorts: int = 10,
+    cohort_users: int = 40,
+    cohort_snapshots: int = 4,
+    rate_per_s: float = 500.0,
+    refresh_every: int = 1,
+    community_size: int = 4096,
+    seed: int = 0,
+) -> dict:
+    """Refresh-cost-vs-stream-length curve: whole-graph vs community-local.
+
+    Replays one growing-universe stream twice — ``community_local=False``
+    (pad + stage-1 over the entire accumulated DDS graph every refresh)
+    and ``community_local=True`` (materialize + pad only the connected
+    components containing dirty pairs, bin-packed to ``community_size``
+    nodes).  Per-refresh cost is measured in **padded stage-1 nodes**
+    (deterministic, host-independent) plus wall seconds; the record keeps
+    the whole per-refresh curve.  ``growth`` is mean(last half of the
+    curve) / mean(first half): ~linear cost doubles+ over the stream,
+    community-local stays ~flat — ``sublinear`` gates exactly that, and
+    ``parity.bit_identical`` gates that both paths replayed to identical
+    scores (the exactness invariant, also unit-tested).
+    """
+    import jax
+
+    from repro.core import LNNConfig, lnn_init
+
+    events = _cohort_stream(num_cohorts, cohort_users, cohort_snapshots,
+                            rate_per_s, seed)
+    feat_dim = events[0].features.shape[0]
+    cfg = LNNConfig(num_gnn_layers=3, hidden_dim=64, feat_dim=feat_dim,
+                    pos_weight=3.0)
+    params = lnn_init(jax.random.PRNGKey(seed), cfg)
+
+    out: dict = {
+        "n_events": len(events),
+        "config": {
+            "num_cohorts": num_cohorts, "cohort_users": cohort_users,
+            "cohort_snapshots": cohort_snapshots,
+            "refresh_every": refresh_every, "community_size": community_size,
+            "hidden_dim": cfg.hidden_dim,
+        },
+        "modes": {},
+    }
+    scores: dict = {}
+    for name, community_local in (("full", False), ("community", True)):
+        svc = _fresh_service(params, cfg, max_batch=16,
+                             refresh_every=refresh_every,
+                             community_local=community_local,
+                             community_size=community_size)
+        t0 = time.perf_counter()
+        rep = svc.replay(events)
+        wall = time.perf_counter() - t0
+        scores[name] = rep.scores_by_order()
+        st = svc.engine.refresher.stats
+        hist = list(st["budget_history"])
+        half = max(1, len(hist) // 2)
+        growth = (float(np.mean(hist[half:])) / max(float(np.mean(hist[:half])), 1e-9)
+                  if len(hist) > 1 else 1.0)
+        out["modes"][name] = {
+            "refreshes": st["refreshes"],
+            "entities_written": st["entities_written"],
+            "stage1_seconds": st["seconds"],
+            "replay_wall_s": wall,
+            "nodes_padded_total": st["nodes_padded"],
+            "stage1_launches": st["stage1_launches"],
+            "final_refresh_nodes": hist[-1] if hist else 0,
+            "growth": growth,
+            "curve": [{"refresh": i, "padded_nodes": b}
+                      for i, b in enumerate(hist)],
+        }
+    full, comm = out["modes"]["full"], out["modes"]["community"]
+    out["nodes_speedup_total"] = full["nodes_padded_total"] / max(
+        comm["nodes_padded_total"], 1)
+    out["nodes_speedup_final"] = full["final_refresh_nodes"] / max(
+        comm["final_refresh_nodes"], 1)
+    # sublinear gate: whole-graph per-refresh cost keeps growing with the
+    # stream; community-local must grow strictly slower AND end far cheaper
+    out["sublinear"] = bool(comm["growth"] < 0.5 * full["growth"]
+                            and out["nodes_speedup_final"] >= 2.0)
+    sf, sc_ = scores["full"], scores["community"]
+    out["parity"] = {
+        "bit_identical": bool(set(sf) == set(sc_)
+                              and all(sc_[o] == sf[o] for o in sf)),
+        "checked_events": len(sf),
+    }
+    return out
+
+
+def _print_refresh(r: dict) -> None:
+    print("\n# Batch-layer refresh scope "
+          f"({r['config']['num_cohorts']} cohorts, {r['n_events']} events)")
+    for name, m in r["modes"].items():
+        print(f"  {name:9s}: {m['refreshes']} refreshes, "
+              f"{m['nodes_padded_total']} padded nodes total "
+              f"(final {m['final_refresh_nodes']}), growth {m['growth']:.2f}x, "
+              f"stage1 {m['stage1_seconds']*1e3:.0f}ms")
+    print(f"  community-local padded-node win: "
+          f"{r['nodes_speedup_total']:.1f}x total, "
+          f"{r['nodes_speedup_final']:.1f}x on the final refresh; "
+          f"sublinear={r['sublinear']} "
+          f"parity={r['parity']['bit_identical']}")
+
+
 def run_multiworker_bench(
     num_users: int = 200,
     num_rings: int = 5,
@@ -310,10 +451,13 @@ def main(smoke: bool = False) -> dict:
                                 train_epochs=0)
         mw = run_multiworker_bench(num_users=60, num_rings=2,
                                    worker_counts=(1, 2), parity_events=60)
+        rf = run_refresh_bench(num_cohorts=5, cohort_users=25,
+                               cohort_snapshots=3)
         r["refresh_put_batch"] = run_put_batch_bench(n=5000)
     else:
         r = run_streaming_bench()
         mw = run_multiworker_bench()
+        rf = run_refresh_bench()
         r["refresh_put_batch"] = run_put_batch_bench()
     print("\n# Streaming serving engine")
     for bs, t in r["throughput"].items():
@@ -334,6 +478,7 @@ def main(smoke: bool = False) -> dict:
           f"{pb['loop_put_s']*1e3:.1f}ms vs put_batch "
           f"{pb['put_batch_s']*1e3:.1f}ms ({pb['speedup']:.1f}x)")
     _print_multiworker(mw)
+    _print_refresh(rf)
     # smoke records land in experiments/smoke/ so a local `--smoke` run can
     # never clobber the curated full-run records
     outdir = os.path.join("experiments", "smoke") if smoke else "experiments"
@@ -342,7 +487,10 @@ def main(smoke: bool = False) -> dict:
         json.dump(r, f, indent=1)
     with open(os.path.join(outdir, "BENCH_multiworker.json"), "w") as f:
         json.dump(mw, f, indent=1)
+    with open(os.path.join(outdir, "BENCH_refresh.json"), "w") as f:
+        json.dump(rf, f, indent=1)
     r["multiworker"] = mw
+    r["refresh_scope"] = rf
     return r
 
 

@@ -224,6 +224,7 @@ class IncrementalDDSBuilder:
         self._labels: list[float] = []
         self._order_entities: list[tuple] = []      # per order, linked entities
         self._active: dict[int, list[int]] = {}     # entity -> sorted snapshots
+        self._entity_orders: dict[int, list[int]] = {}  # entity -> order ids
         self._pair_seq: list[tuple] = []            # (ent, t) in activation order
         # typed symbolic edge lists; entity-snap nodes are (ent, t) tuples,
         # orders are ints, shadows are ('s', order)
@@ -276,6 +277,7 @@ class IncrementalDDSBuilder:
         self._order_entities.append(tuple(entities))
 
         for ent in entities:
+            self._entity_orders.setdefault(ent, []).append(o)
             snaps = self._active.setdefault(ent, [])
             # final-hop edge from the latest strictly-past active snapshot.
             # Computed before (ent, t) activates, but t itself is excluded
@@ -379,6 +381,123 @@ class IncrementalDDSBuilder:
         dds = DDSGraph(coo=coo, num_orders=n_ord, entity_snap_ids=entity_snap_ids,
                        last_hop=last_hop)
         return dds
+
+    def build_subgraph(self, entities) -> DDSGraph:
+        """Materialize the DDS subgraph induced by a **component-closed**
+        entity set — the community-local batch-layer input.
+
+        ``entities`` must be a union of connected components of the
+        order↔entity graph (see ``core.partition.IncrementalPartitioner``);
+        an order linking both an in-set and an out-of-set entity raises
+        ``ValueError``, because such a cut would silently drop in-edges and
+        break the bit-identical refresh guarantee.  Closure means NO DDS
+        edge crosses the subgraph boundary, so every included node keeps
+        its full in-neighborhood at any GNN depth.
+
+        Cost is O(touched orders + touched pairs) — never O(total stream).
+
+        Local node-id layout mirrors ``build()``: [0, n_sub) selected
+        orders in arrival order, then shadows, then entity snapshots in
+        sorted (entity, t) order; per-destination edge order also matches
+        (shadow edges in event order, history self-loop before ascending
+        past, final-hop in event order).  ``pad_graph`` rows of this
+        subgraph are therefore bit-identical to the corresponding rows of
+        the padded full ``build()`` graph modulo the local→global id
+        remapping (sliced-build parity test), which is what makes
+        community-local stage-1 embeddings equal the whole-graph ones
+        bit-for-bit.
+        """
+        ents = {int(e) for e in entities}
+        touched = sorted({o for e in ents
+                          for o in self._entity_orders.get(e, ())})
+        for o in touched:
+            for e2 in self._order_entities[o]:
+                if e2 not in ents:
+                    raise ValueError(
+                        f"entity set is not component-closed: order {o} links "
+                        f"entity {e2} outside the set"
+                    )
+        n_sub = len(touched)
+        order_local = {o: i for i, o in enumerate(touched)}
+        pairs = sorted((e, t) for e in ents for t in self._active.get(e, ()))
+        entity_snap_ids = {p: 2 * n_sub + i for i, p in enumerate(pairs)}
+
+        src, dst, et = [], [], []
+        # shadow <-> entity, in event order (ascending order id, per-order
+        # entity order preserved) — matches the filtered _shadow_edges list
+        for o in touched:
+            t = self._order_snapshot[o]
+            s_node = n_sub + order_local[o]
+            for ent in self._order_entities[o]:
+                e_node = entity_snap_ids[(ent, t)]
+                src.append(s_node); dst.append(e_node); et.append(EdgeType.SHADOW_TO_ENTITY)
+                src.append(e_node); dst.append(s_node); et.append(EdgeType.ENTITY_TO_SHADOW)
+        # entity history: reconstruct each activation's edges from the
+        # active-snapshot list (the state at activation time was the strict
+        # prefix, so snaps[:j] reproduces _hist_edges exactly); only
+        # per-destination order matters to pad_graph, so iterating entities
+        # sorted rather than in global activation order is equivalent
+        for ent in sorted(ents):
+            snaps = self._active.get(ent, [])
+            for j, t in enumerate(snaps):
+                cur = entity_snap_ids[(ent, t)]
+                src.append(cur); dst.append(cur); et.append(EdgeType.ENTITY_HIST)
+                if self.entity_history == "consecutive":
+                    past = snaps[j - 1 : j] if j > 0 else []
+                else:
+                    past = snaps[:j]
+                    if self.max_history is not None:
+                        past = past[-self.max_history:]
+                for tp in past:
+                    src.append(entity_snap_ids[(ent, tp)]); dst.append(cur)
+                    et.append(EdgeType.ENTITY_HIST)
+        # final hop: latest strictly-past active snapshot per linked entity.
+        # Recomputing against the *current* active list is exact — snapshots
+        # activated after the order are never strictly before it
+        last_hop: dict = {}
+        for o in touched:
+            t = self._order_snapshot[o]
+            lo = order_local[o]
+            for ent in self._order_entities[o]:
+                snaps = self._active[ent]
+                idx = bisect_left(snaps, t) - 1
+                if idx < 0:
+                    continue
+                t_e = snaps[idx]
+                e_node = entity_snap_ids[(ent, t_e)]
+                src.append(e_node); dst.append(lo); et.append(EdgeType.ENTITY_TO_ORDER)
+                last_hop.setdefault(lo, []).append((ent, t_e, e_node))
+
+        n_nodes = 2 * n_sub + len(entity_snap_ids)
+        features = np.zeros((n_nodes, self.feat_dim), np.float32)
+        node_type = np.full(n_nodes, NodeType.ENTITY, np.int32)
+        node_type[:n_sub] = NodeType.ORDER
+        node_type[n_sub : 2 * n_sub] = NodeType.SHADOW
+        snapshot = np.zeros(n_nodes, np.int32)
+        label = np.zeros(n_nodes, np.float32)
+        label_mask = np.zeros(n_nodes, np.float32)
+        label_mask[:n_sub] = 1.0
+        for o in touched:
+            lo = order_local[o]
+            features[lo] = self._order_features[o]
+            features[n_sub + lo] = self._order_features[o]
+            snapshot[lo] = snapshot[n_sub + lo] = self._order_snapshot[o]
+            label[lo] = self._labels[o]
+        for (ent, t), nid in entity_snap_ids.items():
+            snapshot[nid] = t
+        coo = COOGraph(
+            num_nodes=n_nodes,
+            src=np.asarray(src, np.int64),
+            dst=np.asarray(dst, np.int64),
+            etype=np.asarray(et, np.int32),
+            features=features,
+            node_type=node_type,
+            snapshot=snapshot,
+            label=label,
+            label_mask=label_mask,
+        )
+        return DDSGraph(coo=coo, num_orders=n_sub,
+                        entity_snap_ids=entity_snap_ids, last_hop=last_hop)
 
 
 def check_no_future_leak(dds: DDSGraph) -> None:

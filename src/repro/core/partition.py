@@ -181,6 +181,177 @@ def refine_partition(
     return community
 
 
+# ---------------------------------------------------------------------------
+# Streaming refresh communities (connected components, exact)
+# ---------------------------------------------------------------------------
+#
+# The training-time pipeline above (PIC + METIS-style refinement) may CUT
+# edges when it caps community size — fine for ClusterGCN mini-batching,
+# fatal for the batch-layer's community-local refresh, where a community must
+# contain the *entire* GNN receptive field of every node it owns so that
+# stage-1 embeddings computed per community are bit-identical to the
+# whole-graph run.  Refresh communities are therefore the connected
+# components of the order↔entity bipartite graph: no DDS edge ever crosses a
+# component (orders link only their own entities; entity-history edges stay
+# within one entity), so a component is closed under in-neighborhoods at any
+# GNN depth.  Components are labeled canonically by their smallest entity id,
+# which makes the incremental assignment comparable against the batch one at
+# every stream prefix.
+
+
+def entity_communities(num_entities: int, edges: np.ndarray) -> np.ndarray:
+    """Batch oracle: connected-component community id per entity of the
+    accumulated bipartite order↔entity graph.
+
+    ``edges`` is the StaticGraph [E, 2] (order, entity) array.  Returns an
+    int64 array of length ``num_entities``: the smallest entity id in each
+    entity's component (an entity linked to no order is its own singleton
+    community).  ``IncrementalPartitioner.assignment()`` must match this on
+    the accumulated transactions at any prefix (property-tested).
+    """
+    community = np.arange(num_entities, dtype=np.int64)
+    if edges.size == 0 or num_entities == 0:
+        return community
+    # union entities that share an order: group edge list by order id
+    order_ids = edges[:, 0].astype(np.int64)
+    ent_ids = edges[:, 1].astype(np.int64)
+    sort = np.argsort(order_ids, kind="stable")
+    order_s, ent_s = order_ids[sort], ent_ids[sort]
+    parent = np.arange(num_entities, dtype=np.int64)
+
+    def find(x: int) -> int:
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:            # path compression
+            parent[x], x = root, parent[x]
+        return root
+
+    start = 0
+    for i in range(1, order_s.size + 1):
+        if i == order_s.size or order_s[i] != order_s[start]:
+            ents = ent_s[start:i]
+            r0 = find(int(ents[0]))
+            for e in ents[1:]:
+                r = find(int(e))
+                if r != r0:
+                    # union by smaller-root-wins keeps labels canonical-ish;
+                    # the final min-label pass below is what actually matters
+                    if r < r0:
+                        r0, r = r, r0
+                    parent[r] = r0
+            start = i
+    roots = np.fromiter((find(int(e)) for e in range(num_entities)),
+                        np.int64, num_entities)
+    # label each component by its minimum entity id
+    min_of_root: dict = {}
+    for e, r in enumerate(roots.tolist()):
+        if r not in min_of_root or e < min_of_root[r]:
+            min_of_root[r] = e
+    return np.fromiter((min_of_root[r] for r in roots.tolist()),
+                       np.int64, num_entities)
+
+
+class IncrementalPartitioner:
+    """Streaming connected-component assignment over arriving checkouts.
+
+    Union-find with path compression and union-by-size; every component
+    tracks its canonical label (minimum entity id), its member list, and how
+    many orders it has absorbed — the bookkeeping the community-local
+    refresh driver needs to group dirty ``(entity, t)`` pairs and to
+    estimate per-community DDS node counts without touching the full graph.
+
+    ``add_order(entities)`` merges the components of all linked entities
+    (the order itself is the merge witness) in O(K·α).  Community ids are
+    *canonical, not stable*: when two components merge, the surviving label
+    is the smaller of the two minima — callers must resolve
+    ``community_of`` at use time, never cache ids across merges.
+    ``assignment()`` equals :func:`entity_communities` on the accumulated
+    edge list at every prefix (property-tested in
+    ``tests/test_refresh_communities.py``).
+    """
+
+    def __init__(self):
+        self._parent: dict[int, int] = {}
+        self._size: dict[int, int] = {}       # component size, by root
+        self._min: dict[int, int] = {}        # canonical label, by root
+        self._members: dict[int, list] = {}   # entity members, by root
+        self._orders: dict[int, int] = {}     # orders absorbed, by root
+        self.merges = 0
+
+    def _find(self, e: int) -> int:
+        root = e
+        while self._parent[root] != root:
+            root = self._parent[root]
+        while self._parent[e] != root:        # path compression
+            self._parent[e], e = root, self._parent[e]
+        return root
+
+    def _add_entity(self, e: int) -> int:
+        if e not in self._parent:
+            self._parent[e] = e
+            self._size[e] = 1
+            self._min[e] = e
+            self._members[e] = [e]
+            self._orders[e] = 0
+            return e
+        return self._find(e)
+
+    def add_order(self, entities) -> int | None:
+        """Merge the components of all linked entities; returns the merged
+        component's canonical community id (None for entity-less orders,
+        which belong to no community and carry no entity embeddings)."""
+        ents = [int(e) for e in entities]
+        if not ents:
+            return None
+        r0 = self._add_entity(ents[0])
+        for e in ents[1:]:
+            r = self._add_entity(e)
+            if r == r0:
+                continue
+            if self._size[r] > self._size[r0]:   # union by size
+                r0, r = r, r0
+            self._parent[r] = r0
+            self._size[r0] += self._size.pop(r)
+            self._min[r0] = min(self._min[r0], self._min.pop(r))
+            self._members[r0].extend(self._members.pop(r))
+            self._orders[r0] += self._orders.pop(r)
+            self.merges += 1
+        self._orders[r0] += 1
+        return self._min[r0]
+
+    def community_of(self, entity: int) -> int:
+        """Canonical community id (an entity never seen is its own
+        singleton — no state is created for it)."""
+        e = int(entity)
+        if e not in self._parent:
+            return e
+        return self._min[self._find(e)]
+
+    def members(self, entity_or_community: int) -> list:
+        """All entities in the component containing the given entity (a
+        community id IS an entity id — the component's smallest)."""
+        e = int(entity_or_community)
+        if e not in self._parent:
+            return [e]
+        return list(self._members[self._find(e)])
+
+    def order_count(self, entity_or_community: int) -> int:
+        """Orders absorbed by the component containing the given entity."""
+        e = int(entity_or_community)
+        if e not in self._parent:
+            return 0
+        return self._orders[self._find(e)]
+
+    @property
+    def num_communities(self) -> int:
+        return len(self._size)
+
+    def assignment(self) -> dict:
+        """entity -> canonical community id, for every entity ever seen."""
+        return {e: self._min[self._find(e)] for e in self._parent}
+
+
 def partition_transactions(
     num_orders: int,
     num_entities: int,

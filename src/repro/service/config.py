@@ -103,14 +103,28 @@ class StoreSection:
 
 @dataclass(frozen=True)
 class RefreshSection:
-    """Batch-layer cadence."""
+    """Batch-layer cadence and scope.
+
+    ``community_local=True`` (default) re-runs stage 1 only over the
+    connected components of the order↔entity graph that contain dirty
+    ``(entity, t)`` pairs — bit-identical to the whole-graph refresh but
+    O(dirty communities) instead of O(total stream) per run (see
+    ``repro.stream.refresh``).  ``community_size`` is the node budget per
+    stage-1 launch: dirty communities are bin-packed up to it, and each bin
+    is padded to a power-of-two so jit caches stay warm as communities
+    grow.
+    """
 
     refresh_every: int = 1          # closed windows per refresh (1 = exact)
     async_refresh: bool = False     # stage 1 on a background thread
+    community_local: bool = True    # refresh only dirty communities (exact)
+    community_size: int = 4096      # node budget per stage-1 refresh launch
 
     def __post_init__(self):
         if self.refresh_every < 1:
             raise ValueError("refresh.refresh_every must be >= 1")
+        if self.community_size < 1:
+            raise ValueError("refresh.community_size must be >= 1")
 
 
 @dataclass(frozen=True)
@@ -177,7 +191,8 @@ class ServiceConfig:
         e, s, r = self.engine, self.store, self.refresh
         return EngineConfig(
             k_max=e.k_max, max_batch=e.max_batch, max_wait_s=e.max_wait_s,
-            refresh_every=r.refresh_every, entity_history=e.entity_history,
+            refresh_every=r.refresh_every, community_local=r.community_local,
+            community_size=r.community_size, entity_history=e.entity_history,
             max_history=e.max_history, max_deg=e.max_deg,
             async_refresh=r.async_refresh, store_capacity=s.capacity,
             store_ttl_s=s.ttl_seconds, store_shards=s.num_shards,

@@ -52,6 +52,8 @@ class EngineConfig:
     max_batch: int = 16             # micro-batch size trigger (per worker)
     max_wait_s: float = 0.005       # micro-batch deadline trigger (virtual s)
     refresh_every: int = 1          # batch-layer cadence, in closed windows
+    community_local: bool = True    # refresh only dirty communities (exact)
+    community_size: int = 4096      # node budget per stage-1 refresh launch
     entity_history: str = "all"     # DDS history mode (see core.dds)
     max_history: int | None = 8
     max_deg: int = 32               # padded in-degree for the batch graph
@@ -136,6 +138,8 @@ class StreamingEngine:
             refresh_every=self.ecfg.refresh_every,
             async_mode=self.ecfg.async_refresh,
             router=self.pool.router,
+            community_local=self.ecfg.community_local,
+            community_size=self.ecfg.community_size,
         )
 
     # ------------------------------------------------------------- speed layer

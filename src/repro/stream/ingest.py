@@ -10,7 +10,12 @@ bookkeeping the Lambda loop needs:
 * answers the speed-layer question per event: the exact ``(entity, t_e)``
   KV keys that feed this checkout's final-hop edges;
 * marks touched entities **dirty** so the refresh driver knows which
-  embeddings the next batch run must (re)write.
+  embeddings the next batch run must (re)write;
+* maintains the **community assignment** (connected components of the
+  order↔entity graph, ``core.partition.IncrementalPartitioner``) alongside
+  the dirty pairs, so the community-local refresh driver can materialize
+  and recompute only the components that actually changed — O(dirty
+  communities) batch-layer work per refresh instead of O(total stream).
 
 The ingester never runs the model — it is pure host-side graph state, cheap
 enough to sit on the hot path (O(K·history) per event).
@@ -20,6 +25,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core.dds import DDSGraph, IncrementalDDSBuilder
+from repro.core.partition import IncrementalPartitioner
 from repro.stream.events import CheckoutEvent
 
 
@@ -47,6 +53,7 @@ class StreamIngester:
         )
         self._open_snapshot = -1
         self._dirty: set = set()          # (entity, t) pairs awaiting refresh
+        self.partitioner = IncrementalPartitioner()
         self.stats = {"events": 0, "windows_closed": 0}
 
     @property
@@ -70,6 +77,7 @@ class StreamIngester:
         # keys BEFORE this event activates (entity, t): strictly-past only
         keys = self.builder.entity_keys(event.entities, t)
         o = self.builder.add_order(event.entities, t, event.features, event.label)
+        self.partitioner.add_order(event.entities)
         for ent in event.entities:
             self._dirty.add((int(ent), t))
         self.stats["events"] += 1
@@ -85,10 +93,44 @@ class StreamIngester:
         self._dirty.difference_update(ready)
         return sorted(ready)
 
+    def take_refreshable_by_community(self, up_to_snapshot: int) -> list:
+        """Like :meth:`take_refreshable`, but grouped by the dirty pairs'
+        current communities: ``[(community_id, sorted_pairs)]`` ascending by
+        community id.  Community ids are resolved at drain time (they are
+        canonical-not-stable under merges, see ``IncrementalPartitioner``)."""
+        groups: dict[int, list] = {}
+        for pair in self.take_refreshable(up_to_snapshot):
+            groups.setdefault(self.partitioner.community_of(pair[0]), []).append(pair)
+        return [(c, groups[c]) for c in sorted(groups)]
+
     @property
     def dirty_count(self) -> int:
         return len(self._dirty)
 
+    @property
+    def dirty_communities(self) -> list:
+        """Communities containing at least one dirty pair (resolved now)."""
+        return sorted({self.partitioner.community_of(p[0]) for p in self._dirty})
+
+    def community_members(self, community: int) -> list:
+        return self.partitioner.members(community)
+
+    def community_node_count(self, community: int) -> int:
+        """Exact DDS node count of one community's subgraph: two nodes per
+        absorbed order (effective + shadow) plus its (entity, t) pairs —
+        the budget-packing estimate for community-local refresh."""
+        pairs = sum(len(self.builder._active.get(e, ()))
+                    for e in self.partitioner.members(community))
+        return 2 * self.partitioner.order_count(community) + pairs
+
     def materialize(self) -> DDSGraph:
         """The accumulated DDS graph (batch-layer input)."""
         return self.builder.build()
+
+    def materialize_communities(self, communities) -> DDSGraph:
+        """The DDS subgraph of a union of communities — the community-local
+        batch-layer input (`O(touched)`, never `O(total stream)`)."""
+        ents: set = set()
+        for c in communities:
+            ents.update(self.partitioner.members(c))
+        return self.builder.build_subgraph(ents)

@@ -66,12 +66,19 @@ class MicroBatcher:
     flushing, and atomically steal the oldest queued requests.
     """
 
-    def __init__(self, score_fn, max_batch: int = 16, max_wait_s: float = 0.005):
+    def __init__(self, score_fn, max_batch: int = 16, max_wait_s: float = 0.005,
+                 clock=time.monotonic):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.score_fn = score_fn
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
+        # deadline scheduling clock, used whenever a caller does not supply
+        # ``now``.  Monotonic by default: a wall-clock (``time.time``) here
+        # would let an NTP step fire every deadline at once (clock jumps
+        # forward) or starve deadline flushes entirely (clock jumps back).
+        # Injectable so tests and the replay harness drive virtual time.
+        self.clock = clock
         self._queue: list[ScoreRequest] = []
         self._lock = threading.Lock()
         self.stats = {"flushes": 0, "size_flushes": 0, "deadline_flushes": 0,
@@ -115,8 +122,19 @@ class MicroBatcher:
             self.stats["stolen"] += len(taken)
         return taken
 
-    def submit(self, request: ScoreRequest, now: float) -> list[ScoredResult]:
-        """Enqueue; flush immediately if the size trigger fires."""
+    def submit(self, request: ScoreRequest,
+               now: float | None = None) -> list[ScoredResult]:
+        """Enqueue; flush immediately if the size trigger fires.
+
+        When ``now`` is omitted (internal-clock mode) an unstamped request
+        (``arrival == 0.0``, the dataclass default) is stamped from the
+        same clock — deadline math must never mix clock bases, or a
+        wall-clock arrival against a monotonic ``now`` would starve (or
+        instantly fire) every deadline flush."""
+        if now is None:
+            now = self.clock()
+            if request.arrival == 0.0:
+                request.arrival = now
         self.enqueue(request)
         with self._lock:
             full = len(self._queue) >= self.max_batch
@@ -127,12 +145,14 @@ class MicroBatcher:
             self.stats["size_flushes"] += 1
         return out
 
-    def poll(self, now: float) -> list[ScoredResult]:
+    def poll(self, now: float | None = None) -> list[ScoredResult]:
         """Deadline trigger: flush if the oldest request exceeded max_wait.
 
         The flush is timestamped *at the deadline* (a real engine's timer
         fires then), not at ``now`` — otherwise a request's recorded queue
         wait would stretch to the next arrival under light traffic."""
+        if now is None:
+            now = self.clock()
         dl = self.deadline()
         if dl is None or now < dl:
             return []
@@ -142,12 +162,14 @@ class MicroBatcher:
         return out
 
     # ------------------------------------------------------------------ flush
-    def flush(self, now: float) -> list[ScoredResult]:
+    def flush(self, now: float | None = None) -> list[ScoredResult]:
         """Score everything queued as one padded fixed-shape batch.
 
         The pop is atomic and re-checks emptiness: a concurrent drain (work
         steal, another flush) between the trigger firing and this pop must
         yield an empty no-op, never a zero-row ``score_fn`` call."""
+        if now is None:
+            now = self.clock()
         with self._lock:
             if not self._queue:
                 self.stats["empty_flushes"] += 1

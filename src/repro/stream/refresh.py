@@ -1,12 +1,27 @@
 """Async batch-layer refresh driver — the periodic half of the Lambda loop.
 
-Re-runs LNN stage 1 over the accumulated DDS graph and pushes **only the
-dirty** entity-snapshot embeddings (those whose windows closed since the
-last run) into the KV store with a monotonically increasing refresh
-version.  Correctness hinges on the DDS invariant: an ``entity_t`` vertex's
-in-neighborhood is final once snapshot ``t`` closes, so its stage-1
-embedding computed from the *partial* stream equals the one the full batch
-graph would produce — refreshing incrementally loses nothing.
+Re-runs LNN stage 1 and pushes **only the dirty** entity-snapshot embeddings
+(those whose windows closed since the last run) into the KV store with a
+monotonically increasing refresh version.  Correctness hinges on the DDS
+invariant: an ``entity_t`` vertex's in-neighborhood is final once snapshot
+``t`` closes, so its stage-1 embedding computed from the *partial* stream
+equals the one the full batch graph would produce — refreshing incrementally
+loses nothing.
+
+Community-local mode (the default): instead of padding and re-running
+stage 1 over the **entire accumulated DDS graph** — O(total stream) work per
+refresh, the unbounded-stream bottleneck — the driver groups dirty
+``(entity, t)`` pairs by their connected component of the order↔entity graph
+(``StreamIngester.take_refreshable_by_community``), bin-packs those
+components into node budgets of at most ``community_size``, materializes
+each bin with ``IncrementalDDSBuilder.build_subgraph``, and runs stage 1 per
+bin.  Components are closed under DDS in-neighborhoods at any GNN depth, so
+every per-community embedding is **bit-identical** to the whole-graph run
+(parity-tested in ``tests/test_refresh_communities.py``); refresh cost
+scales with the communities that changed, not with stream length
+(``benchmarks/streaming_bench.py::run_refresh_bench`` plots the curve).
+Each bin is padded to a power-of-two node budget so the stage-1 jit cache
+stays O(log max-community) warm as individual communities grow.
 
 Worker-aware fan-out: when the engine runs a sharded speed layer, the
 driver groups each refresh's puts by the router's entity -> worker map and
@@ -26,12 +41,15 @@ that curve.
 
 ``async_mode=True`` runs stage 1 on a single background worker thread (the
 batch layer is off the scoring hot path in production); ``drain()`` joins
-outstanding work.  Tests use the default synchronous mode.
+outstanding work, and completed futures are pruned on every window-close
+hook so the in-flight list stays bounded over an unbounded stream.  Tests
+use the default synchronous mode.
 """
 from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 
 import jax
@@ -61,6 +79,8 @@ class RefreshDriver:
         refresh_every: int = 1,
         async_mode: bool = False,
         router=None,
+        community_local: bool = True,
+        community_size: int = 4096,
     ):
         self.params = params
         self.cfg = cfg
@@ -71,6 +91,8 @@ class RefreshDriver:
         # anything with worker_of(entity) -> int (stream.workers.ShardRouter);
         # None = single feed, no fan-out grouping
         self.router = router
+        self.community_local = bool(community_local)
+        self.community_size = max(1, int(community_size))
         self.version = 0
         self.model_version = 0
         self._stage1 = jax.jit(lambda p, g: lnn_stage1(p, self.cfg, g))
@@ -78,8 +100,15 @@ class RefreshDriver:
         self._lock = threading.Lock()
         self._pool = ThreadPoolExecutor(max_workers=1) if async_mode else None
         self._inflight = []
+        # budget_history holds one int per refresh — the per-refresh
+        # padded-node cost curve the scope bench plots.  Bounded: over an
+        # unbounded stream only the most recent window of refreshes is
+        # kept, so the stats dict can never grow without limit
         self.stats = {"refreshes": 0, "entities_written": 0, "seconds": 0.0,
-                      "last_budget": 0, "per_shard_written": {}}
+                      "last_budget": 0, "per_shard_written": {},
+                      "nodes_padded": 0, "communities_refreshed": 0,
+                      "stage1_launches": 0,
+                      "budget_history": deque(maxlen=4096)}
 
     # --------------------------------------------------------------- hot-swap
     def set_model(self, params, model_version: int) -> None:
@@ -89,6 +118,12 @@ class RefreshDriver:
         with self._lock:
             self.params = params
             self.model_version = int(model_version)
+
+    def _snapshot_model(self):
+        """(params, model_version) as one atomic pair — a concurrent
+        ``set_model`` can never mix new params with an old version stamp."""
+        with self._lock:
+            return self.params, self.model_version
 
     # ----------------------------------------------------------------- policy
     def on_windows_closed(self, closed_window) -> bool:
@@ -102,19 +137,25 @@ class RefreshDriver:
         self._windows_since_refresh += last - first + 1
         if self._windows_since_refresh < self.refresh_every:
             return False
-        self._windows_since_refresh = 0
+        # carry the overshoot: a sparse snapshot jump (+5 windows with
+        # refresh_every=2) leaves a remainder of 1, so the NEXT close fires
+        # after 1 more window, keeping long-run cadence at refresh_every
+        self._windows_since_refresh %= self.refresh_every
         up_to = last
         if self._pool is None:
             self.refresh(up_to)
         else:
+            # prune completed futures first — over an unbounded stream the
+            # in-flight list must stay bounded between drains
+            self._inflight = [f for f in self._inflight if not f.done()]
             # snapshot the ingester state AND the active model on the
             # calling thread (both keep mutating under new events /
             # hot-swaps); only stage 1 + puts go async
-            pending, dds = self._snapshot_graph(up_to)
-            params, model_version = self.params, self.model_version
+            params, model_version = self._snapshot_model()
+            pending, work, n_comms = self._snapshot_graph(up_to)
             if pending:
                 self._inflight.append(
-                    self._pool.submit(self._run, pending, dds,
+                    self._pool.submit(self._run, pending, work, n_comms,
                                       params, model_version))
         return True
 
@@ -126,16 +167,53 @@ class RefreshDriver:
 
     # ------------------------------------------------------------------- work
     def _snapshot_graph(self, up_to_snapshot: int):
-        pending = self.ingester.take_refreshable(up_to_snapshot)
-        return (pending, self.ingester.materialize() if pending else None)
+        """Drain dirty pairs and materialize the batch-layer input on the
+        calling thread (the builder keeps mutating under new events).
+
+        Returns ``(pending, work, n_communities)`` where ``work`` is the
+        full accumulated :class:`DDSGraph` (whole-graph mode) or a list of
+        ``(subgraph, pairs)`` community bins (community-local mode)."""
+        if not self.community_local:
+            pending = self.ingester.take_refreshable(up_to_snapshot)
+            return pending, (self.ingester.materialize() if pending else None), 0
+        groups = self.ingester.take_refreshable_by_community(up_to_snapshot)
+        if not groups:
+            return [], None, 0
+        pending = sorted(p for _, pairs in groups for p in pairs)
+        work = [(self.ingester.materialize_communities(cids), pairs)
+                for cids, pairs in self._pack_bins(groups)]
+        return pending, work, len(groups)
+
+    def _pack_bins(self, groups) -> list:
+        """Greedily pack dirty communities (ascending id — deterministic)
+        into bins of at most ``community_size`` DDS nodes; a community
+        bigger than the budget forms its own bin.  Fewer stage-1 launches
+        for many small communities, one pow2-padded launch per bin."""
+        bins: list = []
+        cur_cids: list = []
+        cur_pairs: list = []
+        cur_nodes = 0
+        for cid, pairs in groups:
+            nodes = self.ingester.community_node_count(cid)
+            if cur_cids and cur_nodes + nodes > self.community_size:
+                bins.append((cur_cids, cur_pairs))
+                cur_cids, cur_pairs, cur_nodes = [], [], 0
+            cur_cids.append(cid)
+            cur_pairs.extend(pairs)
+            cur_nodes += nodes
+        if cur_cids:
+            bins.append((cur_cids, cur_pairs))
+        return bins
 
     def refresh(self, up_to_snapshot: int) -> dict:
-        """Run stage 1 over the accumulated graph; write embeddings for the
+        """Run stage 1 over the dirty communities (or the whole accumulated
+        graph with ``community_local=False``); write embeddings for the
         dirty (entity, t) pairs with t <= up_to_snapshot, versioned."""
-        pending, dds = self._snapshot_graph(up_to_snapshot)
+        params, model_version = self._snapshot_model()
+        pending, work, n_comms = self._snapshot_graph(up_to_snapshot)
         if not pending:
             return {"entities_written": 0, "seconds": 0.0}
-        return self._run(pending, dds, self.params, self.model_version)
+        return self._run(pending, work, n_comms, params, model_version)
 
     def _shard_groups(self, pending) -> list[tuple[int, list]]:
         """Group dirty (entity, t) pairs by owning speed-layer shard, shard
@@ -148,13 +226,40 @@ class RefreshDriver:
             groups.setdefault(self.router.worker_of(pair[0]), []).append(pair)
         return [(s, sorted(groups[s])) for s in sorted(groups)]
 
-    def _run(self, pending, dds, params, model_version: int) -> dict:
-        t0 = time.time()
-        # pad to a power-of-two node budget so jit recompiles O(log N) times
-        # over an unbounded stream, not once per event window
+    def _stage1_embeddings(self, params, pending, work) -> tuple[dict, int, int]:
+        """Run stage 1 over ``work`` and gather the dirty pairs' rows.
+
+        Returns ``({(ent, t): row}, nodes_padded, launches)``.  Each padded
+        graph gets a power-of-two node budget so the jit cache holds
+        O(log N) shapes over an unbounded stream, not one per refresh."""
+        emb: dict = {}
+        if isinstance(work, list):          # community-local bins
+            total = 0
+            for sub, pairs in work:
+                budget = _pow2_at_least(sub.coo.num_nodes)
+                pg = pad_graph(sub.coo, num_nodes=budget, max_deg=self.max_deg)
+                h = np.asarray(self._stage1(params, pg))
+                for ent, t in pairs:
+                    nid = sub.entity_snap_ids.get((ent, t))
+                    if nid is not None:
+                        emb[(ent, t)] = h[nid]
+                total += budget
+            return emb, total, len(work)
+        dds = work                           # whole-graph path
         budget = _pow2_at_least(dds.coo.num_nodes)
         pg = pad_graph(dds.coo, num_nodes=budget, max_deg=self.max_deg)
         h = np.asarray(self._stage1(params, pg))
+        for ent, t in pending:
+            nid = dds.entity_snap_ids.get((ent, t))
+            if nid is not None:
+                emb[(ent, t)] = h[nid]
+        return emb, budget, 1
+
+    def _run(self, pending, work, n_comms: int, params,
+             model_version: int) -> dict:
+        t0 = time.monotonic()
+        emb, nodes_padded, launches = self._stage1_embeddings(
+            params, pending, work)
         groups = self._shard_groups(pending)
         with self._lock:
             self.version += 1
@@ -162,21 +267,27 @@ class RefreshDriver:
             for shard, pairs in groups:
                 # one batched put per shard feed: a single store lock
                 # acquisition per group instead of one per embedding
-                resolved = [(pack_key(ent, t), dds.entity_snap_ids[(ent, t)])
-                            for ent, t in pairs
-                            if (ent, t) in dds.entity_snap_ids]
+                resolved = [(pack_key(ent, t), emb[(ent, t)])
+                            for ent, t in pairs if (ent, t) in emb]
                 shard_written = self.store.put_batch(
                     [k for k, _ in resolved],
-                    (h[nid] for _, nid in resolved),
+                    (v for _, v in resolved),
                     version=self.version, model_version=model_version,
                 ) if resolved else 0
                 per = self.stats["per_shard_written"]
                 per[shard] = per.get(shard, 0) + shard_written
                 written += shard_written
-        dt = time.time() - t0
-        self.stats["refreshes"] += 1
-        self.stats["entities_written"] += written
-        self.stats["seconds"] += dt
-        self.stats["last_budget"] = budget
+            # stats are read-modify-writes shared with concurrent sync
+            # callers — they stay under the same lock as the puts
+            dt = time.monotonic() - t0
+            self.stats["refreshes"] += 1
+            self.stats["entities_written"] += written
+            self.stats["seconds"] += dt
+            self.stats["last_budget"] = nodes_padded
+            self.stats["nodes_padded"] += nodes_padded
+            self.stats["communities_refreshed"] += n_comms
+            self.stats["stage1_launches"] += launches
+            self.stats["budget_history"].append(nodes_padded)
         return {"entities_written": written, "seconds": dt, "version": self.version,
-                "shards_touched": len(groups)}
+                "shards_touched": len(groups), "nodes_padded": nodes_padded,
+                "communities": n_comms, "stage1_launches": launches}

@@ -1,0 +1,330 @@
+"""Community-local incremental batch-layer refresh: the bit-identical
+parity ladder.
+
+1. incremental community assignment (union-find over arriving checkouts)
+   matches the batch connected-component oracle at every stream prefix;
+2. ``IncrementalDDSBuilder.build_subgraph`` over a component-closed entity
+   set is bit-identical to slicing the padded full ``build()`` graph;
+3. community-local stage-1 embeddings equal the whole-graph run bit-for-bit
+   for every dirty key, for all three GNN types;
+4. end-to-end replay parity: community-local vs whole-graph refresh writes
+   the SAME bytes to the KV store and yields the SAME scores and staleness
+   counters, across worker counts and mid-stream model hot-swaps.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import LNNConfig, lnn_init
+from repro.core.dds import IncrementalDDSBuilder, check_no_future_leak
+from repro.core.graph import pad_graph
+from repro.core.lnn import lnn_stage1
+from repro.core.partition import IncrementalPartitioner, entity_communities
+from repro.data import SynthConfig, generate_event_stream
+from repro.service import FraudService, ModelSection, ServiceConfig
+
+
+@pytest.fixture(scope="module")
+def stream_world():
+    events, g, split = generate_event_stream(
+        SynthConfig(num_users=70, num_rings=3, feature_noise=0.8, seed=11),
+        rate_per_s=500.0,
+    )
+    cfg = LNNConfig(num_gnn_layers=3, hidden_dim=32,
+                    feat_dim=g.order_features.shape[1])
+    params = lnn_init(jax.random.PRNGKey(0), cfg)
+    return events, g, cfg, params
+
+
+def _service(params, cfg, *, community_local, community_size=4096,
+             num_workers=1, refresh_every=1, async_refresh=False):
+    sc = ServiceConfig(
+        mode="streaming", model=ModelSection.from_lnn_config(cfg),
+    ).replace(
+        engine={"num_workers": num_workers},
+        refresh={"community_local": community_local,
+                 "community_size": community_size,
+                 "refresh_every": refresh_every,
+                 "async_refresh": async_refresh},
+    )
+    return FraudService(sc, params=params).build()
+
+
+def _store_contents(store) -> dict:
+    """key -> (bytes, version stamps) for every entry in every shard."""
+    return {
+        k: (e.value.tobytes(), e.model_version)
+        for shard in store._shards for k, e in shard.items()
+    }
+
+
+# ----------------------------------------------------- community assignment
+def _random_order_stream(rng, num_orders, num_entities, k_max=4):
+    orders = []
+    for _ in range(num_orders):
+        k = int(rng.integers(1, k_max + 1))
+        orders.append(tuple(int(e) for e in
+                            rng.choice(num_entities, size=k, replace=False)))
+    return orders
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_incremental_partition_matches_batch_oracle(seed):
+    """Property: at EVERY prefix of a random order stream, the incremental
+    union-find assignment equals the batch connected-component labeling of
+    the accumulated edge list."""
+    rng = np.random.default_rng(seed)
+    num_entities = 40
+    orders = _random_order_stream(rng, num_orders=60, num_entities=num_entities)
+    part = IncrementalPartitioner()
+    edges: list = []
+    check_at = {1, 2, 7, 23, 59}
+    for i, ents in enumerate(orders):
+        part.add_order(ents)
+        edges.extend((i, e) for e in ents)
+        if i not in check_at:
+            continue
+        batch = entity_communities(num_entities,
+                                   np.asarray(edges, np.int64))
+        inc = part.assignment()
+        for e, cid in inc.items():
+            assert cid == batch[e], (i, e)
+        # members are consistent with the assignment
+        for e in inc:
+            assert sorted(part.members(e)) == sorted(
+                e2 for e2, c2 in inc.items() if c2 == inc[e])
+
+
+def test_incremental_partition_on_real_stream(stream_world):
+    events, g, _, _ = stream_world
+    part = IncrementalPartitioner()
+    for ev in events:
+        part.add_order(ev.entities)
+    batch = entity_communities(g.num_entities, g.edges)
+    inc = part.assignment()
+    for e, cid in inc.items():
+        assert cid == batch[e]
+    # order counts sum to the orders that link >= 1 entity
+    roots = {part.community_of(e) for e in inc}
+    assert sum(part.order_count(c) for c in roots) == \
+        len({int(o) for o in g.edges[:, 0]})
+
+
+def test_partitioner_unseen_entity_is_singleton():
+    part = IncrementalPartitioner()
+    assert part.community_of(123) == 123
+    assert part.members(123) == [123]
+    assert part.order_count(123) == 0
+
+
+# ------------------------------------------------------- subgraph slicing
+def _ingest_all(events, feat_dim, history="all", max_history=8):
+    b = IncrementalDDSBuilder(feat_dim, history, max_history)
+    part = IncrementalPartitioner()
+    for ev in events:
+        b.add_order(ev.entities, ev.snapshot, ev.features, ev.label)
+        part.add_order(ev.entities)
+    return b, part
+
+
+@pytest.mark.parametrize("history,max_history",
+                         [("all", None), ("all", 4), ("consecutive", None)])
+def test_build_subgraph_is_sliced_full_build(stream_world, history, max_history):
+    """Padded subgraph rows must equal the padded full-graph rows for the
+    corresponding global nodes, modulo local->global id remapping."""
+    events, g, _, _ = stream_world
+    b, part = _ingest_all(events, g.order_features.shape[1], history, max_history)
+    full = b.build()
+    pg_full = pad_graph(full.coo, max_deg=16)
+    communities = sorted({part.community_of(e) for e in part.assignment()})
+    # a couple of single communities plus one multi-community union
+    picks = [[communities[0]], [communities[-1]], communities[1:4]]
+    for pick in picks:
+        ents = set()
+        for c in pick:
+            ents.update(part.members(c))
+        sub = b.build_subgraph(ents)
+        check_no_future_leak(sub)
+        pg_sub = pad_graph(sub.coo, max_deg=16)
+        n_sub = sub.num_orders
+        # local -> global node id map
+        sub_orders = sorted({o for e in ents for o in b._entity_orders.get(e, ())})
+        gid = np.zeros(sub.coo.num_nodes, np.int64)
+        for lo, o in enumerate(sub_orders):
+            gid[lo] = o
+            gid[n_sub + lo] = full.num_orders + o
+        for (ent, t), nid in sub.entity_snap_ids.items():
+            gid[nid] = full.entity_snap_ids[(ent, t)]
+        np.testing.assert_array_equal(pg_sub.features[:sub.coo.num_nodes],
+                                      pg_full.features[gid])
+        np.testing.assert_array_equal(pg_sub.node_type[:sub.coo.num_nodes],
+                                      pg_full.node_type[gid])
+        np.testing.assert_array_equal(pg_sub.snapshot[:sub.coo.num_nodes],
+                                      pg_full.snapshot[gid])
+        np.testing.assert_array_equal(pg_sub.label[:sub.coo.num_nodes],
+                                      pg_full.label[gid])
+        # in-neighbor rows: same mask/etypes, and sources map to the same
+        # global nodes slot-for-slot (per-destination edge order preserved)
+        sub_n = sub.coo.num_nodes
+        np.testing.assert_array_equal(pg_sub.nbr_mask[:sub_n],
+                                      pg_full.nbr_mask[gid])
+        np.testing.assert_array_equal(pg_sub.nbr_etype[:sub_n],
+                                      pg_full.nbr_etype[gid])
+        mask = pg_sub.nbr_mask[:sub_n].astype(bool)
+        np.testing.assert_array_equal(
+            np.asarray(gid[pg_sub.nbr_idx[:sub_n]])[mask],
+            np.asarray(pg_full.nbr_idx[gid])[mask])
+
+
+def test_build_subgraph_rejects_unclosed_entity_set(stream_world):
+    events, g, _, _ = stream_world
+    b, part = _ingest_all(events, g.order_features.shape[1])
+    # find an order linking >= 2 entities and withhold one of them
+    for ev in events:
+        if len(ev.entities) >= 2:
+            ents = set(part.members(part.community_of(ev.entities[0])))
+            ents.discard(int(ev.entities[1]))
+            with pytest.raises(ValueError, match="component-closed"):
+                b.build_subgraph(ents)
+            return
+    pytest.skip("no multi-entity order in stream")
+
+
+@pytest.mark.parametrize("gnn_type", ["gcn", "sage", "gat"])
+def test_community_stage1_bit_identical(stream_world, gnn_type):
+    """The tentpole invariant at the model level: stage-1 rows computed on
+    a pow2-padded community subgraph equal the whole-graph rows bitwise,
+    for every entity snapshot of the community, for all GNN types."""
+    events, g, _, _ = stream_world
+    cfg = LNNConfig(gnn_type=gnn_type, num_gnn_layers=3, hidden_dim=32,
+                    feat_dim=g.order_features.shape[1])
+    params = lnn_init(jax.random.PRNGKey(1), cfg)
+    b, part = _ingest_all(events, g.order_features.shape[1])
+    full = b.build()
+
+    def pow2(n, f=64):
+        while f < n:
+            f *= 2
+        return f
+
+    pg_full = pad_graph(full.coo, num_nodes=pow2(full.coo.num_nodes), max_deg=32)
+    h_full = np.asarray(jax.jit(
+        lambda p, gr: lnn_stage1(p, cfg, gr))(params, pg_full))
+    communities = sorted({part.community_of(e) for e in part.assignment()})
+    for c in communities[:5]:
+        sub = b.build_subgraph(part.members(c))
+        pg_sub = pad_graph(sub.coo, num_nodes=pow2(sub.coo.num_nodes), max_deg=32)
+        h_sub = np.asarray(jax.jit(
+            lambda p, gr: lnn_stage1(p, cfg, gr))(params, pg_sub))
+        for pair, nid in sub.entity_snap_ids.items():
+            np.testing.assert_array_equal(
+                h_sub[nid], h_full[full.entity_snap_ids[pair]],
+                err_msg=f"{gnn_type} {pair}")
+
+
+# --------------------------------------------------------- end-to-end parity
+@pytest.mark.parametrize("num_workers", [1, 4])
+def test_refresh_parity_community_vs_full(stream_world, num_workers):
+    """Community-local refresh must write bit-identical embeddings for
+    every dirty key, and replayed scores + staleness counters must match
+    the whole-graph refresh exactly — the acceptance invariant."""
+    events, _, cfg, params = stream_world
+    svc_f = _service(params, cfg, community_local=False,
+                     num_workers=num_workers)
+    svc_c = _service(params, cfg, community_local=True, community_size=512,
+                     num_workers=num_workers)
+    rep_f = svc_f.replay(events)
+    rep_c = svc_c.replay(events)
+    s_f, s_c = rep_f.scores_by_order(), rep_c.scores_by_order()
+    assert set(s_f) == set(s_c)
+    assert all(s_c[o] == s_f[o] for o in s_f), "scores diverged"
+    assert rep_f.staleness_summary() == rep_c.staleness_summary()
+    cf = _store_contents(svc_f.engine.store)
+    cc = _store_contents(svc_c.engine.store)
+    assert set(cf) == set(cc), "different key sets written"
+    assert cf == cc, "stored embedding bytes diverged"
+    rf = svc_f.engine.refresher.stats
+    rc = svc_c.engine.refresher.stats
+    assert rf["refreshes"] == rc["refreshes"]
+    assert rf["entities_written"] == rc["entities_written"]
+    assert rf["per_shard_written"] == rc["per_shard_written"]
+    # ... and the community path actually did less stage-1 padding work
+    assert rc["nodes_padded"] < rf["nodes_padded"]
+
+
+@pytest.mark.parametrize("community_size", [1, 256])
+def test_refresh_parity_tiny_bins(stream_world, community_size):
+    """Degenerate bin budgets (every community its own launch) stay exact."""
+    events, _, cfg, params = stream_world
+    evs = events[:120]
+    svc_f = _service(params, cfg, community_local=False)
+    svc_c = _service(params, cfg, community_local=True,
+                     community_size=community_size)
+    s_f = svc_f.replay(evs).scores_by_order()
+    s_c = svc_c.replay(evs).scores_by_order()
+    assert set(s_f) == set(s_c) and all(s_c[o] == s_f[o] for o in s_f)
+    assert _store_contents(svc_f.engine.store) == \
+        _store_contents(svc_c.engine.store)
+
+
+def test_refresh_parity_with_hot_swap_mid_stream(stream_world):
+    """Mid-stream model hot-swap: both refresh scopes must swap at the same
+    event boundary and keep writing identical bytes + version stamps."""
+    events, _, cfg, params = stream_world
+    params_b = lnn_init(jax.random.PRNGKey(9), cfg)
+    half = len(events) // 2
+
+    def run(community_local):
+        svc = _service(params, cfg, community_local=community_local,
+                       community_size=512)
+        out = []
+        for ev in events[:half]:
+            out.extend(svc.submit(ev))
+        svc.load_model(params_b)
+        for ev in events[half:]:
+            out.extend(svc.submit(ev))
+        out.extend(svc.drain())
+        return {r.request.tag.order_id: r.score for r in out}, svc
+
+    s_f, svc_f = run(False)
+    s_c, svc_c = run(True)
+    assert set(s_f) == set(s_c) and all(s_c[o] == s_f[o] for o in s_f)
+    cf = _store_contents(svc_f.engine.store)
+    cc = _store_contents(svc_c.engine.store)
+    assert cf == cc
+    # both stamped some writes with the new model version
+    assert any(mv == 1 for _, mv in cf.values())
+
+
+@pytest.mark.parametrize("refresh_every", [2, 4])
+def test_refresh_parity_lazy_cadence(stream_world, refresh_every):
+    """Stale serving (refresh_every > 1) keeps byte parity too — the scope
+    of a refresh changes what is recomputed, never what is written."""
+    events, _, cfg, params = stream_world
+    svc_f = _service(params, cfg, community_local=False,
+                     refresh_every=refresh_every)
+    svc_c = _service(params, cfg, community_local=True, community_size=512,
+                     refresh_every=refresh_every)
+    rep_f = svc_f.replay(events)
+    rep_c = svc_c.replay(events)
+    s_f, s_c = rep_f.scores_by_order(), rep_c.scores_by_order()
+    assert set(s_f) == set(s_c) and all(s_c[o] == s_f[o] for o in s_f)
+    assert rep_f.staleness_summary() == rep_c.staleness_summary()
+    assert _store_contents(svc_f.engine.store) == \
+        _store_contents(svc_c.engine.store)
+
+
+def test_async_community_refresh_parity(stream_world):
+    """Async community-local refresh drains to the same store bytes as the
+    sync whole-graph path (snapshots happen on the calling thread)."""
+    events, _, cfg, params = stream_world
+    evs = events[:150]
+    svc_f = _service(params, cfg, community_local=False)
+    svc_a = _service(params, cfg, community_local=True, community_size=512,
+                     async_refresh=True)
+    s_f = svc_f.replay(evs).scores_by_order()
+    rep_a = svc_a.replay(evs)
+    svc_a.drain()
+    assert _store_contents(svc_f.engine.store) == \
+        _store_contents(svc_a.engine.store)
+    assert len(rep_a.results) == len(evs)

@@ -168,6 +168,106 @@ def test_async_refresh_drains_and_scores_everything(stream_world):
     assert eng.refresher.stats["refreshes"] > 0
 
 
+# ------------------------------------------------ refresh driver (regressions)
+def _tiny_driver(refresh_every=1, async_mode=False, seed=0):
+    from repro.serve.kvstore import KVStore
+    from repro.stream.ingest import StreamIngester
+    from repro.stream.refresh import RefreshDriver
+
+    cfg = LNNConfig(num_gnn_layers=2, hidden_dim=8, feat_dim=4)
+    params = lnn_init(jax.random.PRNGKey(seed), cfg)
+    ing = StreamIngester(4)
+    store = KVStore(cfg.hidden_dim)
+    drv = RefreshDriver(params, cfg, store, ing,
+                        refresh_every=refresh_every, async_mode=async_mode)
+    return drv, ing, store, cfg
+
+
+def _tiny_event(snapshot, entity=1, arrival=0.0):
+    return CheckoutEvent(order_id=-1, snapshot=snapshot, entities=(entity,),
+                         features=np.zeros(4, np.float32), label=0.0,
+                         arrival=arrival)
+
+
+def test_async_refresh_inflight_list_stays_bounded():
+    """Regression: completed futures must be pruned on every window-close
+    hook — before, ``_inflight`` grew by one per refresh until ``drain()``,
+    an unbounded leak over an unbounded stream."""
+    from concurrent.futures import wait
+
+    drv, ing, _, _ = _tiny_driver(async_mode=True)
+    rounds = 6
+    for t in range(rounds):
+        res = ing.ingest(_tiny_event(t, entity=t % 3))
+        drv.on_windows_closed(res.closed_window)
+        wait(drv._inflight)          # every submitted refresh completes...
+    assert drv.stats["refreshes"] >= rounds - 2
+    # ...so at most the one submitted after the last prune remains tracked
+    assert len(drv._inflight) <= 1
+    drv.drain()
+    assert drv._inflight == []
+
+
+def test_refresh_cadence_carries_sparse_window_remainder():
+    """Regression: a sparse snapshot jump (+5 windows, refresh_every=2) used
+    to reset the counter to 0, silently swallowing the overshoot; the
+    remainder must carry so long-run cadence stays refresh_every."""
+    drv, _, _, _ = _tiny_driver(refresh_every=2)
+    assert drv.on_windows_closed((0, 4)) is True       # +5 -> fires
+    assert drv._windows_since_refresh == 1             # 5 % 2 carried
+    assert drv.on_windows_closed((5, 5)) is True       # 1 + 1 -> fires
+    assert drv.on_windows_closed((6, 6)) is False      # 0 + 1 -> waits
+    assert drv.on_windows_closed((7, 7)) is True
+
+
+def test_sync_refresh_snapshots_model_before_graph():
+    """Regression: sync ``refresh()`` must capture (params, model_version)
+    as one pair under the lock BEFORE snapshotting the graph — a hot-swap
+    landing mid-snapshot may not retag the already-started refresh."""
+    drv, ing, store, cfg = _tiny_driver()
+    params_b = lnn_init(jax.random.PRNGKey(9), cfg)
+    ing.ingest(_tiny_event(0))
+    ing.ingest(_tiny_event(1))                          # closes window 0
+
+    orig = drv._snapshot_graph
+
+    def hook(up_to):
+        drv.set_model(params_b, 7)                      # swap mid-snapshot
+        return orig(up_to)
+
+    drv._snapshot_graph = hook
+    out = drv.refresh(0)
+    assert out["entities_written"] == 1
+    entries = [e for shard in store._shards for e in shard.values()]
+    # old pair throughout: pre-swap version stamp AND pre-swap params
+    assert all(e.model_version == 0 for e in entries)
+    ref_drv, ref_ing, ref_store, _ = _tiny_driver()
+    ref_ing.ingest(_tiny_event(0))
+    ref_ing.ingest(_tiny_event(1))
+    ref_drv.refresh(0)
+    ref = [e for shard in ref_store._shards for e in shard.values()]
+    np.testing.assert_array_equal(entries[0].value, ref[0].value)
+
+
+def test_microbatcher_default_clock_is_monotonic_and_injectable():
+    """Deadline scheduling runs on an injectable monotonic clock when the
+    caller supplies no ``now`` — never the NTP-steppable wall clock."""
+    import time as _time
+
+    t = {"now": 100.0}
+    mb = MicroBatcher(_const_score_fn, max_batch=8, max_wait_s=0.005,
+                      clock=lambda: t["now"])
+    mb.submit(_req(arrival=t["now"]))          # no explicit now: clock used
+    assert mb.poll() == []                     # deadline not reached
+    t["now"] += 0.004
+    assert mb.poll() == []
+    t["now"] += 0.002                          # past deadline
+    out = mb.poll()
+    assert len(out) == 1 and mb.stats["deadline_flushes"] == 1
+    assert out[0].queued_s == pytest.approx(0.005)
+    assert MicroBatcher(_const_score_fn).clock is _time.monotonic
+
+
 def test_streaming_fused_stage2_matches_unfused(stream_world):
     """Flipping ``LNNConfig.use_pallas`` swaps the speed layer onto the fused
     Pallas stage-2 kernel (interpret mode on CPU); every replayed score must

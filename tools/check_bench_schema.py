@@ -22,6 +22,7 @@ DEFAULT_RECORDS = [
     "experiments/BENCH_streaming.json",
     "experiments/BENCH_stage2.json",
     "experiments/BENCH_multiworker.json",
+    "experiments/BENCH_refresh.json",
 ]
 
 PCTS = ("p50", "p95", "p99")
@@ -100,10 +101,44 @@ def check_multiworker(d: dict) -> list[str]:
     return e
 
 
+def check_refresh(d: dict) -> list[str]:
+    e: list[str] = []
+    _require(e, _num(d.get("n_events")), "n_events: finite number required")
+    cfg = d.get("config") or {}
+    for k in ("num_cohorts", "refresh_every", "community_size"):
+        _require(e, _num(cfg.get(k)), f"config.{k}: number")
+    modes = d.get("modes") or {}
+    for name in ("full", "community"):
+        m = modes.get(name)
+        _require(e, isinstance(m, dict), f"modes.{name}: dict required")
+        for k in ("refreshes", "entities_written", "stage1_seconds",
+                  "replay_wall_s", "nodes_padded_total", "stage1_launches",
+                  "final_refresh_nodes", "growth"):
+            _require(e, _num((m or {}).get(k)), f"modes.{name}.{k}: number")
+        curve = (m or {}).get("curve")
+        _require(e, isinstance(curve, list) and curve,
+                 f"modes.{name}.curve: non-empty list")
+        for i, p in enumerate(curve or []):
+            for k in ("refresh", "padded_nodes"):
+                _require(e, _num(p.get(k)), f"modes.{name}.curve[{i}].{k}: number")
+    for k in ("nodes_speedup_total", "nodes_speedup_final"):
+        _require(e, _num(d.get(k)), f"{k}: number")
+    # both invariants are gates, not statistics: community-local refresh
+    # must replay bit-identically AND scale sublinearly vs the full path
+    par = d.get("parity") or {}
+    _require(e, par.get("bit_identical") is True,
+             "parity.bit_identical: must be True (refresh-scope exactness gate)")
+    _require(e, d.get("sublinear") is True,
+             "sublinear: must be True (community-local cost must not track "
+             "stream length)")
+    return e
+
+
 CHECKERS = {
     "BENCH_streaming.json": check_streaming,
     "BENCH_stage2.json": check_stage2,
     "BENCH_multiworker.json": check_multiworker,
+    "BENCH_refresh.json": check_refresh,
 }
 
 
