@@ -1,0 +1,255 @@
+"""Gateway benchmark — open-loop Poisson load through the full network path.
+
+Boots a real :class:`repro.gateway.FraudGateway` (stdlib HTTP server) over a
+streaming ``FraudService`` on an ephemeral port and drives it with a
+**threaded client pool**: every checkout event is dispatched at its Poisson
+arrival time on the wall clock (open loop — senders do not wait for earlier
+responses before the next arrival is due), so queueing at the gateway is
+real, not an artifact of a closed-loop client.  Scenarios:
+
+* **nominal** — offered load the service absorbs: client-observed
+  p50/p95/p99 wall latency and throughput through socket + JSON + scoring;
+* **shed** — overload against ``admission.policy="shed"`` with a depth cap:
+  the overflow must come back as **HTTP 429** (+ ``Retry-After``), measured
+  as a shed rate;
+* **block** — the same overload against ``policy="block"`` with a tiny
+  ``block_max_wait_s``: timed-out stalls must come back as **HTTP 503**;
+* **canary** — a deliberately perturbed shadow version at fraction 1.0 must
+  trip the divergence alert, scraped back out of ``GET /metrics``.
+
+The 429/503/alert observations are recorded as boolean **gates** in
+``experiments/BENCH_gateway.json`` and enforced by
+``tools/check_bench_schema.py`` — backpressure reaching the socket is an
+invariant here, not a statistic.
+
+Run:  PYTHONPATH=src python benchmarks/gateway_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+import urllib.error
+import urllib.request
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def _percentiles_ms(lat_s: list) -> dict:
+    if not lat_s:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0}
+    a = np.asarray(lat_s, np.float64) * 1e3
+    p50, p95, p99 = np.percentile(a, (50, 95, 99))
+    return {"p50": float(p50), "p95": float(p95), "p99": float(p99),
+            "mean": float(a.mean())}
+
+
+def _post(url: str, body: dict, timeout: float = 30.0):
+    req = urllib.request.Request(
+        url, data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def _ev_json(ev) -> dict:
+    return {"order_id": ev.order_id, "snapshot": ev.snapshot,
+            "entities": list(ev.entities), "features": ev.features.tolist(),
+            "arrival": ev.arrival}
+
+
+def _boot_gateway(params, cfg, *, admission: dict | None = None,
+                  max_batch: int = 8):
+    from repro.gateway import FraudGateway
+    from repro.service import FraudService, ModelSection, ServiceConfig
+
+    sc = ServiceConfig(
+        mode="streaming", model=ModelSection.from_lnn_config(cfg),
+    ).replace(engine={"max_batch": max_batch},
+              admission=admission or {})
+    svc = FraudService(sc, params=params).build().warmup()
+    return FraudGateway(svc).start()
+
+
+def drive_open_loop(url: str, events, rate_per_s: float,
+                    num_clients: int = 8) -> dict:
+    """Fire one ``POST /v1/score`` per event at Poisson arrival times on the
+    wall clock, spread round-robin over ``num_clients`` sender threads.
+
+    Each sender sleeps until its next event's scheduled send time and posts
+    regardless of earlier responses (open loop, bounded only by the pool
+    size); client-observed wall latency and the status-code mix come back
+    per event."""
+    rng = np.random.default_rng(0)
+    send_at = np.cumsum(rng.exponential(1.0 / rate_per_s, size=len(events)))
+    # pin every event to snapshot 0: the graph rejects event-time
+    # regressions, and concurrent senders would otherwise race snapshots
+    # backwards into 400s — this bench measures the HTTP/backpressure path,
+    # not window semantics
+    bodies = [{"event": {**_ev_json(ev), "snapshot": 0}} for ev in events]
+    lat_s: list = []
+    codes: dict[int, int] = {}
+    lock = threading.Lock()
+    t0 = time.perf_counter() + 0.05   # common epoch, senders already running
+
+    def sender(idx: int):
+        my_lat, my_codes = [], {}
+        for i in range(idx, len(events), num_clients):
+            delay = t0 + send_at[i] - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            t_send = time.perf_counter()
+            status, _ = _post(url + "/v1/score", bodies[i])
+            my_lat.append(time.perf_counter() - t_send)
+            my_codes[status] = my_codes.get(status, 0) + 1
+        with lock:
+            lat_s.extend(my_lat)
+            for c, n in my_codes.items():
+                codes[c] = codes.get(c, 0) + n
+
+    threads = [threading.Thread(target=sender, args=(k,))
+               for k in range(num_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    _post(url + "/admin/drain", {})
+    return {
+        "sent": len(events), "wall_s": wall,
+        "throughput_eps": len(events) / wall,
+        "latency_ms": _percentiles_ms(lat_s),
+        "status_counts": {str(c): n for c, n in sorted(codes.items())},
+        "ok": codes.get(200, 0),
+        "rejected_429": codes.get(429, 0),
+        "rejected_503": codes.get(503, 0),
+    }
+
+
+def run_gateway_bench(num_users: int = 150, num_rings: int = 4,
+                      num_clients: int = 8, nominal_rate: float = 300.0,
+                      overload_rate: float = 5000.0, seed: int = 0) -> dict:
+    import jax
+
+    from repro.core import LNNConfig, lnn_init
+    from repro.data import SynthConfig, generate_event_stream
+
+    events, g, _ = generate_event_stream(
+        SynthConfig(num_users=num_users, num_rings=num_rings,
+                    feature_noise=0.8, seed=seed),
+        rate_per_s=400.0,
+    )
+    cfg = LNNConfig(num_gnn_layers=2, hidden_dim=32,
+                    feat_dim=g.order_features.shape[1])
+    params = lnn_init(jax.random.PRNGKey(seed), cfg)
+    out: dict = {
+        "n_events": len(events),
+        "config": {"num_clients": num_clients, "nominal_rate": nominal_rate,
+                   "overload_rate": overload_rate,
+                   "hidden_dim": cfg.hidden_dim},
+        "scenarios": {},
+    }
+
+    # -- nominal: the service absorbs the offered load; measure wire latency
+    gw = _boot_gateway(params, cfg)
+    try:
+        out["scenarios"]["nominal"] = drive_open_loop(
+            gw.url, events, nominal_rate, num_clients)
+    finally:
+        gw.close()
+
+    # -- shed overload: depth-capped shed policy must reach the socket as 429
+    gw = _boot_gateway(
+        params, cfg, max_batch=32,
+        admission={"max_queue_depth": 4, "policy": "shed"})
+    try:
+        out["scenarios"]["shed"] = drive_open_loop(
+            gw.url, events, overload_rate, num_clients)
+    finally:
+        gw.close()
+    shed = out["scenarios"]["shed"]
+    shed["shed_rate"] = shed["rejected_429"] / max(1, shed["sent"])
+
+    # -- block overload: timed-out bounded stalls must reach the socket as 503
+    gw = _boot_gateway(
+        params, cfg, max_batch=32,
+        admission={"max_queue_depth": 4, "policy": "block",
+                   "block_max_wait_s": 0.0})
+    try:
+        out["scenarios"]["block"] = drive_open_loop(
+            gw.url, events, overload_rate, num_clients)
+    finally:
+        gw.close()
+
+    # -- canary: a perturbed shadow version must trip the divergence alert,
+    #    and the alert must be visible in the scraped /metrics text
+    gw = _boot_gateway(params, cfg)
+    try:
+        _post(gw.url + "/admin/model",
+              {"role": "canary", "from_version": 0, "perturb_scale": 2.0,
+               "version": 9, "fraction": 1.0, "threshold": 0.05})
+        for ev in events[: min(80, len(events))]:
+            _post(gw.url + "/v1/score", {"event": _ev_json(ev)})
+        _post(gw.url + "/admin/drain", {})
+        with urllib.request.urlopen(gw.url + "/metrics", timeout=30) as r:
+            metrics_text = r.read().decode()
+        sh = gw.service.shadow_stats()
+        out["canary"] = {
+            "sampled": sh["sampled"], "alerts": sh["alerts"],
+            "divergence_max": sh["divergence_max"],
+            "alert_in_metrics":
+                "repro_shadow_alert_active 1" in metrics_text.splitlines(),
+        }
+    finally:
+        gw.close()
+
+    # backpressure-at-the-socket gates (schema-enforced, not advisory)
+    out["gates"] = {
+        "shed_maps_to_429": shed["rejected_429"] > 0,
+        "block_maps_to_503": out["scenarios"]["block"]["rejected_503"] > 0,
+        "divergence_alert": bool(out["canary"]["alerts"] > 0
+                                 and out["canary"]["alert_in_metrics"]),
+    }
+    return out
+
+
+def main(smoke: bool = False) -> dict:
+    if smoke:
+        r = run_gateway_bench(num_users=50, num_rings=2, num_clients=4,
+                              nominal_rate=400.0, overload_rate=4000.0)
+    else:
+        r = run_gateway_bench()
+
+    print("\n# HTTP gateway (open-loop Poisson load, threaded client pool)")
+    for name, s in r["scenarios"].items():
+        pct = s["latency_ms"]
+        print(f"  {name}: {s['sent']} sent @ {s['throughput_eps']:.0f} req/s "
+              f"wall | p50={pct['p50']:.2f}ms p95={pct['p95']:.2f}ms "
+              f"p99={pct['p99']:.2f}ms | 200={s['ok']} "
+              f"429={s['rejected_429']} 503={s['rejected_503']}")
+    c = r["canary"]
+    print(f"  canary: sampled={c['sampled']} alerts={c['alerts']} "
+          f"max_divergence={c['divergence_max']:.3f} "
+          f"alert_in_metrics={c['alert_in_metrics']}")
+    print(f"  gates: {r['gates']}")
+
+    outdir = os.path.join("experiments", "smoke") if smoke else "experiments"
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, "BENCH_gateway.json"), "w") as f:
+        json.dump(r, f, indent=1)
+    return r
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI smoke (seconds, not minutes)")
+    main(smoke=ap.parse_args().smoke)

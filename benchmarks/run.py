@@ -8,8 +8,10 @@
   kernels   Pallas-kernel micro-bench (XLA ref timing + v5e roofline projection)
   roofline  aggregated dry-run roofline table (if dry-run records exist)
 
-``--smoke`` runs only the serving benches (streaming + multiworker + stage2)
-at tiny sizes — seconds, not minutes — then validates the emitted
+  gateway   HTTP gateway under open-loop Poisson load (429/503/canary gates)
+
+``--smoke`` runs only the serving benches (streaming + multiworker + stage2
++ gateway) at tiny sizes — seconds, not minutes — then validates the emitted
 ``BENCH_*.json`` records against their schemas (``tools/check_bench_schema``).
 That is the CI ``bench-smoke`` gate: it fails on crash or schema drift.
 
@@ -62,6 +64,18 @@ def _stage2_rows(csv_rows, s2) -> None:
                          f"speedup={r['speedup']:.2f}x"))
 
 
+def _gateway_rows(csv_rows, gwr) -> None:
+    for name, s in gwr["scenarios"].items():
+        pct = s["latency_ms"]
+        csv_rows.append((
+            f"gateway/{name}/p99", f"{pct['p99']*1e3:.0f}",
+            f"p50={pct['p50']:.2f}ms,p99={pct['p99']:.2f}ms,"
+            f"429={s['rejected_429']},503={s['rejected_503']}",
+        ))
+    csv_rows.append(("gateway/gates", "",
+                     ",".join(f"{k}={v}" for k, v in gwr["gates"].items())))
+
+
 def run_smoke() -> None:
     """The CI bench-smoke gate: serving benches at tiny sizes + schema check."""
     csv_rows = [("name", "us_per_call", "derived")]
@@ -77,10 +91,15 @@ def run_smoke() -> None:
     s2 = stage2_main(smoke=True)          # writes BENCH_stage2.json
     _stage2_rows(csv_rows, s2)
 
+    from benchmarks.gateway_bench import main as gateway_main
+    gwr = gateway_main(smoke=True)        # writes BENCH_gateway.json
+    _gateway_rows(csv_rows, gwr)
+
     from tools.check_bench_schema import main as schema_main
     rc = schema_main([os.path.join("experiments", "smoke", name) for name in
                       ("BENCH_streaming.json", "BENCH_stage2.json",
-                       "BENCH_multiworker.json", "BENCH_refresh.json")])
+                       "BENCH_multiworker.json", "BENCH_refresh.json",
+                       "BENCH_gateway.json")])
     if rc != 0:
         raise SystemExit(rc)
 
@@ -119,6 +138,10 @@ def run_full() -> None:
     from benchmarks.stage2_bench import main as stage2_main
     s2 = stage2_main()   # writes experiments/BENCH_stage2.json
     _stage2_rows(csv_rows, s2)
+
+    from benchmarks.gateway_bench import main as gateway_main
+    gwr = gateway_main()   # writes experiments/BENCH_gateway.json
+    _gateway_rows(csv_rows, gwr)
 
     from benchmarks.kernels_bench import main as kernels_main
     ker = kernels_main()

@@ -1,0 +1,528 @@
+"""HTTP serving gateway over :class:`~repro.service.FraudService` —
+``repro.gateway.server``.
+
+The wire protocol the serving facade was missing: a dependency-free
+(stdlib ``http.server`` + JSON) front-end exposing
+
+===========================  ====================================================
+``POST /v1/score``           score checkout events (streaming mode) or typed
+                             requests (batch mode), single or batch bodies
+``POST /v1/ingest``          ingest events into the DDS/batch layer WITHOUT
+                             scoring (backfill, non-checkout entity activity)
+``GET  /healthz``            lifecycle-aware liveness (503 once draining)
+``GET  /v1/stats``           the full ``ServiceStats`` snapshot + gateway
+                             telemetry, JSON
+``GET  /metrics``            Prometheus text format, rendered from the SAME
+                             ``ServiceStats`` snapshot as ``/v1/stats``
+``POST /admin/model``        hot-swap the primary model version, register a
+                             perturbed clone, or (re)configure the canary
+``POST /admin/drain``        finish outstanding work, take the gateway out of
+                             rotation (healthz goes 503)
+===========================  ====================================================
+
+**Backpressure at the socket.**  Admission control stops being an
+accounting fiction here: a shed request (``admission.policy="shed"``)
+returns ``429 Too Many Requests`` with a ``Retry-After`` hint; a block
+stall that exceeds ``admission.block_max_wait_s`` returns
+``503 Service Unavailable``.  The caller — not a silent queue — absorbs
+the overload.
+
+**Canary/shadow scoring.**  ``POST /admin/model`` with ``role="canary"``
+enables :meth:`FraudService.enable_shadow`: a sampled fraction of admitted
+traffic is re-scored under the canary version *after* the HTTP response
+bytes are flushed to the socket (off the response path), and the
+|primary − shadow| divergence counters/alert surface in ``/metrics`` and
+``/v1/stats``.
+
+Every touch of the wrapped ``FraudService`` happens under one gateway
+RLock — the facade itself is single-threaded by design, the gateway is the
+concurrency boundary.  See ``docs/gateway.md`` for curl examples.
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import numpy as np
+
+from repro.gateway.telemetry import MetricsRegistry
+from repro.service import FraudService
+from repro.service.config import GatewaySection
+from repro.stream.events import CheckoutEvent
+
+#: service lifecycle states /healthz reports ready for traffic
+_HEALTHY_STATES = ("built", "ready", "serving")
+
+
+# ----------------------------------------------------------- wire (de)coding
+def event_from_json(d: dict) -> CheckoutEvent:
+    """JSON body -> :class:`CheckoutEvent` (the ``/v1/score`` and
+    ``/v1/ingest`` streaming-mode unit)."""
+    if "features" not in d:
+        raise ValueError("event needs a 'features' array")
+    return CheckoutEvent(
+        order_id=int(d.get("order_id", -1)),
+        snapshot=int(d.get("snapshot", 0)),
+        entities=tuple(int(e) for e in d.get("entities", ())),
+        features=np.asarray(d["features"], np.float32),
+        label=float(d.get("label", 0.0)),
+        arrival=float(d.get("arrival", 0.0)),
+    )
+
+
+def request_from_json(d: dict) -> dict:
+    """JSON body -> the batch-mode score-request dict
+    (``FraudService.score`` re-types it via ``ScoreRequest.from_legacy``)."""
+    if "features" not in d:
+        raise ValueError("request needs a 'features' array")
+    return {
+        "features": np.asarray(d["features"], np.float32),
+        "entity_keys": [(int(e), int(t)) for e, t in d.get("entity_keys", [])],
+        "arrival": float(d.get("arrival", 0.0)),
+    }
+
+
+def response_to_json(r) -> dict:
+    """``ScoreResponse`` -> JSON-safe dict.  Shed responses carry
+    ``score=None`` (their in-process score is NaN, which JSON lacks);
+    admitted scores serialize via Python's shortest-round-trip float repr,
+    so the wire value parses back bit-identical to the in-process float."""
+    tag = r.request.tag
+    return {
+        "order_id": getattr(tag, "order_id", None),
+        "score": None if math.isnan(r.score) else float(r.score),
+        "admitted": bool(r.admitted),
+        "model_version": int(r.model_version),
+        "staleness": int(r.staleness),
+        "queued_s": float(r.queued_s),
+        "service_s": float(r.service_s),
+        "batch_size": int(r.batch_size),
+        "worker": int(r.worker),
+    }
+
+
+# -------------------------------------------------- /metrics from ONE snapshot
+#: ServiceStats.to_dict() scalar -> (metric name, TYPE); counters follow the
+#: Prometheus ``_total`` convention, point-in-time values are gauges
+_SERVICE_SCALARS = [
+    ("model_version", "repro_service_model_version", "gauge"),
+    ("model_swaps", "repro_service_model_swaps_total", "counter"),
+    ("requests", "repro_service_requests_total", "counter"),
+    ("scored", "repro_service_scored_total", "counter"),
+    ("shed", "repro_service_shed_total", "counter"),
+    ("blocked", "repro_service_blocked_total", "counter"),
+    ("block_timeouts", "repro_service_block_timeouts_total", "counter"),
+    ("queue_depth", "repro_service_queue_depth", "gauge"),
+    ("queue_depth_peak", "repro_service_queue_depth_peak", "gauge"),
+    ("in_flight_peak", "repro_service_in_flight_peak", "gauge"),
+    ("flushes", "repro_service_flushes_total", "counter"),
+    ("refreshes", "repro_service_refreshes_total", "counter"),
+    ("entities_written", "repro_service_entities_written_total", "counter"),
+    ("model_stale_reads", "repro_service_model_stale_reads_total", "counter"),
+    ("store_size", "repro_service_store_size", "gauge"),
+]
+
+_SHADOW_SCALARS = [
+    ("version", "repro_shadow_model_version", "gauge"),
+    ("fraction", "repro_shadow_fraction", "gauge"),
+    ("threshold", "repro_shadow_divergence_threshold", "gauge"),
+    ("sampled", "repro_shadow_sampled_total", "counter"),
+    ("divergence_sum", "repro_shadow_divergence_sum", "counter"),
+    ("divergence_max", "repro_shadow_divergence_max", "gauge"),
+    ("last_divergence", "repro_shadow_last_divergence", "gauge"),
+    ("alerts", "repro_shadow_alerts_total", "counter"),
+    ("alert_active", "repro_shadow_alert_active", "gauge"),
+]
+
+
+def service_metric_lines(snap: dict) -> list[str]:
+    """Render the service half of ``GET /metrics`` from a
+    ``ServiceStats.to_dict()`` snapshot — the same object ``/v1/stats``
+    returns, so the two surfaces can never disagree."""
+    lines = [
+        "# HELP repro_service_info service mode and lifecycle state",
+        "# TYPE repro_service_info gauge",
+        f'repro_service_info{{mode="{snap.get("mode", "")}",'
+        f'state="{snap.get("state", "")}"}} 1',
+    ]
+
+    def emit(name: str, kind: str, value, labels: str = "") -> None:
+        lines.append(f"# TYPE {name} {kind}")
+        v = float(value)
+        lines.append(f"{name}{labels} {int(v) if v.is_integer() else repr(v)}")
+
+    for key, name, kind in _SERVICE_SCALARS:
+        if key in snap:
+            emit(name, kind, snap[key])
+    by_version = snap.get("scores_by_version") or {}
+    if by_version:
+        lines.append("# HELP repro_service_scores_total scored responses "
+                     "per model version")
+        lines.append("# TYPE repro_service_scores_total counter")
+        for v, n in sorted(by_version.items(), key=lambda kv: int(kv[0])):
+            lines.append(
+                f'repro_service_scores_total{{model_version="{v}"}} {n}')
+    shadow = snap.get("shadow") or {}
+    for key, name, kind in _SHADOW_SCALARS:
+        if key in shadow:
+            emit(name, kind, shadow[key])
+    for key, value in sorted((snap.get("store_stats") or {}).items()):
+        if isinstance(value, (int, float)) and not isinstance(value, bool):
+            emit(f"repro_store_{key}_total", "counter", value)
+    return lines
+
+
+class GatewayError(Exception):
+    """A handler-level failure with an HTTP status (rendered as JSON)."""
+
+    def __init__(self, status: int, message: str):
+        super().__init__(message)
+        self.status = status
+
+
+class FraudGateway:
+    """The HTTP front-end over one :class:`FraudService`.
+
+    ``start()`` binds ``config.gateway.host:port`` (port 0 = ephemeral; see
+    :attr:`port`) and serves on a daemon thread pool (one thread per
+    connection — ``ThreadingHTTPServer``); ``close()`` shuts the socket
+    down and joins the serve thread.  Usable as a context manager.
+
+    The service must already be ``build()``-ed; ``warmup()`` beforehand
+    keeps jit compiles off the first request's latency.
+    """
+
+    def __init__(self, service: FraudService, config: GatewaySection | None = None):
+        self.service = service
+        self.config = config or service.config.gateway
+        self.lock = threading.RLock()
+        self.draining = False
+        self._httpd: ThreadingHTTPServer | None = None
+        self._thread: threading.Thread | None = None
+        m = self.metrics = MetricsRegistry()
+        self.http_requests = m.counter(
+            "gateway_http_requests_total",
+            "HTTP requests by endpoint and status code",
+            labelnames=("endpoint", "code"))
+        self.http_seconds = m.histogram(
+            "gateway_http_request_seconds",
+            "wall time spent in the handler, per endpoint",
+            buckets=self.config.latency_buckets, labelnames=("endpoint",))
+        self.scores_total = m.counter(
+            "gateway_scores_total",
+            "scored responses delivered over the wire, per model version",
+            labelnames=("model_version",))
+        self.score_seconds = m.histogram(
+            "gateway_score_latency_seconds",
+            "per-response score latency (queue wait + service time)",
+            buckets=self.config.latency_buckets)
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> "FraudGateway":
+        if self._httpd is not None:
+            raise RuntimeError("gateway already started")
+        if self.service.state not in _HEALTHY_STATES:
+            raise RuntimeError(
+                f"gateway needs a built service (state is "
+                f"{self.service.state!r}); call build()/warmup() first")
+        self._httpd = ThreadingHTTPServer(
+            (self.config.host, self.config.port), _Handler)
+        self._httpd.daemon_threads = True
+        self._httpd.gateway = self
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, kwargs={"poll_interval": 0.05},
+            name="fraud-gateway", daemon=True)
+        self._thread.start()
+        return self
+
+    @property
+    def port(self) -> int:
+        """The bound port (the kernel's pick when configured port was 0)."""
+        if self._httpd is None:
+            raise RuntimeError("gateway not started")
+        return self._httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.config.host}:{self.port}"
+
+    def close(self) -> None:
+        """Stop accepting connections and join the serve thread
+        (idempotent).  The wrapped service is left open — callers own its
+        lifecycle."""
+        if self._httpd is None:
+            return
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+        self._httpd, self._thread = None, None
+
+    def __enter__(self) -> "FraudGateway":
+        return self.start() if self._httpd is None else self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------- endpoints
+    # each handle_* returns (status, payload, headers, shadow_batch); the
+    # HTTP layer writes the response FIRST, then feeds shadow_batch to the
+    # canary scorer — shadow work never sits on the response path
+    def handle_score(self, body: dict):
+        if self.draining:
+            raise GatewayError(503, "gateway is draining")
+        svc = self.service
+        if svc.mode == "streaming":
+            items, single = self._body_items(body, "event", "events")
+            events = [event_from_json(d) for d in items]
+            with self.lock:
+                results: list = []
+                for ev in events:
+                    results.extend(svc.submit(ev))
+                pending = len(svc.engine.pool)
+        else:
+            items, single = self._body_items(body, "request", "requests")
+            reqs = [request_from_json(d) for d in items]
+            with self.lock:
+                results = svc.score(reqs)
+                pending = 0
+        scored = [r for r in results if r.admitted]
+        shed = [r for r in results if not r.admitted]
+        for r in scored:
+            self.scores_total.inc(model_version=r.model_version)
+            self.score_seconds.observe(r.queued_s + r.service_s)
+        status, headers = 200, {}
+        if shed:
+            # admission rejections map to socket-level backpressure: shed
+            # policy -> 429 (come back later), a timed-out block stall ->
+            # 503 (the service is saturated, not just this caller)
+            status = 429 if svc.config.admission.policy == "shed" else 503
+            headers["Retry-After"] = f"{self.config.retry_after_s:.3f}"
+        payload = {
+            "results": [response_to_json(r) for r in results],
+            "scored": len(scored), "shed": len(shed), "pending": pending,
+            "model_version": svc.model_version,
+        }
+        if single and not results:
+            payload["note"] = "queued; results ride a later response or drain"
+        return status, payload, headers, scored
+
+    def handle_ingest(self, body: dict):
+        if self.draining:
+            raise GatewayError(503, "gateway is draining")
+        svc = self.service
+        if svc.mode != "streaming":
+            raise GatewayError(
+                400, "ingest without scoring requires mode='streaming'")
+        items, _ = self._body_items(body, "event", "events")
+        events = [event_from_json(d) for d in items]
+        with self.lock:
+            for ev in events:
+                svc.ingest(ev)
+            refreshes = svc.engine.refresher.stats["refreshes"]
+        return 200, {"ingested": len(events), "refreshes": refreshes}, {}, None
+
+    def handle_health(self):
+        with self.lock:
+            state = self.service.state
+            version = self.service.model_version
+        ok = (not self.draining) and state in _HEALTHY_STATES
+        payload = {"status": "ok" if ok else "unavailable", "state": state,
+                   "draining": self.draining, "model_version": version}
+        return (200 if ok else 503), payload, {}, None
+
+    def handle_stats(self):
+        with self.lock:
+            snap = self.service.stats().to_dict()
+        gw = {"draining": self.draining, "metrics": self.metrics.snapshot()}
+        return 200, {"service": snap, "gateway": gw}, {}, None
+
+    def handle_metrics(self):
+        with self.lock:
+            snap = self.service.stats().to_dict()
+        text = "\n".join(service_metric_lines(snap)) + "\n" + self.metrics.render()
+        return 200, text, {"Content-Type": "text/plain; version=0.0.4"}, None
+
+    def handle_admin_model(self, body: dict):
+        svc, role = self.service, body.get("role", "primary")
+        if role not in ("primary", "canary"):
+            raise GatewayError(400, f"unknown role {role!r} "
+                                    "(expected 'primary' or 'canary')")
+        with self.lock:
+            try:
+                version = body.get("version")
+                if "from_version" in body:
+                    version = svc.register_perturbed(
+                        int(body["from_version"]),
+                        float(body.get("perturb_scale", 0.0)),
+                        seed=int(body.get("seed", 0)),
+                        version=version)
+                if role == "primary":
+                    if version is None:
+                        raise GatewayError(
+                            400, "role='primary' needs 'version' (or "
+                                 "'from_version' to register one)")
+                    active = svc.activate_model(int(version))
+                    payload = {"role": "primary", "model_version": active,
+                               "model_versions": list(svc.model_versions())}
+                elif version is None:
+                    svc.disable_shadow()
+                    payload = {"role": "canary", "enabled": False}
+                else:
+                    snap = svc.enable_shadow(
+                        int(version),
+                        fraction=body.get("fraction"),
+                        threshold=body.get("threshold"))
+                    payload = {"role": "canary", "enabled": True,
+                               "shadow": snap}
+            except KeyError as exc:
+                raise GatewayError(400, str(exc.args[0])) from exc
+        return 200, payload, {}, None
+
+    def handle_admin_drain(self):
+        with self.lock:
+            results = self.service.drain()
+            self.draining = True
+            state = self.service.state
+        for r in results:
+            self.scores_total.inc(model_version=r.model_version)
+            self.score_seconds.observe(r.queued_s + r.service_s)
+        return 200, {
+            "drained": len(results), "state": state,
+            "results": [response_to_json(r) for r in results],
+        }, {}, results
+
+    def shadow_after(self, responses: list) -> None:
+        """Feed delivered responses to the canary — called by the HTTP
+        layer strictly after the response bytes hit the socket."""
+        if not responses:
+            return
+        with self.lock:
+            self.service.shadow_observe(responses)
+
+    @staticmethod
+    def _body_items(body: dict, one: str, many: str):
+        """Accept ``{one: {...}}`` or ``{many: [...]}`` -> (items, single)."""
+        if not isinstance(body, dict):
+            raise GatewayError(400, "body must be a JSON object")
+        if one in body:
+            return [body[one]], True
+        if many in body:
+            items = body[many]
+            if not isinstance(items, list):
+                raise GatewayError(400, f"'{many}' must be a list")
+            return items, False
+        raise GatewayError(400, f"body needs '{one}' or '{many}'")
+
+
+class _Handler(BaseHTTPRequestHandler):
+    """HTTP plumbing only — routing, body limits, JSON framing.  All
+    semantics live on :class:`FraudGateway`."""
+
+    protocol_version = "HTTP/1.1"   # keep-alive: bench clients reuse sockets
+    _GET = {"/healthz": "handle_health", "/v1/stats": "handle_stats",
+            "/metrics": "handle_metrics"}
+    _POST = {"/v1/score": "handle_score", "/v1/ingest": "handle_ingest",
+             "/admin/model": "handle_admin_model",
+             "/admin/drain": "handle_admin_drain"}
+
+    @property
+    def gateway(self) -> FraudGateway:
+        return self.server.gateway
+
+    def log_message(self, *args) -> None:   # quiet: telemetry, not stderr
+        pass
+
+    def _endpoint(self, table: dict) -> str | None:
+        path = self.path.split("?", 1)[0]
+        return path if path in table else None
+
+    def do_GET(self) -> None:
+        self._dispatch(self._GET, needs_body=False)
+
+    def do_POST(self) -> None:
+        self._dispatch(self._POST, needs_body=True)
+
+    def _dispatch(self, table: dict, needs_body: bool) -> None:
+        t0 = time.perf_counter()
+        endpoint = self._endpoint(table)
+        if endpoint is None:
+            self._reply("(404)", 404, {"error": f"no such endpoint {self.path!r}"},
+                        {}, t0)
+            return
+        gw, shadow_batch = self.gateway, None
+        try:
+            if needs_body:
+                body = self._read_json()
+                args = () if endpoint.startswith("/admin/drain") else (body,)
+            else:
+                args = ()
+            handler = getattr(gw, table[endpoint])
+            status, payload, headers, shadow_batch = handler(*args)
+        except GatewayError as exc:
+            status, payload, headers = exc.status, {"error": str(exc)}, {}
+        except (ValueError, TypeError) as exc:
+            status, payload, headers = 400, {"error": str(exc)}, {}
+        except Exception as exc:   # noqa: BLE001 — the server must not die
+            status, payload, headers = 500, {
+                "error": f"{type(exc).__name__}: {exc}"}, {}
+        self._reply(endpoint, status, payload, headers, t0)
+        # canary work happens AFTER the response is on the wire
+        if shadow_batch:
+            gw.shadow_after(shadow_batch)
+
+    def _read_json(self) -> dict:
+        length = int(self.headers.get("Content-Length") or 0)
+        if length > self.gateway.config.max_body_bytes:
+            raise GatewayError(
+                413, f"body of {length} bytes exceeds max_body_bytes="
+                     f"{self.gateway.config.max_body_bytes}")
+        raw = self.rfile.read(length) if length else b""
+        if not raw:
+            return {}
+        try:
+            return json.loads(raw)
+        except json.JSONDecodeError as exc:
+            raise GatewayError(400, f"invalid JSON body: {exc}") from exc
+
+    def _reply(self, endpoint: str, status: int, payload, headers: dict,
+               t0: float) -> None:
+        if isinstance(payload, str):
+            data = payload.encode()
+            ctype = headers.pop("Content-Type", "text/plain")
+        else:
+            data = json.dumps(payload).encode()
+            ctype = headers.pop("Content-Type", "application/json")
+        try:
+            self.send_response(status)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(data)))
+            for k, v in headers.items():
+                self.send_header(k, v)
+            self.end_headers()
+            self.wfile.write(data)
+            self.wfile.flush()
+        except (BrokenPipeError, ConnectionResetError):
+            pass   # client went away; telemetry still records the attempt
+        gw = self.gateway
+        gw.http_requests.inc(endpoint=endpoint, code=str(status))
+        gw.http_seconds.observe(time.perf_counter() - t0, endpoint=endpoint)
+
+
+def serve_gateway(config, params, *, warmup: bool = True) -> FraudGateway:
+    """One-liner boot: build a :class:`FraudService` from ``config`` +
+    ``params``, optionally warm it up, and start the HTTP gateway on
+    ``config.gateway``.  Returns the started gateway (``gateway.service``
+    reaches the facade; close with ``gateway.close()``)."""
+    from repro.service import build_service
+
+    svc = build_service(config, params, warmup=warmup)
+    return FraudGateway(svc).start()
+
+
+__all__ = ["FraudGateway", "GatewayError", "serve_gateway",
+           "event_from_json", "request_from_json", "response_to_json",
+           "service_metric_lines"]

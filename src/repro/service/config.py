@@ -4,7 +4,7 @@ Before ``repro.service`` existed, each entry point re-assembled
 ``params + LNNConfig + EngineConfig + KVStore kwargs`` by hand: the batch
 pipeline took (cfg, k_max, store), the streaming engine took (cfg,
 EngineConfig, store), and every benchmark wired its own variant.
-``ServiceConfig`` subsumes all of them in five sections:
+``ServiceConfig`` subsumes all of them in six sections:
 
 * :class:`ModelSection`     — the LNN itself (mirrors ``LNNConfig``);
 * :class:`EngineSection`    — speed-layer scheduling: micro-batch triggers,
@@ -12,7 +12,9 @@ EngineConfig, store), and every benchmark wired its own variant.
 * :class:`StoreSection`     — KV store: capacity / TTL / sharding;
 * :class:`RefreshSection`   — batch-layer cadence and threading;
 * :class:`AdmissionSection` — overload policy: queue-depth / in-flight caps
-  with shed-vs-block.
+  with shed-vs-block and a bounded block wait;
+* :class:`GatewaySection`   — the HTTP front-end (``repro.gateway``): bind
+  address, body limits, 429 Retry-After hint, canary/shadow defaults.
 
 The tree round-trips through ``to_dict``/``from_dict`` and JSON
 (``to_json``/``from_json``, ``save``/``load``), with **unknown-key
@@ -138,11 +140,18 @@ class AdmissionSection:
     * ``max_in_flight`` — concurrently busy workers (open virtual service
       windows); at the cap, ``shed`` rejects, ``block`` admits but counts
       the stall.
+    * ``block_max_wait_s`` — wall-clock bound on one block-policy stall.
+      ``None`` keeps the legacy unbounded wait (the producer stalls until
+      force-flushing frees capacity, and is admitted over-cap if it never
+      does); a finite value times the stall out and **sheds** the request
+      instead (counted in ``ServiceStats.block_timeouts``), which the HTTP
+      gateway maps to ``503 Service Unavailable``.
     """
 
     max_queue_depth: int | None = None
     max_in_flight: int | None = None
     policy: str = "shed"            # 'shed' | 'block'
+    block_max_wait_s: float | None = None   # wall bound on a block stall
 
     def __post_init__(self):
         if self.policy not in ("shed", "block"):
@@ -153,6 +162,53 @@ class AdmissionSection:
             v = getattr(self, name)
             if v is not None and v < 1:
                 raise ValueError(f"admission.{name} must be >= 1 or None")
+        if self.block_max_wait_s is not None and self.block_max_wait_s < 0:
+            raise ValueError("admission.block_max_wait_s must be >= 0 or None")
+
+
+@dataclass(frozen=True)
+class GatewaySection:
+    """HTTP front-end (``repro.gateway``) knobs.
+
+    * ``host`` / ``port`` — bind address; port 0 asks the kernel for an
+      ephemeral port (tests, CI smoke) which ``FraudGateway.port`` reports.
+    * ``retry_after_s`` — the hint sent in the ``Retry-After`` header of a
+      ``429`` shed response (seconds, rendered at millisecond precision).
+    * ``max_body_bytes`` — request bodies above this are refused with
+      ``413`` before JSON parsing (socket-level overload protection).
+    * ``shadow_fraction`` / ``shadow_divergence_threshold`` — canary
+      defaults: the fraction of scored traffic re-scored off the response
+      path by the shadow model version, and the |primary − shadow| score
+      gap that trips the divergence alert (``POST /admin/model`` with
+      ``role="canary"`` may override both per activation).
+    * ``latency_buckets`` — upper bounds (seconds) of the Prometheus
+      request-latency histogram.
+    """
+
+    host: str = "127.0.0.1"
+    port: int = 0                   # 0 = ephemeral (kernel-assigned)
+    retry_after_s: float = 0.05     # 429 Retry-After hint
+    max_body_bytes: int = 1 << 20   # 413 above this
+    shadow_fraction: float = 0.0    # default canary sampling fraction
+    shadow_divergence_threshold: float = 0.25
+    latency_buckets: tuple = (0.001, 0.0025, 0.005, 0.01, 0.025,
+                              0.05, 0.1, 0.25, 1.0)
+
+    def __post_init__(self):
+        object.__setattr__(self, "latency_buckets",
+                           tuple(float(b) for b in self.latency_buckets))
+        if not 0 <= self.port <= 65535:
+            raise ValueError("gateway.port must be in [0, 65535]")
+        if not 0.0 <= self.shadow_fraction <= 1.0:
+            raise ValueError("gateway.shadow_fraction must be in [0, 1]")
+        if self.shadow_divergence_threshold < 0:
+            raise ValueError("gateway.shadow_divergence_threshold must be >= 0")
+        if self.max_body_bytes < 1:
+            raise ValueError("gateway.max_body_bytes must be >= 1")
+        if self.retry_after_s < 0:
+            raise ValueError("gateway.retry_after_s must be >= 0")
+        if list(self.latency_buckets) != sorted(set(self.latency_buckets)):
+            raise ValueError("gateway.latency_buckets must be strictly increasing")
 
 
 _SECTIONS = {
@@ -161,6 +217,7 @@ _SECTIONS = {
     "store": StoreSection,
     "refresh": RefreshSection,
     "admission": AdmissionSection,
+    "gateway": GatewaySection,
 }
 
 
@@ -174,6 +231,7 @@ class ServiceConfig:
     store: StoreSection = field(default_factory=StoreSection)
     refresh: RefreshSection = field(default_factory=RefreshSection)
     admission: AdmissionSection = field(default_factory=AdmissionSection)
+    gateway: GatewaySection = field(default_factory=GatewaySection)
 
     def __post_init__(self):
         if self.mode not in ("batch", "streaming"):

@@ -23,11 +23,21 @@ On top of the legacy paths it adds:
   stamped with the model version so post-swap reads of pre-swap embeddings
   are detectable (``store.stats['model_stale_reads']``);
 * **admission control** — queue-depth / in-flight caps with a
-  shed-vs-block policy, accounted in :class:`~repro.service.types.ServiceStats`.
+  shed-vs-block policy (block stalls bounded by
+  ``admission.block_max_wait_s`` with a timed-out→shed fallback), accounted
+  in :class:`~repro.service.types.ServiceStats`;
+* **canary/shadow scoring** — :meth:`enable_shadow` re-scores a sampled
+  fraction of admitted traffic under a second registered model version,
+  off the response path, tracking |primary − shadow| divergence and
+  raising an alert when it breaches a threshold (the HTTP gateway surfaces
+  both in ``/metrics``; see ``repro.gateway``).
 """
 from __future__ import annotations
 
 import math
+import threading
+
+import numpy as np
 
 from repro.serve.kvstore import KVStore
 from repro.service.config import ServiceConfig
@@ -75,7 +85,15 @@ class FraudService:
             self.load_model(params, version=0)
         # admission + traffic accounting (ServiceStats surface)
         self._acct = {"requests": 0, "scored": 0, "shed": 0, "blocked": 0,
+                      "block_timeouts": 0,
                       "queue_depth_peak": 0, "in_flight_peak": 0}
+        self._scores_by_version: dict[int, int] = {}
+        # canary/shadow scoring state (enable_shadow); the lock makes the
+        # divergence counters tear-free under the gateway's request threads
+        self._shadow_lock = threading.Lock()
+        self._shadow: dict | None = None
+        self._shadow_acc = 0.0
+        self._shadow_jits: dict[int, object] = {}
         # mode-specific internals (populated by build)
         self._engine = None          # streaming
         self._batch_layer = None     # batch
@@ -168,7 +186,7 @@ class FraudService:
         if self.mode == "streaming":
             out = self._engine.flush(now)
             self._engine.refresher.drain()
-            self._acct["scored"] += len(out)
+            self._account_scored(out)
         self._state = "drained"
         return out
 
@@ -220,6 +238,189 @@ class FraudService:
         """Every registered version, ascending."""
         return tuple(sorted(self._models))
 
+    def register_model(self, params, version: int | None = None) -> int:
+        """Add ``params`` to the version registry WITHOUT activating them —
+        the staging half of a rollout: a registered version can be activated
+        later (:meth:`activate_model`) or served as the canary
+        (:meth:`enable_shadow`).  Returns the version registered."""
+        if self._state == "closed":
+            raise ServiceLifecycleError("register_model() on a closed service")
+        if version is None:
+            version = (max(self._models) + 1) if self._models else 0
+        self._models[int(version)] = params
+        return int(version)
+
+    def activate_model(self, version: int) -> int:
+        """Hot-swap to an already-registered version (the gateway's
+        ``POST /admin/model`` body names versions, never raw parameters —
+        weights travel via checkpoints, not JSON)."""
+        version = int(version)
+        if version not in self._models:
+            raise KeyError(
+                f"model version {version} is not registered "
+                f"(registered: {self.model_versions()})")
+        return self.load_model(self._models[version], version)
+
+    def register_perturbed(self, from_version: int, scale: float,
+                           seed: int = 0, version: int | None = None) -> int:
+        """Register a new version derived from ``from_version`` by adding
+        deterministic Gaussian noise of ``scale`` to every parameter leaf.
+
+        ``scale=0.0`` clones the weights — the wire-parity tests hot-swap to
+        such a clone to prove scores stay bit-identical across a version
+        bump; a nonzero scale makes a deliberately-divergent canary that
+        must trip the shadow divergence alert."""
+        from_version = int(from_version)
+        if from_version not in self._models:
+            raise KeyError(
+                f"model version {from_version} is not registered "
+                f"(registered: {self.model_versions()})")
+        import jax
+
+        rng = np.random.default_rng(seed)
+
+        def perturb(leaf):
+            a = np.asarray(leaf)
+            if scale == 0.0 or not np.issubdtype(a.dtype, np.floating):
+                return a
+            return (a + scale * rng.standard_normal(a.shape)).astype(a.dtype)
+
+        params = jax.tree_util.tree_map(perturb, self._models[from_version])
+        return self.register_model(params, version)
+
+    # ------------------------------------------------------- shadow (canary)
+    def enable_shadow(self, version: int, fraction: float | None = None,
+                      threshold: float | None = None) -> dict:
+        """Start canary/shadow scoring: a sampled ``fraction`` of admitted
+        responses is re-scored under registered ``version`` (off the
+        response path — callers invoke :meth:`shadow_observe` AFTER the
+        primary response is delivered) and |primary − shadow| divergence is
+        accumulated; one sample above ``threshold`` raises the alert
+        (``shadow['alert_active']``, sticky until shadow is re-enabled).
+
+        Defaults for ``fraction``/``threshold`` come from
+        ``config.gateway``.  Returns the initial shadow-state snapshot.
+        """
+        if self._state == "closed":
+            raise ServiceLifecycleError("enable_shadow() on a closed service")
+        version = int(version)
+        if version not in self._models:
+            raise KeyError(
+                f"shadow version {version} is not registered "
+                f"(registered: {self.model_versions()})")
+        gw = self.config.gateway
+        fraction = gw.shadow_fraction if fraction is None else float(fraction)
+        if not 0.0 <= fraction <= 1.0:
+            raise ValueError("shadow fraction must be in [0, 1]")
+        threshold = (gw.shadow_divergence_threshold if threshold is None
+                     else float(threshold))
+        with self._shadow_lock:
+            self._shadow = {
+                "version": version, "fraction": fraction,
+                "threshold": threshold, "sampled": 0,
+                "divergence_sum": 0.0, "divergence_max": 0.0,
+                "last_divergence": 0.0, "alerts": 0, "alert_active": False,
+            }
+            self._shadow_acc = 0.0
+            return dict(self._shadow)
+
+    def disable_shadow(self) -> None:
+        with self._shadow_lock:
+            self._shadow = None
+
+    def shadow_stats(self) -> dict:
+        """Snapshot of the divergence counters (empty dict = shadow off)."""
+        with self._shadow_lock:
+            return dict(self._shadow) if self._shadow is not None else {}
+
+    def shadow_observe(self, responses: list) -> int:
+        """Feed delivered responses to the shadow scorer.
+
+        Samples admitted responses at the configured fraction (deterministic
+        error-accumulator sampling, not RNG — replays sample identically),
+        re-scores them in ONE padded stage-2 dispatch under the shadow
+        version against the live KV store, and folds |primary − shadow|
+        into the divergence counters.  Returns the number sampled.
+
+        In streaming mode the shadow batch is padded to the same pow2
+        buckets the speed layer uses, so an identical-weights shadow
+        diverges by exactly 0.0 (bit-parity); in batch mode the primary
+        path's batch shape differs, so identical weights may diverge at
+        float-epsilon scale (~1e-6) — thresholds should sit far above that.
+        """
+        with self._shadow_lock:
+            if self._shadow is None:
+                return 0
+            version = self._shadow["version"]
+            fraction = self._shadow["fraction"]
+            picked: list[ScoreResponse] = []
+            for r in responses:
+                if not r.admitted:
+                    continue
+                self._shadow_acc += fraction
+                if self._shadow_acc >= 1.0 - 1e-12:
+                    self._shadow_acc -= 1.0
+                    picked.append(r)
+        if not picked:
+            return 0
+        shadow_scores = self._shadow_score([r.request for r in picked], version)
+        with self._shadow_lock:
+            sh = self._shadow
+            if sh is None or sh["version"] != version:
+                return 0   # shadow was swapped/disabled mid-scoring
+            for r, p in zip(picked, shadow_scores):
+                d = abs(float(r.score) - float(p))
+                sh["sampled"] += 1
+                sh["divergence_sum"] += d
+                sh["divergence_max"] = max(sh["divergence_max"], d)
+                sh["last_divergence"] = d
+                if d > sh["threshold"]:
+                    sh["alerts"] += 1
+                    sh["alert_active"] = True
+        return len(picked)
+
+    def _shadow_score(self, requests: list, version: int) -> np.ndarray:
+        """Score ``requests`` under registered ``version`` against the live
+        store, replicating the primary path's numerics per mode (streaming:
+        versioned snapshot-fallback lookup, pow2 bucket padding, host f64
+        sigmoid; batch: exact-key lookup as ``serve.SpeedLayer`` does)."""
+        import jax
+
+        from repro.core.lnn import lnn_stage2_online
+        from repro.stream.microbatch import bucket_size
+
+        lnn = self.config.to_lnn_config()
+        k = self.config.engine.k_max
+        jit = self._shadow_jits.get(version)
+        if jit is None:
+            jit = self._shadow_jits[version] = jax.jit(
+                lambda p, emb, mask, feats: lnn_stage2_online(
+                    p, lnn, emb, mask, feats))
+        n = len(requests)
+        b = bucket_size(n, max(2, self.config.engine.max_batch))
+        feats = np.zeros((b, lnn.feat_dim), np.float32)
+        key_lists: list[list] = [[] for _ in range(b)]
+        for i, r in enumerate(requests):
+            feats[i] = r.features
+            key_lists[i] = list(r.entity_keys)
+        if self.mode == "streaming":
+            # expected_model_version=None: shadow reads must not pollute the
+            # production model_stale_reads counter
+            emb, mask, _ = self.store.lookup_batch_versioned(key_lists, k)
+        else:
+            from repro.serve.kvstore import pack_key
+
+            packed = [[pack_key(e, t) for (e, t) in keys] for keys in key_lists]
+            emb, mask = self.store.lookup_batch(packed, k)
+        logits = np.asarray(jit(self._models[version], emb, mask, feats),
+                            np.float64)
+        # host-side f64 sigmoid, matching Stage2Scorer exactly (bit-parity);
+        # a strongly-perturbed canary can drive exp to +inf, which saturates
+        # to prob 0.0 — well-defined, so the overflow warning is noise
+        with np.errstate(over="ignore"):
+            probs = (1.0 / (1.0 + np.exp(-logits))).astype(np.float32)
+        return probs[:n]
+
     # ------------------------------------------------------------ batch mode
     def refresh(self, batches) -> dict:
         """Batch-layer refresh over community batches (mode='batch')."""
@@ -265,7 +466,7 @@ class FraudService:
                               model_version=self._model_version)
                 for r, p in zip(chunk, probs)
             )
-        self._acct["scored"] += sum(len(c) for c in chunks)
+        self._account_scored(out)
         out.extend(
             ScoreResponse(request=r, score=math.nan, admitted=False,
                           model_version=self._model_version)
@@ -304,7 +505,7 @@ class FraudService:
             self._acct["in_flight_peak"], pool.busy_workers(now))
 
         if not self._admit(req, pool, adm, now, out):
-            self._acct["scored"] += len(out)
+            self._account_scored(out)
             out.append(ScoreResponse(
                 request=req, score=math.nan, admitted=False,
                 model_version=self._model_version))
@@ -314,7 +515,7 @@ class FraudService:
         self._acct["queue_depth_peak"] = max(
             self._acct["queue_depth_peak"], len(pool) + 1)
         out.extend(pool.submit(req, now))
-        self._acct["scored"] += len(out)
+        self._account_scored(out)
         return out
 
     def _admit(self, req, pool, adm, now: float, out: list) -> bool:
@@ -330,12 +531,17 @@ class FraudService:
             # the reorder buffer may withhold a flushed batch until earlier
             # sequence numbers complete, so an empty return is routine with
             # multiple workers while the flush itself still freed capacity.
+            # The stall is wall-clock-bounded by admission.block_max_wait_s:
+            # on timeout (or a wedged queue) the request is shed instead of
+            # waiting forever / being admitted over-cap.
             self._acct["blocked"] += 1
-            while len(pool) >= adm.max_queue_depth:
-                before = len(pool)
-                out.extend(pool.force_flush_deepest(now))
-                if len(pool) >= before:
-                    break  # every queue empty — nothing left to drain
+            drained, admitted = pool.drain_to_depth(
+                adm.max_queue_depth, now, budget_s=adm.block_max_wait_s)
+            out.extend(drained)
+            if not admitted:
+                self._acct["block_timeouts"] += 1
+                self._acct["shed"] += 1
+                return False
         if adm.max_in_flight is not None \
                 and pool.busy_workers(now) >= adm.max_in_flight:
             if adm.policy == "shed":
@@ -343,6 +549,16 @@ class FraudService:
                 return False
             self._acct["blocked"] += 1  # admitted, but the stall is visible
         return True
+
+    def ingest(self, event) -> None:
+        """Ingest one event into the DDS/batch layer WITHOUT scoring —
+        backfill and non-checkout entity activity (the gateway's
+        ``POST /v1/ingest``).  Counts toward refresh triggers and KV
+        writes but not toward request/score accounting."""
+        self._ensure(_SERVABLE, "ingest")
+        self._require_mode("streaming", "ingest")
+        self._state = "serving"
+        self._engine.ingest(event)
 
     def replay(self, events, warmup: bool = True):
         """Drive a whole event stream; returns the engine's
@@ -366,8 +582,18 @@ class FraudService:
             results=[r for r in results if r.admitted], engine=self._engine)
 
     # ----------------------------------------------------------------- stats
+    def _account_scored(self, results: list) -> None:
+        """Count delivered scores, split per model version (only admitted
+        responses were actually scored by a version's jit cache)."""
+        self._acct["scored"] += len(results)
+        for r in results:
+            v = int(r.model_version)
+            self._scores_by_version[v] = self._scores_by_version.get(v, 0) + 1
+
     def stats(self) -> ServiceStats:
-        """One structured snapshot of the whole service."""
+        """One structured snapshot of the whole service.  The gateway's
+        ``/v1/stats`` and ``/metrics`` are rendered from this object's
+        ``to_dict()`` — every counter here is on the wire."""
         acct = self._acct
         st = ServiceStats(
             mode=self.mode, state=self._state,
@@ -376,8 +602,11 @@ class FraudService:
             model_swaps=self._model_swaps,
             requests=acct["requests"], scored=acct["scored"],
             shed=acct["shed"], blocked=acct["blocked"],
+            block_timeouts=acct["block_timeouts"],
             queue_depth_peak=acct["queue_depth_peak"],
             in_flight_peak=acct["in_flight_peak"],
+            scores_by_version=dict(self._scores_by_version),
+            shadow=self.shadow_stats(),
         )
         if self.store is not None:
             st.store_size = len(self.store)

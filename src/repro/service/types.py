@@ -12,7 +12,7 @@ This module is a dependency leaf — numpy only — so ``repro.serve`` and
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 
 import numpy as np
 
@@ -71,8 +71,13 @@ class ServiceStats:
     """One structured snapshot of a :class:`~repro.service.FraudService`.
 
     Everything a dashboard needs: lifecycle state, admission accounting,
-    model-registry state, micro-batch/flush counters, batch-layer refresh
-    counters, and KV-store internals.  ``to_dict`` flattens for JSON.
+    model-registry state, per-version score counts, canary/shadow divergence
+    state, micro-batch/flush counters, batch-layer refresh counters, and
+    KV-store internals.  ``to_dict``/``from_dict`` round-trip losslessly
+    through JSON — the gateway's ``/v1/stats`` body and ``/metrics`` render
+    are both derived from this ONE snapshot (no ad-hoc dicts), so every
+    counter that exists here exists on the wire
+    (``tests/test_service.py::test_service_stats_json_roundtrip``).
     """
 
     mode: str = ""                          # "batch" | "streaming"
@@ -84,6 +89,7 @@ class ServiceStats:
     scored: int = 0                         # responses actually scored
     shed: int = 0                           # rejected by admission (policy=shed)
     blocked: int = 0                        # stalled by admission (policy=block)
+    block_timeouts: int = 0                 # block stalls that timed out -> shed
     queue_depth: int = 0                    # queued right now (streaming)
     queue_depth_peak: int = 0               # high-water mark since build
     in_flight_peak: int = 0                 # busy-worker high-water mark
@@ -92,10 +98,37 @@ class ServiceStats:
     entities_written: int = 0
     model_stale_reads: int = 0              # KV hits stamped by an older model
     store_size: int = 0
+    scores_by_version: dict = field(default_factory=dict)  # version -> scored
+    shadow: dict = field(default_factory=dict)   # canary/shadow divergence state
     store_stats: dict = field(default_factory=dict)
     extra: dict = field(default_factory=dict)
 
     def to_dict(self) -> dict:
+        """JSON-safe flatten.  ``scores_by_version`` keys become strings
+        (JSON object keys always are); ``from_dict`` restores them to ints,
+        so ``from_dict(json.loads(json.dumps(to_dict())))`` is lossless."""
         d = dict(self.__dict__)
         d["model_versions"] = list(self.model_versions)
+        d["scores_by_version"] = {
+            str(k): v for k, v in self.scores_by_version.items()
+        }
         return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServiceStats":
+        """Inverse of :meth:`to_dict` (e.g. to re-type a ``/v1/stats`` body).
+        Unknown keys are rejected — a drifted producer fails loudly."""
+        names = {f.name for f in fields(cls)}
+        unknown = sorted(set(d) - names)
+        if unknown:
+            raise ValueError(
+                f"unknown key(s) {unknown} in ServiceStats dict — "
+                f"valid keys: {sorted(names)}")
+        d = dict(d)
+        if "model_versions" in d:
+            d["model_versions"] = tuple(d["model_versions"])
+        if "scores_by_version" in d:
+            d["scores_by_version"] = {
+                int(k): v for k, v in d["scores_by_version"].items()
+            }
+        return cls(**d)

@@ -31,6 +31,8 @@ any N and any flush interleaving (``tests/test_stream.py`` replay-parity).
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import numpy as np
 
@@ -450,6 +452,34 @@ class WorkerPool:
         results = victim._flush_at(now, "forced_flushes")
         self._reorder.add(results)
         return self._reorder.release()
+
+    def drain_to_depth(self, max_depth: int, now: float,
+                       budget_s: float | None = None,
+                       clock=time.monotonic) -> tuple[list[ScoredResult], bool]:
+        """Bounded block-admission wait: force-flush the deepest queue until
+        total depth drops below ``max_depth`` or the wall-clock ``budget_s``
+        runs out.
+
+        Returns ``(results, admitted)``.  ``admitted`` is False exactly when
+        the stall timed out — the budget expired, or a flush pass freed no
+        capacity (wedged queue) while a finite budget was set.  With
+        ``budget_s=None`` the legacy semantics hold: a no-progress pass
+        stops the stall and the caller admits over-cap (that unbounded/
+        over-cap behavior is the bug ``admission.block_max_wait_s`` bounds —
+        see ``tests/test_service.py::test_block_admission_bounded_wait``).
+        """
+        results: list[ScoredResult] = []
+        deadline = None if budget_s is None else clock() + budget_s
+        while len(self) >= max_depth:
+            if deadline is not None and clock() >= deadline:
+                return results, False
+            before = len(self)
+            results.extend(self.force_flush_deepest(now))
+            if len(self) >= before:
+                # nothing freed (every queue empty, or the flush raced away):
+                # legacy mode admits over-cap; a bounded stall sheds instead
+                return results, deadline is None
+        return results, True
 
     # ----------------------------------------------------------------- drain
     def flush(self, now: float | None = None) -> list[ScoredResult]:

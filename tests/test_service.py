@@ -423,3 +423,120 @@ def test_stats_to_dict_is_json_safe(service_world):
     d = svc.stats().to_dict()
     json.dumps(d)        # must not raise
     assert d["mode"] == "streaming" and d["requests"] == 40
+
+
+def test_service_stats_json_roundtrip():
+    """Every counter survives to_dict -> JSON -> from_dict bit-for-bit: the
+    gateway's /v1/stats and /metrics render from this ONE snapshot, so a
+    field that doesn't round-trip is a field that silently falls off the
+    wire.  The sample below must set EVERY dataclass field to a non-default
+    value — adding a field without extending it fails here."""
+    import dataclasses
+    import json
+
+    from repro.service import ServiceStats
+
+    sample = ServiceStats(
+        mode="streaming", state="serving", model_version=3,
+        model_versions=(0, 3, 9), model_swaps=2, requests=100, scored=90,
+        shed=7, blocked=5, block_timeouts=3, queue_depth=4,
+        queue_depth_peak=12, in_flight_peak=2, flushes=31, refreshes=6,
+        entities_written=250, model_stale_reads=11, store_size=420,
+        scores_by_version={0: 40, 3: 50},
+        shadow={"version": 9, "fraction": 0.5, "threshold": 0.25,
+                "sampled": 45, "divergence_sum": 0.5, "divergence_max": 0.1,
+                "last_divergence": 0.01, "alerts": 1, "alert_active": True},
+        store_stats={"hits": 10, "model_stale_reads": 11},
+        extra={"pool": {"steals": 1}},
+    )
+    defaults = ServiceStats()
+    for f in dataclasses.fields(ServiceStats):
+        assert getattr(sample, f.name) != getattr(defaults, f.name), \
+            f"test sample leaves ServiceStats.{f.name} at its default — " \
+            "extend the sample so the round-trip exercises it"
+
+    wire = json.loads(json.dumps(sample.to_dict()))
+    back = ServiceStats.from_dict(wire)
+    assert back == sample
+    assert isinstance(back.model_versions, tuple)
+    # JSON stringifies mapping keys; from_dict restores the int versions
+    assert back.scores_by_version == {0: 40, 3: 50}
+    with pytest.raises(ValueError, match="unknown key"):
+        ServiceStats.from_dict({**wire, "scoredd": 1})
+
+    # the live service produces the same lossless round-trip
+    live = ServiceStats.from_dict(json.loads(json.dumps(sample.to_dict())))
+    assert live.to_dict() == sample.to_dict()
+
+
+# ------------------------------------------------- bounded block-mode stalls
+def test_block_admission_bounded_wait(service_world):
+    """Regression: block-mode admission used to wait unboundedly (and then
+    admit over-cap) when force-flushing the deepest queue freed nothing.
+    ``admission.block_max_wait_s`` bounds the stall on the wall clock and
+    sheds on timeout — counted in ``ServiceStats.block_timeouts``."""
+    events, cfg, params, sc = service_world
+
+    # zero budget: the stall times out immediately -> timed-out shed
+    svc = FraudService(
+        sc.replace(engine={"max_batch": 64, "max_wait_s": 1e9},
+                   admission={"max_queue_depth": 1, "policy": "block",
+                              "block_max_wait_s": 0.0}),
+        params=params).build()
+    out = [r for ev in events[:3] for r in svc.submit(ev)]
+    shed = [r for r in out if not r.admitted]
+    assert len(shed) == 2 and all(math.isnan(r.score) for r in shed)
+    st = svc.stats()
+    assert st.block_timeouts == 2 and st.shed == 2 and st.blocked == 2
+    # the bounded block never admits over-cap
+    assert st.queue_depth_peak <= 1
+
+    # a generous budget behaves like classic block: force-flushes free
+    # capacity, everything is admitted, nothing times out
+    svc2 = FraudService(
+        sc.replace(engine={"max_batch": 8, "num_workers": 2,
+                           "service_model_s": 0.05},
+                   admission={"max_queue_depth": 6, "policy": "block",
+                              "block_max_wait_s": 30.0}),
+        params=params).build()
+    rep = svc2.replay(events)
+    st2 = svc2.stats()
+    assert len(rep.results) == len(events)
+    assert st2.blocked > 0 and st2.block_timeouts == 0 and st2.shed == 0
+
+
+def test_drain_to_depth_clock_semantics(service_world):
+    """WorkerPool.drain_to_depth: a finite budget times the stall out on the
+    injected clock even when a flush WOULD free capacity; budget=None keeps
+    the legacy unbounded semantics (flush until below cap)."""
+    events, cfg, params, sc = service_world
+    sc = sc.replace(engine={"max_batch": 64, "max_wait_s": 1e9})
+
+    def fill(svc, n=4):
+        for ev in events[:n]:
+            svc.submit(ev)
+        return svc.engine.pool
+
+    # budget expires before the first flush pass -> not admitted, queue kept
+    svc = FraudService(sc, params=params).build()
+    pool = fill(svc)
+    depth0 = len(pool)
+    assert depth0 == 4
+    ticks = iter([0.0, 100.0])
+    drained, admitted = pool.drain_to_depth(
+        1, events[3].arrival, budget_s=5.0, clock=lambda: next(ticks))
+    assert not admitted and drained == [] and len(pool) == depth0
+
+    # same pool, no budget: the legacy path flushes down below the cap
+    drained, admitted = pool.drain_to_depth(1, events[3].arrival, budget_s=None)
+    assert admitted and len(drained) == depth0 and len(pool) == 0
+
+
+def test_block_max_wait_validation():
+    with pytest.raises(ValueError, match="block_max_wait_s"):
+        ServiceConfig.from_dict(
+            {"admission": {"policy": "block", "block_max_wait_s": -1.0}})
+    # round-trips with the rest of the admission section
+    sc = ServiceConfig().replace(
+        admission={"policy": "block", "block_max_wait_s": 0.25})
+    assert ServiceConfig.from_json(sc.to_json()).admission.block_max_wait_s == 0.25

@@ -25,8 +25,9 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, os.path.join(str(ROOT), "src"))
 
-#: the reviewed serving surface: the new typed API + both shim packages
-MODULES = ["repro.service", "repro.serve", "repro.stream"]
+#: the reviewed serving surface: the typed API, the HTTP gateway over it,
+#: and both shim packages
+MODULES = ["repro.service", "repro.gateway", "repro.serve", "repro.stream"]
 
 SNAPSHOT = ROOT / "tools" / "api_surface.json"
 

@@ -23,6 +23,7 @@ DEFAULT_RECORDS = [
     "experiments/BENCH_stage2.json",
     "experiments/BENCH_multiworker.json",
     "experiments/BENCH_refresh.json",
+    "experiments/BENCH_gateway.json",
 ]
 
 PCTS = ("p50", "p95", "p99")
@@ -134,11 +135,43 @@ def check_refresh(d: dict) -> list[str]:
     return e
 
 
+def check_gateway(d: dict) -> list[str]:
+    e: list[str] = []
+    _require(e, _num(d.get("n_events")), "n_events: finite number required")
+    cfg = d.get("config") or {}
+    for k in ("num_clients", "nominal_rate", "overload_rate"):
+        _require(e, _num(cfg.get(k)), f"config.{k}: number")
+    scen = d.get("scenarios") or {}
+    for name in ("nominal", "shed", "block"):
+        s = scen.get(name)
+        _require(e, isinstance(s, dict), f"scenarios.{name}: dict required")
+        for k in ("sent", "wall_s", "throughput_eps", "ok",
+                  "rejected_429", "rejected_503"):
+            _require(e, _num((s or {}).get(k)), f"scenarios.{name}.{k}: number")
+        lat = (s or {}).get("latency_ms") or {}
+        for k in PCTS:
+            _require(e, _num(lat.get(k)), f"scenarios.{name}.latency_ms.{k}: number")
+    _require(e, _num((scen.get("shed") or {}).get("shed_rate")),
+             "scenarios.shed.shed_rate: number")
+    can = d.get("canary") or {}
+    for k in ("sampled", "alerts", "divergence_max"):
+        _require(e, _num(can.get(k)), f"canary.{k}: number")
+    # backpressure must reach the socket, and the perturbed canary must
+    # alert in the scraped /metrics — gates, not statistics
+    gates = d.get("gates") or {}
+    for k in ("shed_maps_to_429", "block_maps_to_503", "divergence_alert"):
+        _require(e, gates.get(k) is True,
+                 f"gates.{k}: must be True (socket-level backpressure / "
+                 "canary-alert gate)")
+    return e
+
+
 CHECKERS = {
     "BENCH_streaming.json": check_streaming,
     "BENCH_stage2.json": check_stage2,
     "BENCH_multiworker.json": check_multiworker,
     "BENCH_refresh.json": check_refresh,
+    "BENCH_gateway.json": check_gateway,
 }
 
 
