@@ -1,0 +1,222 @@
+"""Recovery benchmark — what crash consistency costs and what it buys.
+
+Measures the three prices of the ``repro.stream.checkpoint`` layer:
+
+* **checkpoint write latency** — wall seconds for one atomic checkpoint of
+  the full streaming state (plus its on-disk size);
+* **restore latency vs log length** — a crash is simulated at several
+  stream positions by snapshotting the durable directory and restoring
+  from the copy: replaying a longer WAL suffix must cost proportionally
+  more, which is exactly the cost a checkpoint bounds;
+* **checkpoint payoff** — restore-from-checkpoint vs genesis restore at
+  the same stream position (the replay suffix collapses to ~0 records).
+
+And one **gate**: after the final crash-restore, resuming the feed must
+produce bit-identical scores and KV bytes vs an uninterrupted oracle —
+recorded as ``gates.recovery_bit_identical`` in
+``experiments/BENCH_recovery.json`` and enforced by
+``tools/check_bench_schema.py``.  A recovery bench whose recovery is wrong
+measures nothing.
+
+Run:  PYTHONPATH=src python benchmarks/recovery_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for base, _, files in os.walk(path):
+        total += sum(os.path.getsize(os.path.join(base, f)) for f in files)
+    return total
+
+
+def _restore_from_copy(root: str, scratch: str):
+    """Copy the durable dir (the crash leaves it frozen) and restore from
+    the copy, so the live service can keep appending to the original."""
+    from repro.service import FraudService
+
+    snap = tempfile.mkdtemp(dir=scratch)
+    shutil.rmtree(snap)
+    shutil.copytree(root, snap)
+    t0 = time.perf_counter()
+    svc = FraudService.restore(snap)
+    dt = time.perf_counter() - t0
+    return svc, dt, snap
+
+
+def run_recovery_bench(*, num_users=40, num_rings=2, n_events=60,
+                       num_workers=1, max_batch=4, seed=3) -> dict:
+    import jax
+
+    from repro.core import LNNConfig, lnn_init
+    from repro.data import SynthConfig, generate_event_stream
+    from repro.service import FraudService, ModelSection, ServiceConfig
+
+    events, g, _ = generate_event_stream(
+        SynthConfig(num_users=num_users, num_rings=num_rings,
+                    feature_noise=0.8, seed=seed),
+        rate_per_s=500.0)
+    events = events[:n_events]
+    n_events = len(events)
+    cfg = LNNConfig(num_gnn_layers=2, hidden_dim=16,
+                    feat_dim=g.order_features.shape[1], mlp_dims=(16,))
+    params = lnn_init(jax.random.PRNGKey(0), cfg)
+    sc = ServiceConfig(
+        mode="streaming", model=ModelSection.from_lnn_config(cfg),
+    ).replace(engine={"num_workers": num_workers, "max_batch": max_batch})
+
+    def build():
+        return FraudService(sc, params=params).build()
+
+    # --- the oracle: uninterrupted, no WAL
+    oracle = build()
+    oracle_resp = []
+    for ev in events:
+        oracle_resp.extend(oracle.submit(ev))
+    oracle_resp.extend(oracle.drain())
+    oracle_scores = {r.request.tag.order_id: r.score
+                     for r in oracle_resp if r.admitted}
+    oracle_store = {k: (e.value.tobytes(), e.model_version)
+                    for shard in oracle.store._shards
+                    for k, e in shard.items()}
+
+    scratch = tempfile.mkdtemp(prefix="bench_recovery_")
+    root = os.path.join(scratch, "wal")
+    svc = build().enable_wal(root)
+
+    # --- replay-suffix cost vs log length (no checkpoint yet)
+    marks = sorted({max(1, n_events // 4), n_events // 2,
+                    (3 * n_events) // 4, n_events})
+    curve = []
+    checkpoint_rec = None
+    ckpt_at = n_events // 2
+    delivered = []   # the client's view: responses handed out pre-crash
+    for i, ev in enumerate(events):
+        delivered.extend(svc.submit(ev))
+        pos = i + 1
+        if pos in marks:
+            restored, dt, snap = _restore_from_copy(root, scratch)
+            curve.append({
+                "events_fed": pos,
+                "log_records": int(svc.applied_seq),
+                "replayed_records":
+                    int(restored.last_recovery["replayed_records"]),
+                "restore_s": dt,
+            })
+            shutil.rmtree(snap)
+        if pos == ckpt_at:
+            t0 = time.perf_counter()
+            path = svc.checkpoint()
+            write_s = time.perf_counter() - t0
+            checkpoint_rec = {
+                "write_s": write_s,
+                "size_bytes": _dir_bytes(path),
+                "applied_seq": int(svc.applied_seq),
+            }
+
+    # --- checkpoint payoff at end-of-stream: suffix replay vs full replay
+    with_ckpt, with_ckpt_s, snap1 = _restore_from_copy(root, scratch)
+    replayed_with = int(with_ckpt.last_recovery["replayed_records"])
+    # drop the committed checkpoints from a copy -> genesis restore
+    genesis_root = tempfile.mkdtemp(dir=scratch)
+    shutil.rmtree(genesis_root)
+    shutil.copytree(root, genesis_root)
+    shutil.rmtree(os.path.join(genesis_root, "checkpoints"))
+    t0 = time.perf_counter()
+    from repro.service import FraudService as _FS
+    genesis = _FS.restore(genesis_root)
+    genesis_s = time.perf_counter() - t0
+    replayed_genesis = int(genesis.last_recovery["replayed_records"])
+
+    # --- the gate: resume the restored run to completion, compare
+    resumed = with_ckpt
+    resume_at = resumed.engine.ingester.num_events
+    tail = []
+    for ev in events[resume_at:]:
+        tail.extend(resumed.submit(ev))
+    tail.extend(resumed.drain())
+    # exactly-once means replay does NOT re-deliver what the client already
+    # has — merge pre-crash deliveries with replayed + resumed responses,
+    # requiring any overlap to agree bit-for-bit
+    rec_resp = delivered + list(resumed.last_recovery["responses"]) + tail
+    rec_scores: dict = {}
+    duplicates_agree = True
+    for r in rec_resp:
+        if not r.admitted:
+            continue
+        oid = r.request.tag.order_id
+        if oid in rec_scores and rec_scores[oid] != r.score:
+            duplicates_agree = False
+        rec_scores[oid] = r.score
+    rec_store = {k: (e.value.tobytes(), e.model_version)
+                 for shard in resumed.store._shards
+                 for k, e in shard.items()}
+    # scores delivered before the simulated crash are a subset of the
+    # oracle's by construction; the gate compares everything recoverable
+    bit_identical = (
+        duplicates_agree
+        and rec_scores == oracle_scores
+        and rec_store == oracle_store)
+
+    shutil.rmtree(scratch)
+    return {
+        "n_events": n_events,
+        "config": {"num_workers": num_workers, "max_batch": max_batch,
+                   "checkpoint_at": ckpt_at, "hidden_dim": 16},
+        "checkpoint": checkpoint_rec,
+        "replay_curve": curve,
+        "restore": {
+            "with_checkpoint_s": with_ckpt_s,
+            "genesis_s": genesis_s,
+            "replayed_with_checkpoint": replayed_with,
+            "replayed_genesis": replayed_genesis,
+        },
+        "gates": {"recovery_bit_identical": bool(bit_identical)},
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    if smoke:
+        r = run_recovery_bench(n_events=48)
+    else:
+        r = run_recovery_bench(num_users=120, num_rings=4, n_events=300)
+
+    ck = r["checkpoint"]
+    rs = r["restore"]
+    print("\n# Crash recovery (checkpoint write / restore latency, "
+          "replay-suffix cost)")
+    print(f"  checkpoint: write={ck['write_s']*1e3:.1f}ms "
+          f"size={ck['size_bytes']/1024:.1f}KiB "
+          f"@seq={ck['applied_seq']}")
+    for p in r["replay_curve"]:
+        print(f"  restore@{p['events_fed']:>4} events: "
+              f"{p['restore_s']*1e3:7.1f}ms "
+              f"(replayed {p['replayed_records']} records)")
+    print(f"  end-of-stream: with_checkpoint={rs['with_checkpoint_s']*1e3:.1f}ms "
+          f"(replayed {rs['replayed_with_checkpoint']}) vs "
+          f"genesis={rs['genesis_s']*1e3:.1f}ms "
+          f"(replayed {rs['replayed_genesis']})")
+    print(f"  gates: {r['gates']}")
+
+    outdir = os.path.join("experiments", "smoke") if smoke else "experiments"
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, "BENCH_recovery.json"), "w") as f:
+        json.dump(r, f, indent=1)
+    return r
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI smoke (seconds, not minutes)")
+    main(smoke=ap.parse_args().smoke)

@@ -9,9 +9,11 @@
   roofline  aggregated dry-run roofline table (if dry-run records exist)
 
   gateway   HTTP gateway under open-loop Poisson load (429/503/canary gates)
+  recovery  crash recovery (checkpoint write/restore latency, replay-suffix
+            cost vs log length, bit-identical recovery gate)
 
 ``--smoke`` runs only the serving benches (streaming + multiworker + stage2
-+ gateway) at tiny sizes — seconds, not minutes — then validates the emitted
++ gateway + recovery) at tiny sizes — seconds, not minutes — then validates the emitted
 ``BENCH_*.json`` records against their schemas (``tools/check_bench_schema``).
 That is the CI ``bench-smoke`` gate: it fails on crash or schema drift.
 
@@ -64,6 +66,18 @@ def _stage2_rows(csv_rows, s2) -> None:
                          f"speedup={r['speedup']:.2f}x"))
 
 
+def _recovery_rows(csv_rows, rec) -> None:
+    ck, rs = rec["checkpoint"], rec["restore"]
+    csv_rows.append(("recovery/checkpoint_write", f"{ck['write_s']*1e6:.0f}",
+                     f"size={ck['size_bytes']}B"))
+    csv_rows.append((
+        "recovery/restore", f"{rs['with_checkpoint_s']*1e6:.0f}",
+        f"replayed={rs['replayed_with_checkpoint']},"
+        f"genesis_replayed={rs['replayed_genesis']},"
+        f"bit_identical={rec['gates']['recovery_bit_identical']}",
+    ))
+
+
 def _gateway_rows(csv_rows, gwr) -> None:
     for name, s in gwr["scenarios"].items():
         pct = s["latency_ms"]
@@ -95,11 +109,15 @@ def run_smoke() -> None:
     gwr = gateway_main(smoke=True)        # writes BENCH_gateway.json
     _gateway_rows(csv_rows, gwr)
 
+    from benchmarks.recovery_bench import main as recovery_main
+    rec = recovery_main(smoke=True)       # writes BENCH_recovery.json
+    _recovery_rows(csv_rows, rec)
+
     from tools.check_bench_schema import main as schema_main
     rc = schema_main([os.path.join("experiments", "smoke", name) for name in
                       ("BENCH_streaming.json", "BENCH_stage2.json",
                        "BENCH_multiworker.json", "BENCH_refresh.json",
-                       "BENCH_gateway.json")])
+                       "BENCH_gateway.json", "BENCH_recovery.json")])
     if rc != 0:
         raise SystemExit(rc)
 
@@ -142,6 +160,10 @@ def run_full() -> None:
     from benchmarks.gateway_bench import main as gateway_main
     gwr = gateway_main()   # writes experiments/BENCH_gateway.json
     _gateway_rows(csv_rows, gwr)
+
+    from benchmarks.recovery_bench import main as recovery_main
+    rec = recovery_main()   # writes experiments/BENCH_recovery.json
+    _recovery_rows(csv_rows, rec)
 
     from benchmarks.kernels_bench import main as kernels_main
     ker = kernels_main()

@@ -18,6 +18,9 @@ The wire protocol the serving facade was missing: a dependency-free
                              perturbed clone, or (re)configure the canary
 ``POST /admin/drain``        finish outstanding work, take the gateway out of
                              rotation (healthz goes 503)
+``POST /admin/checkpoint``   write a durable checkpoint of the full streaming
+                             state (requires ``gateway.checkpoint_dir``);
+                             ``{"compact": true}`` also truncates the WAL
 ===========================  ====================================================
 
 **Backpressure at the socket.**  Admission control stops being an
@@ -49,7 +52,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 import numpy as np
 
 from repro.gateway.telemetry import MetricsRegistry
-from repro.service import FraudService
+from repro.service import FraudService, ServiceLifecycleError
 from repro.service.config import GatewaySection
 from repro.stream.events import CheckoutEvent
 
@@ -382,6 +385,20 @@ class FraudGateway:
                 raise GatewayError(400, str(exc.args[0])) from exc
         return 200, payload, {}, None
 
+    def handle_admin_checkpoint(self, body: dict):
+        if not isinstance(body, dict):
+            raise GatewayError(400, "body must be a JSON object")
+        compact = bool(body.get("compact", False))
+        with self.lock:
+            try:
+                path = self.service.checkpoint(compact=compact)
+            except ServiceLifecycleError as exc:
+                # no WAL / wrong lifecycle state: a client error, not a 500
+                raise GatewayError(409, str(exc)) from exc
+            applied = self.service.applied_seq
+        return 200, {"checkpoint": path, "applied_seq": applied,
+                     "compacted": compact}, {}, None
+
     def handle_admin_drain(self):
         with self.lock:
             results = self.service.drain()
@@ -427,7 +444,8 @@ class _Handler(BaseHTTPRequestHandler):
             "/metrics": "handle_metrics"}
     _POST = {"/v1/score": "handle_score", "/v1/ingest": "handle_ingest",
              "/admin/model": "handle_admin_model",
-             "/admin/drain": "handle_admin_drain"}
+             "/admin/drain": "handle_admin_drain",
+             "/admin/checkpoint": "handle_admin_checkpoint"}
 
     @property
     def gateway(self) -> FraudGateway:
@@ -516,10 +534,32 @@ def serve_gateway(config, params, *, warmup: bool = True) -> FraudGateway:
     """One-liner boot: build a :class:`FraudService` from ``config`` +
     ``params``, optionally warm it up, and start the HTTP gateway on
     ``config.gateway``.  Returns the started gateway (``gateway.service``
-    reaches the facade; close with ``gateway.close()``)."""
-    from repro.service import build_service
+    reaches the facade; close with ``gateway.close()``).
 
-    svc = build_service(config, params, warmup=warmup)
+    With ``gateway.checkpoint_dir`` set the boot is crash-consistent: if
+    the directory already holds durable state (a ``service.json`` written
+    by a previous ``enable_wal``), the service is *restored* from its
+    latest checkpoint + WAL suffix instead of built fresh — ``params`` is
+    ignored on that path because the restored model registry is
+    authoritative.  A fresh directory gets a fresh build with the
+    write-ahead log enabled under it.
+    """
+    import os
+
+    from repro.service import build_service
+    from repro.service.config import ServiceConfig
+
+    if isinstance(config, dict):
+        config = ServiceConfig.from_dict(config)
+    root = config.gateway.checkpoint_dir
+    if root and os.path.exists(os.path.join(root, "service.json")):
+        svc = FraudService.restore(root)
+        if warmup and svc.state in ("built", "ready"):
+            svc.warmup()
+    else:
+        svc = build_service(config, params, warmup=warmup)
+        if root:
+            svc.enable_wal(root)
     return FraudGateway(svc).start()
 
 

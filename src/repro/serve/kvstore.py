@@ -31,6 +31,7 @@ from collections import OrderedDict
 import numpy as np
 
 from repro.dist.sharding import rendezvous_shard, stable_shard
+from repro.utils import crashpoint
 
 SNAPSHOT_BITS = 20
 MAX_SNAPSHOT = (1 << SNAPSHOT_BITS) - 1
@@ -196,6 +197,7 @@ class KVStore:
         """
         keys = [int(k) for k in keys]
         version, model_version = int(version), int(model_version)
+        crashpoint.fire("kv.put_batch.before")
         with self._lock:
             stamp = self._clock()
             touched = set()
@@ -216,6 +218,7 @@ class KVStore:
                         old_key, _ = shard.popitem(last=False)
                         self._index_drop(old_key)
                         self.stats["evictions"] += 1
+        crashpoint.fire("kv.put_batch.after")
         return len(keys)
 
     # ------------------------------------------------------------------ read

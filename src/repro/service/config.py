@@ -183,6 +183,12 @@ class GatewaySection:
       ``role="canary"`` may override both per activation).
     * ``latency_buckets`` — upper bounds (seconds) of the Prometheus
       request-latency histogram.
+    * ``checkpoint_dir`` — when set, the gateway boots crash-consistent:
+      ``serve_gateway`` restores the service from this directory if a
+      durable state exists there (``FraudService.restore``), otherwise
+      builds fresh and enables the write-ahead log under it
+      (``enable_wal``).  ``POST /admin/checkpoint`` writes checkpoints
+      into the same directory.
     """
 
     host: str = "127.0.0.1"
@@ -193,6 +199,7 @@ class GatewaySection:
     shadow_divergence_threshold: float = 0.25
     latency_buckets: tuple = (0.001, 0.0025, 0.005, 0.01, 0.025,
                               0.05, 0.1, 0.25, 1.0)
+    checkpoint_dir: str | None = None   # durable WAL + checkpoint root
 
     def __post_init__(self):
         object.__setattr__(self, "latency_buckets",

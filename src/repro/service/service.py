@@ -34,7 +34,9 @@ On top of the legacy paths it adds:
 """
 from __future__ import annotations
 
+import json
 import math
+import os
 import threading
 
 import numpy as np
@@ -81,6 +83,13 @@ class FraudService:
         self._model_version = 0
         self._model_swaps = 0
         self._params = None
+        # crash consistency (enable_wal / checkpoint / restore) — these must
+        # exist before the eager load_model below consults them
+        self._wal = None
+        self._wal_root: str | None = None
+        self._applied_seq = 0
+        self._replaying = False
+        self.last_recovery: dict | None = None
         if params is not None:
             self.load_model(params, version=0)
         # admission + traffic accounting (ServiceStats surface)
@@ -182,12 +191,20 @@ class FraudService:
         and force-flush every worker queue).  The service may keep serving
         afterwards; ``close()`` ends it for good."""
         self._ensure(_SERVABLE, "drain")
+        seq = None
+        if self._wal is not None and not self._replaying \
+                and self.mode == "streaming":
+            # a drain force-flushes every queue, changing flush composition
+            # — replay must reproduce it at the same point in the stream
+            seq = self._wal.append_drain(now)
         out: list[ScoreResponse] = []
         if self.mode == "streaming":
             out = self._engine.flush(now)
             self._engine.refresher.drain()
             self._account_scored(out)
         self._state = "drained"
+        if seq is not None:
+            self._applied_seq = seq
         return out
 
     def close(self) -> None:
@@ -197,8 +214,12 @@ class FraudService:
         if self.mode == "streaming" and self._engine is not None \
                 and self._state in _SERVABLE:
             # never strand queued work on close
+            if self._wal is not None:
+                self._wal.append_drain(None)
             self._engine.flush()
             self._engine.refresher.drain()
+        if self._wal is not None:
+            self._wal.close()
         self._state = "closed"
 
     # -------------------------------------------------------------- hot-swap
@@ -218,6 +239,12 @@ class FraudService:
         if version is None:
             version = (max(self._models) + 1) if self._models else 0
         version = int(version)
+        seq = None
+        if self._wal is not None and not self._replaying:
+            # write-ahead for hot-swaps too: persist the params file, THEN
+            # log the swap — a logged swap is always replayable
+            rel = self._persist_params(params, version)
+            seq = self._wal.append_model(version, rel)
         self._models[version] = params
         self._params = params
         self._model_version = version
@@ -228,6 +255,8 @@ class FraudService:
             else:
                 self._batch_layer.set_model(params, version)
                 self._speed_layer.set_model(params, version)
+        if seq is not None:
+            self._applied_seq = seq
         return version
 
     @property
@@ -247,8 +276,14 @@ class FraudService:
             raise ServiceLifecycleError("register_model() on a closed service")
         if version is None:
             version = (max(self._models) + 1) if self._models else 0
-        self._models[int(version)] = params
-        return int(version)
+        version = int(version)
+        if self._wal is not None and not self._replaying:
+            # registration has no scoring effect, so it needs no WAL record,
+            # but the params must be on disk for checkpoint manifests (and a
+            # later logged activate_model) to reference
+            self._persist_params(params, version)
+        self._models[version] = params
+        return version
 
     def activate_model(self, version: int) -> int:
         """Hot-swap to an already-registered version (the gateway's
@@ -495,6 +530,11 @@ class FraudService:
         with the admission controller between ingest and enqueue."""
         self._ensure(_SERVABLE, "submit")
         self._require_mode("streaming", "submit")
+        seq = None
+        if self._wal is not None and not self._replaying:
+            # write-ahead: log before any state mutation, so a crash
+            # anywhere inside the apply is repaired by replay, never lost
+            seq = self._wal.append_event("submit", event)
         self._state = "serving"
         eng, pool, adm = self._engine, self._engine.pool, self.config.admission
         now = event.arrival
@@ -509,6 +549,8 @@ class FraudService:
             out.append(ScoreResponse(
                 request=req, score=math.nan, admitted=False,
                 model_version=self._model_version))
+            if seq is not None:
+                self._applied_seq = seq
             return out
         # peak records the depth the admitted request actually observed
         # (post block-drain), so it never exceeds an enforced cap + 1 frame
@@ -516,6 +558,8 @@ class FraudService:
             self._acct["queue_depth_peak"], len(pool) + 1)
         out.extend(pool.submit(req, now))
         self._account_scored(out)
+        if seq is not None:
+            self._applied_seq = seq
         return out
 
     def _admit(self, req, pool, adm, now: float, out: list) -> bool:
@@ -557,8 +601,13 @@ class FraudService:
         writes but not toward request/score accounting."""
         self._ensure(_SERVABLE, "ingest")
         self._require_mode("streaming", "ingest")
+        seq = None
+        if self._wal is not None and not self._replaying:
+            seq = self._wal.append_event("ingest", event)
         self._state = "serving"
         self._engine.ingest(event)
+        if seq is not None:
+            self._applied_seq = seq
 
     def replay(self, events, warmup: bool = True):
         """Drive a whole event stream; returns the engine's
@@ -580,6 +629,166 @@ class FraudService:
         results.extend(self.drain())
         return ReplayReport(
             results=[r for r in results if r.admitted], engine=self._engine)
+
+    # ---------------------------------------------- crash consistency (WAL)
+    def _persist_params(self, params, version: int) -> str:
+        """Write one model version under the WAL root (idempotent).
+        Returns the root-relative path checkpoint manifests / WAL model
+        records reference."""
+        from repro.train.checkpoint import save_checkpoint
+
+        rel = os.path.join("models", f"v{int(version)}.npz")
+        path = os.path.join(self._wal_root, rel)
+        if not os.path.exists(path):
+            save_checkpoint(path, params)
+        return rel
+
+    def enable_wal(self, root: str, fsync: bool = False) -> "FraudService":
+        """Start write-ahead logging under directory ``root``.
+
+        Must be called on a freshly-built streaming service **before any
+        traffic** — recovery without a checkpoint replays the whole log
+        against the genesis state, so that state must be reconstructible:
+        ``root/service.json`` (the config), ``root/genesis.json`` (active
+        version + registry + lifecycle), and every registered version's
+        params under ``root/models/`` are persisted here.  From this point
+        every ``submit`` / ``ingest`` / ``load_model`` is logged *before*
+        it is applied; :meth:`checkpoint` bounds replay time and
+        :meth:`restore` rebuilds the exact state after a crash.
+        """
+        from repro.stream import checkpoint as ckpt
+
+        self._ensure(("built", "ready"), "enable_wal")
+        self._require_mode("streaming", "enable_wal")
+        if self._wal is not None:
+            raise ServiceLifecycleError("enable_wal() called twice")
+        if self._engine.ingester.num_events:
+            raise ServiceLifecycleError(
+                "enable_wal() must run before any traffic — events ingested "
+                "pre-WAL would be unrecoverable")
+        os.makedirs(root, exist_ok=True)
+        self._wal_root = root
+        self.config.save(os.path.join(root, "service.json"))
+        for v, p in self._models.items():
+            self._persist_params(p, v)
+        with open(os.path.join(root, "genesis.json"), "w") as f:
+            json.dump({"state": self._state,
+                       "model_version": self._model_version,
+                       "versions": sorted(self._models)}, f)
+        self._wal = ckpt.WriteAheadLog(ckpt.wal_path(root), fsync=fsync)
+        self._applied_seq = self._wal.last_seq
+        return self
+
+    @property
+    def applied_seq(self) -> int:
+        """Highest WAL seqno whose apply completed (0 = none / WAL off)."""
+        return self._applied_seq
+
+    def checkpoint(self, compact: bool = False) -> str:
+        """Write one atomic checkpoint of the full streaming state at the
+        current ``applied_seq``; with ``compact=True`` also drop the WAL
+        prefix the checkpoint covers.  Returns the checkpoint directory.
+
+        Quiesces the async refresh thread first (an in-flight stage 1 is
+        mid-effect and has no consistent snapshot) but does NOT flush the
+        worker queues — queued requests are checkpointed as queued, so the
+        restored run's flush compositions (and hence its bit-exact scores)
+        are unchanged."""
+        from repro.stream import checkpoint as ckpt
+
+        self._ensure(_SERVABLE, "checkpoint")
+        self._require_mode("streaming", "checkpoint")
+        if self._wal is None:
+            raise ServiceLifecycleError(
+                "checkpoint() requires enable_wal() — a checkpoint without "
+                "a log cannot bound what replay owes")
+        self._engine.refresher.drain()
+        path = ckpt.write_checkpoint(self._wal_root, self, self._applied_seq)
+        if compact:
+            self._wal.compact(self._applied_seq)
+        return path
+
+    @classmethod
+    def restore(cls, root: str) -> "FraudService":
+        """Rebuild the service from WAL root ``root``: load the newest
+        committed checkpoint (if any), then replay the log suffix with
+        ``seq > applied_seq`` through the ordinary serving paths —
+        **exactly once**: duplicate delivery is suppressed by seqno, and a
+        record whose apply the crash interrupted is re-applied in full.
+
+        The restored service keeps logging to the same WAL, so crash →
+        restore → crash → restore chains compose.  Recovery details
+        (checkpoint used, records replayed, responses produced during
+        replay) land in ``self.last_recovery``."""
+        import jax
+
+        from repro.core.lnn import lnn_init
+        from repro.stream import checkpoint as ckpt
+        from repro.train.checkpoint import load_checkpoint
+
+        config = ServiceConfig.load(os.path.join(root, "service.json"))
+        with open(os.path.join(root, "genesis.json")) as f:
+            genesis = json.load(f)
+        # params files restore into a like-structured template
+        template = lnn_init(jax.random.PRNGKey(0), config.to_lnn_config())
+
+        found = ckpt.latest_checkpoint(root)
+        if found is not None:
+            manifest, arrays = ckpt.read_checkpoint(found)
+            registry = {int(v): p for v, p in manifest["models"].items()}
+            active = int(manifest["model_version"])
+            applied = int(manifest["applied_seq"])
+        else:
+            manifest = arrays = None
+            registry = {int(v): os.path.join("models", f"v{v}.npz")
+                        for v in genesis["versions"]}
+            active = int(genesis["model_version"])
+            applied = 0
+
+        svc = cls(config)
+        svc._wal_root = root
+        for v in sorted(registry):
+            params, _ = load_checkpoint(os.path.join(root, registry[v]),
+                                        template)
+            svc.register_model(params, v)
+        svc._params = svc._models[active]
+        svc._model_version = active
+        svc.build()
+        if manifest is not None:
+            ckpt.apply_checkpoint(svc, manifest, arrays)
+        else:
+            svc._state = genesis["state"]
+
+        wal = ckpt.WriteAheadLog(ckpt.wal_path(root))
+        svc._wal = wal
+        svc._applied_seq = applied
+        svc._replaying = True
+        responses: list[ScoreResponse] = []
+        replayed = 0
+        try:
+            for rec in wal.scan(after_seq=applied):
+                if rec["kind"] == "model":
+                    params, _ = load_checkpoint(
+                        os.path.join(root, rec["path"]), template)
+                    svc.load_model(params, rec["version"])
+                elif rec["kind"] == "drain":
+                    responses.extend(svc.drain(rec["now"]))
+                elif rec["kind"] == "submit":
+                    responses.extend(svc.submit(ckpt.decode_event(rec)))
+                else:
+                    svc.ingest(ckpt.decode_event(rec))
+                svc._applied_seq = int(rec["seq"])
+                replayed += 1
+        finally:
+            svc._replaying = False
+        svc.last_recovery = {
+            "checkpoint": found,
+            "applied_seq": svc._applied_seq,
+            "replayed_records": replayed,
+            "events_applied": svc._engine.ingester.num_events,
+            "responses": responses,
+        }
+        return svc
 
     # ----------------------------------------------------------------- stats
     def _account_scored(self, results: list) -> None:

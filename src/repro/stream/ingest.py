@@ -27,6 +27,7 @@ from dataclasses import dataclass
 from repro.core.dds import DDSGraph, IncrementalDDSBuilder
 from repro.core.partition import IncrementalPartitioner
 from repro.stream.events import CheckoutEvent
+from repro.utils import crashpoint
 
 
 @dataclass
@@ -67,6 +68,7 @@ class StreamIngester:
     def ingest(self, event: CheckoutEvent) -> IngestResult:
         """Consume one checkout: compute its speed-layer keys, extend the
         DDS graph, and report any snapshot windows the arrival closed."""
+        crashpoint.fire("ingest.before")
         t = int(event.snapshot)
         closed = None
         if t > self._open_snapshot:
@@ -81,6 +83,7 @@ class StreamIngester:
         for ent in event.entities:
             self._dirty.add((int(ent), t))
         self.stats["events"] += 1
+        crashpoint.fire("ingest.after")
         return IngestResult(order_id=o, entity_keys=keys, closed_window=closed)
 
     # ---------------------------------------------------------------- refresh

@@ -32,6 +32,7 @@ import numpy as np
 # leaf module, so this import introduces no package cycle.  ScoredResult is
 # the historical streaming name for the service-wide ScoreResponse.
 from repro.service.types import ScoreRequest, ScoreResponse
+from repro.utils import crashpoint
 
 ScoredResult = ScoreResponse
 
@@ -186,6 +187,7 @@ class MicroBatcher:
             key_lists[i] = list(r.entity_keys)
         self.stats["padded_rows"] += b - n
 
+        crashpoint.fire("flush.before_score")
         t0 = time.perf_counter()
         # scorers may return (probs, staleness) or, when version-aware,
         # (probs, staleness, model_version) — the version whose jit cache
@@ -194,6 +196,7 @@ class MicroBatcher:
         service = time.perf_counter() - t0
         probs, staleness = out[0], out[1]
         model_version = int(out[2]) if len(out) > 2 else 0
+        crashpoint.fire("flush.after_score")
 
         self.stats["flushes"] += 1
         return [

@@ -59,6 +59,7 @@ from repro.core.graph import pad_graph
 from repro.core.lnn import LNNConfig, lnn_stage1
 from repro.serve.kvstore import KVStore, pack_key
 from repro.stream.ingest import StreamIngester
+from repro.utils import crashpoint
 
 
 def _pow2_at_least(n: int, floor: int = 64) -> int:
@@ -257,10 +258,12 @@ class RefreshDriver:
 
     def _run(self, pending, work, n_comms: int, params,
              model_version: int) -> dict:
+        crashpoint.fire("refresh.before_stage1")
         t0 = time.monotonic()
         emb, nodes_padded, launches = self._stage1_embeddings(
             params, pending, work)
         groups = self._shard_groups(pending)
+        crashpoint.fire("refresh.before_puts")
         with self._lock:
             self.version += 1
             written = 0
@@ -288,6 +291,7 @@ class RefreshDriver:
             self.stats["communities_refreshed"] += n_comms
             self.stats["stage1_launches"] += launches
             self.stats["budget_history"].append(nodes_padded)
+        crashpoint.fire("refresh.after")
         return {"entities_written": written, "seconds": dt, "version": self.version,
                 "shards_touched": len(groups), "nodes_padded": nodes_padded,
                 "communities": n_comms, "stage1_launches": launches}

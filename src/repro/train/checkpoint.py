@@ -79,5 +79,4 @@ def load_checkpoint(path: str, like):
                 raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {want_shape}")
             restored_flat.append(arr)
         tree = jax.tree_util.tree_unflatten(paths_leaves[1], restored_flat)
-    del keys
     return tree, step

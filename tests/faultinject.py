@@ -1,0 +1,134 @@
+"""Crash-point fault-injection harness for the streaming engine.
+
+Not a test module (no ``test_`` prefix — pytest does not collect it):
+``tests/test_faultinject.py`` drives it over every registered crash point.
+
+The harness plays the role of the *client + supervisor* pair around a
+crash-consistent :class:`~repro.service.FraudService`:
+
+1. drive a WAL-enabled service over an event stream (optionally with a
+   mid-stream model hot-swap and a mid-stream checkpoint) with one
+   :mod:`repro.utils.crashpoint` boundary armed;
+2. when the simulated crash fires, abandon the dead service object —
+   exactly what a process kill does to in-memory state — keeping only the
+   responses that were already *delivered* to the client;
+3. restore a brand-new service from the durable directory
+   (``FraudService.restore`` = latest checkpoint + WAL-suffix replay);
+4. resume the feed from ``ingester.num_events`` — the number of events the
+   restored state has durably applied — re-issuing the hot-swap if the
+   crash ate its WAL record;
+5. merge delivered + replayed + resumed responses, asserting that any
+   duplicate delivery of the same order is *bit-identical* (the
+   exactly-once guarantee as seen by an idempotent consumer).
+
+The resulting score map and KV-store bytes are compared against an
+uninterrupted run by the callers — bit-identical or bust.
+"""
+from __future__ import annotations
+
+from repro.service import FraudService
+from repro.utils import crashpoint
+from repro.utils.crashpoint import SimulatedCrash
+
+
+def store_contents(store) -> dict:
+    """key -> (embedding bytes, model version) for every entry, every shard."""
+    return {
+        k: (e.value.tobytes(), e.model_version)
+        for shard in store._shards for k, e in shard.items()
+    }
+
+
+def drive(svc, events, start=0, *, swap=None, checkpoint_at=None, out=None):
+    """Feed ``events[start:]`` through ``svc.submit`` and drain.
+
+    ``swap=(index, params, version)`` hot-swaps the model right after
+    submitting ``events[index]``; ``checkpoint_at=index`` writes a durable
+    checkpoint right after that event.  Responses are appended to ``out``
+    *as they are delivered* so a crash mid-drive loses only undelivered
+    ones — exactly the client's view of a real process kill.
+    """
+    responses = out if out is not None else []
+    for i in range(start, len(events)):
+        responses.extend(svc.submit(events[i]))
+        if swap is not None and i == swap[0]:
+            svc.load_model(swap[1], version=swap[2])
+        if checkpoint_at is not None and i == checkpoint_at:
+            svc.checkpoint()
+    responses.extend(svc.drain())
+    return responses
+
+
+def merge_responses(merged: dict, responses) -> dict:
+    """Fold responses into ``order_id -> (score, model_version)``.
+
+    A duplicate delivery (a response handed out both before the crash and
+    again by replay) must agree bit-for-bit — at-least-once delivery with
+    an idempotent consumer is only sound when re-deliveries are identical.
+    """
+    for r in responses:
+        if not r.admitted:
+            continue
+        oid = r.request.tag.order_id
+        val = (r.score, r.model_version)
+        if oid in merged and merged[oid] != val:
+            raise AssertionError(
+                f"duplicate delivery disagrees for order {oid}: "
+                f"{merged[oid]} vs {val}")
+        merged[oid] = val
+    return merged
+
+
+def run_uninterrupted(make_service, events, *, swap=None):
+    """The oracle: same feed, no WAL, no crash.  Returns (scores, store)."""
+    svc = make_service()
+    responses = drive(svc, events, swap=swap)
+    return merge_responses({}, responses), store_contents(svc.store)
+
+
+def run_with_crash(make_service, events, root, point, hit=1, *,
+                   swap=None, checkpoint_at=None):
+    """Crash at the ``hit``-th firing of ``point``, restore, resume.
+
+    Returns a dict with the merged ``scores``, final ``store`` contents,
+    the :class:`SimulatedCrash` that fired (``None`` if the stream finished
+    first), the resume index, and ``recovery`` (``svc.last_recovery``).
+    """
+    svc = make_service().enable_wal(root)
+    delivered: list = []
+    crashed = None
+    crashpoint.arm(point, hit=hit)
+    try:
+        drive(svc, events, swap=swap, checkpoint_at=checkpoint_at,
+              out=delivered)
+    except SimulatedCrash as exc:
+        crashed = exc
+    finally:
+        crashpoint.disarm()
+    # the dead service object is abandoned here, like the process it models
+
+    svc2 = FraudService.restore(root)
+    merged = merge_responses({}, delivered)
+    merge_responses(merged, svc2.last_recovery["responses"])
+
+    resume = svc2.engine.ingester.num_events
+    if swap is not None and resume > swap[0] \
+            and svc2.model_version < swap[2]:
+        # the crash ate the un-logged half of the hot-swap: the supervisor
+        # re-issues it (load_model is idempotent at the same version)
+        svc2.load_model(swap[1], version=swap[2])
+    resumed = drive(
+        svc2, events, start=resume,
+        swap=swap if (swap is not None and resume <= swap[0]) else None,
+        checkpoint_at=checkpoint_at
+        if (checkpoint_at is not None and resume <= checkpoint_at) else None)
+    merge_responses(merged, resumed)
+
+    return {
+        "scores": merged,
+        "store": store_contents(svc2.store),
+        "service": svc2,
+        "crashed": crashed,
+        "resume": resume,
+        "recovery": svc2.last_recovery,
+    }

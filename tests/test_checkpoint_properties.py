@@ -1,0 +1,107 @@
+"""Property-based coverage (hypothesis) for the checkpoint round-trip:
+
+For ANY stream prefix length, ANY crash position, ANY checkpoint position
+at or before the crash, and with/without a mid-stream model hot-swap,
+``restore + WAL-suffix replay + resumed feed`` must equal the
+uninterrupted run bit-for-bit — scores by order AND KV-store bytes.
+
+The crash here is the harshest one the WAL contract admits: the process
+dies *between* events with the service object simply abandoned, so the
+recovery has exactly the durable artifacts (checkpoint dirs + log) to work
+from — extending the ``test_dds_properties.py`` randomized-invariant
+pattern up to the full serving stack.
+"""
+import functools
+import shutil
+import tempfile
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro.core import LNNConfig, lnn_init
+from repro.data import SynthConfig, generate_event_stream
+from repro.service import FraudService, ModelSection, ServiceConfig
+
+from faultinject import (drive, merge_responses, run_uninterrupted,
+                         store_contents)
+
+MAX_EVENTS = 32
+
+
+@functools.lru_cache(maxsize=None)
+def _world():
+    events, g, _ = generate_event_stream(
+        SynthConfig(num_users=30, num_rings=2, feature_noise=0.8, seed=9),
+        rate_per_s=500.0)
+    cfg = LNNConfig(num_gnn_layers=2, hidden_dim=8,
+                    feat_dim=g.order_features.shape[1], mlp_dims=(8,))
+    params = lnn_init(jax.random.PRNGKey(0), cfg)
+    swap_params = lnn_init(jax.random.PRNGKey(3), cfg)
+    return tuple(events[:MAX_EVENTS]), cfg, params, swap_params
+
+
+def _build(cfg, params):
+    sc = ServiceConfig(
+        mode="streaming", model=ModelSection.from_lnn_config(cfg),
+    ).replace(engine={"num_workers": 1, "max_batch": 4})
+    return FraudService(sc, params=params).build()
+
+
+@functools.lru_cache(maxsize=None)
+def _baseline(n: int, use_swap: bool):
+    events, cfg, params, swap_params = _world()
+    swap = (n // 2, swap_params, 1) if use_swap else None
+    return run_uninterrupted(lambda: _build(cfg, params), events[:n],
+                             swap=swap)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(6, MAX_EVENTS),
+    crash_at=st.integers(0, MAX_EVENTS),
+    ckpt_at=st.integers(0, MAX_EVENTS),
+    use_ckpt=st.booleans(),
+    use_swap=st.booleans(),
+)
+def test_crash_restore_replay_equals_uninterrupted(
+        n, crash_at, ckpt_at, use_ckpt, use_swap):
+    events, cfg, params, swap_params = _world()
+    evs = list(events[:n])
+    crash_at = min(crash_at, n)
+    swap = (n // 2, swap_params, 1) if use_swap else None
+    checkpoint_at = min(ckpt_at, max(crash_at - 1, 0)) if use_ckpt else None
+    base_scores, base_store = _baseline(n, use_swap)
+
+    root = tempfile.mkdtemp()
+    try:
+        svc = _build(cfg, params).enable_wal(root)
+        delivered: list = []
+        for i in range(crash_at):
+            delivered.extend(svc.submit(evs[i]))
+            if swap is not None and i == swap[0]:
+                svc.load_model(swap[1], version=swap[2])
+            if checkpoint_at is not None and i == checkpoint_at:
+                svc.checkpoint()
+        # the crash: the service object is abandoned with queues full
+
+        svc2 = FraudService.restore(root)
+        merged = merge_responses({}, delivered)
+        merge_responses(merged, svc2.last_recovery["responses"])
+        resume = svc2.engine.ingester.num_events
+        # every fully-submitted event was durably logged before its apply
+        assert resume == crash_at
+        if swap is not None and resume > swap[0] and svc2.model_version < 1:
+            svc2.load_model(swap_params, version=1)
+        resumed = drive(
+            svc2, evs, start=resume,
+            swap=swap if (swap is not None and resume <= swap[0]) else None)
+        merge_responses(merged, resumed)
+
+        assert merged == base_scores
+        assert store_contents(svc2.store) == base_store
+    finally:
+        shutil.rmtree(root)

@@ -179,15 +179,17 @@ def test_build_subgraph_is_sliced_full_build(stream_world, history, max_history)
 def test_build_subgraph_rejects_unclosed_entity_set(stream_world):
     events, g, _, _ = stream_world
     b, part = _ingest_all(events, g.order_features.shape[1])
-    # find an order linking >= 2 entities and withhold one of them
-    for ev in events:
-        if len(ev.entities) >= 2:
-            ents = set(part.members(part.community_of(ev.entities[0])))
-            ents.discard(int(ev.entities[1]))
-            with pytest.raises(ValueError, match="component-closed"):
-                b.build_subgraph(ents)
-            return
-    pytest.skip("no multi-entity order in stream")
+    # the seeded stream (every checkout links a user to >= 1 counterparty
+    # entity) is guaranteed to contain a multi-entity order — assert that
+    # seeding invariant so this test can never silently degrade to a no-op
+    multi = [ev for ev in events if len(ev.entities) >= 2]
+    assert multi, "seeded stream must contain a multi-entity order"
+    # take one such order and withhold one of its entities
+    ev = multi[0]
+    ents = set(part.members(part.community_of(ev.entities[0])))
+    ents.discard(int(ev.entities[1]))
+    with pytest.raises(ValueError, match="component-closed"):
+        b.build_subgraph(ents)
 
 
 @pytest.mark.parametrize("gnn_type", ["gcn", "sage", "gat"])

@@ -26,8 +26,9 @@ ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, os.path.join(str(ROOT), "src"))
 
 #: the reviewed serving surface: the typed API, the HTTP gateway over it,
-#: and both shim packages
-MODULES = ["repro.service", "repro.gateway", "repro.serve", "repro.stream"]
+#: both shim packages, and the crash-consistency layer
+MODULES = ["repro.service", "repro.gateway", "repro.serve", "repro.stream",
+           "repro.stream.checkpoint"]
 
 SNAPSHOT = ROOT / "tools" / "api_surface.json"
 

@@ -24,6 +24,7 @@ DEFAULT_RECORDS = [
     "experiments/BENCH_multiworker.json",
     "experiments/BENCH_refresh.json",
     "experiments/BENCH_gateway.json",
+    "experiments/BENCH_recovery.json",
 ]
 
 PCTS = ("p50", "p95", "p99")
@@ -166,12 +167,42 @@ def check_gateway(d: dict) -> list[str]:
     return e
 
 
+def check_recovery(d: dict) -> list[str]:
+    e: list[str] = []
+    _require(e, _num(d.get("n_events")), "n_events: finite number required")
+    cfg = d.get("config") or {}
+    for k in ("num_workers", "max_batch", "checkpoint_at"):
+        _require(e, _num(cfg.get(k)), f"config.{k}: number")
+    ck = d.get("checkpoint") or {}
+    for k in ("write_s", "size_bytes", "applied_seq"):
+        _require(e, _num(ck.get(k)), f"checkpoint.{k}: number")
+    curve = d.get("replay_curve")
+    _require(e, isinstance(curve, list) and curve,
+             "replay_curve: non-empty list")
+    for i, p in enumerate(curve or []):
+        for k in ("events_fed", "log_records", "replayed_records",
+                  "restore_s"):
+            _require(e, _num(p.get(k)), f"replay_curve[{i}].{k}: number")
+    rs = d.get("restore") or {}
+    for k in ("with_checkpoint_s", "genesis_s", "replayed_with_checkpoint",
+              "replayed_genesis"):
+        _require(e, _num(rs.get(k)), f"restore.{k}: number")
+    # crash-restore-replay must reproduce the uninterrupted run bit-for-bit
+    # — the whole point of the subsystem is a gate, not a statistic
+    gates = d.get("gates") or {}
+    _require(e, gates.get("recovery_bit_identical") is True,
+             "gates.recovery_bit_identical: must be True "
+             "(crash-recovery exactness gate)")
+    return e
+
+
 CHECKERS = {
     "BENCH_streaming.json": check_streaming,
     "BENCH_stage2.json": check_stage2,
     "BENCH_multiworker.json": check_multiworker,
     "BENCH_refresh.json": check_refresh,
     "BENCH_gateway.json": check_gateway,
+    "BENCH_recovery.json": check_recovery,
 }
 
 
