@@ -60,6 +60,18 @@ def _streaming_rows(csv_rows, stream) -> None:
                      f"parity={rf['parity']['bit_identical']}"))
 
 
+def _hetero_rows(csv_rows, ht) -> None:
+    for model, a in ht["auc"].items():
+        budgets = ht["recall"][model]
+        top = sorted(budgets)[0]
+        csv_rows.append((
+            f"hetero/{model}/auc", "",
+            f"auc={a:.3f},ring@{top}={budgets[top]['ring']:.2f}",
+        ))
+    csv_rows.append(("hetero/gates", "",
+                     ",".join(f"{k}={v}" for k, v in ht["gates"].items())))
+
+
 def _stage2_rows(csv_rows, s2) -> None:
     for bs, r in s2["per_batch"].items():
         csv_rows.append((f"stage2/fused_b{bs}", f"{r['fused_us']:.1f}",
@@ -100,6 +112,7 @@ def run_smoke() -> None:
     from benchmarks.streaming_bench import main as streaming_main
     stream = streaming_main(smoke=True)   # writes BENCH_streaming + _multiworker
     _streaming_rows(csv_rows, stream)
+    _hetero_rows(csv_rows, stream["hetero"])  # writes BENCH_hetero.json
 
     from benchmarks.stage2_bench import main as stage2_main
     s2 = stage2_main(smoke=True)          # writes BENCH_stage2.json
@@ -117,7 +130,8 @@ def run_smoke() -> None:
     rc = schema_main([os.path.join("experiments", "smoke", name) for name in
                       ("BENCH_streaming.json", "BENCH_stage2.json",
                        "BENCH_multiworker.json", "BENCH_refresh.json",
-                       "BENCH_gateway.json", "BENCH_recovery.json")])
+                       "BENCH_gateway.json", "BENCH_recovery.json",
+                       "BENCH_hetero.json")])
     if rc != 0:
         raise SystemExit(rc)
 
@@ -152,6 +166,7 @@ def run_full() -> None:
     from benchmarks.streaming_bench import main as streaming_main
     stream = streaming_main()   # writes BENCH_streaming + BENCH_multiworker
     _streaming_rows(csv_rows, stream)
+    _hetero_rows(csv_rows, stream["hetero"])  # writes BENCH_hetero.json
 
     from benchmarks.stage2_bench import main as stage2_main
     s2 = stage2_main()   # writes experiments/BENCH_stage2.json

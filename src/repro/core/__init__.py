@@ -7,6 +7,14 @@ from repro.core.dds import (
     build_dds,
     check_no_future_leak,
 )
+from repro.core.hetero import (
+    ENTITY_TYPE_NAMES,
+    entity_type_of,
+    is_typed,
+    strip_type,
+    tag_entity,
+    type_code_of,
+)
 from repro.core.lnn import (
     LNNConfig,
     lnn_forward,
@@ -15,6 +23,7 @@ from repro.core.lnn import (
     lnn_order_tower,
     lnn_stage1,
     lnn_stage2_batch,
+    lnn_stage2_embed,
     lnn_stage2_online,
 )
 from repro.core.partition import partition_transactions
@@ -30,6 +39,12 @@ __all__ = [
     "StaticGraph",
     "build_dds",
     "check_no_future_leak",
+    "ENTITY_TYPE_NAMES",
+    "entity_type_of",
+    "is_typed",
+    "strip_type",
+    "tag_entity",
+    "type_code_of",
     "LNNConfig",
     "lnn_forward",
     "lnn_init",
@@ -37,6 +52,7 @@ __all__ = [
     "lnn_order_tower",
     "lnn_stage1",
     "lnn_stage2_batch",
+    "lnn_stage2_embed",
     "lnn_stage2_online",
     "partition_transactions",
 ]

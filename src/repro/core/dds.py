@@ -30,6 +30,29 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.graph import COOGraph, EdgeType, NodeType
+from repro.core.hetero import type_codes_array
+
+
+def _tower_codes(n_nodes: int, entity_snap_ids: dict) -> np.ndarray | None:
+    """Per-node entity-type tower codes for a materialized DDS graph.
+
+    Returns ``None`` when no entity id carries a :mod:`repro.core.hetero`
+    type tag — homogeneous graphs keep the exact pre-hetero COO layout
+    (``tower=None``), which is what the bit-parity gates compare.
+    Otherwise an int32 [n_nodes] array: the type code at each entity-
+    snapshot vertex, ``-1`` for orders, shadows, and untagged entities.
+    """
+    if not entity_snap_ids:
+        return None
+    ents = np.fromiter((pair[0] for pair in entity_snap_ids),
+                       np.int64, len(entity_snap_ids))
+    codes = type_codes_array(ents)
+    if not (codes >= 0).any():
+        return None
+    tower = np.full(n_nodes, -1, np.int32)
+    nids = np.fromiter(entity_snap_ids.values(), np.int64, len(entity_snap_ids))
+    tower[nids] = codes
+    return tower
 
 
 @dataclass
@@ -98,10 +121,14 @@ def build_dds(
     entity_of_edge = g.edges[:, 1]
     t_of_edge = g.order_snapshot[order_of_edge]
 
-    pair_keys = entity_of_edge.astype(np.int64) * (g.num_snapshots + 1) + t_of_edge
-    uniq_keys = np.unique(pair_keys)
-    uniq_entity = uniq_keys // (g.num_snapshots + 1)
-    uniq_t = uniq_keys % (g.num_snapshots + 1)
+    # lexicographic unique over (entity, t) rows — same sorted order as the
+    # old ent*(S+1)+t integer keys, but safe for tagged 43-bit entity ids
+    # whose key product could overflow int64 at large snapshot counts
+    pairs = np.stack([entity_of_edge.astype(np.int64),
+                      t_of_edge.astype(np.int64)], axis=1)
+    uniq_pairs = np.unique(pairs, axis=0) if pairs.size \
+        else pairs.reshape(0, 2)
+    uniq_entity, uniq_t = uniq_pairs[:, 0], uniq_pairs[:, 1]
     entity_snap_ids: dict = {}
     for i, (ent, t) in enumerate(zip(uniq_entity.tolist(), uniq_t.tolist())):
         entity_snap_ids[(ent, t)] = 2 * n_ord + i
@@ -182,6 +209,7 @@ def build_dds(
         snapshot=snapshot,
         label=label,
         label_mask=label_mask,
+        tower=_tower_codes(n_nodes, entity_snap_ids),
     )
     return DDSGraph(coo=coo, num_orders=n_ord, entity_snap_ids=entity_snap_ids, last_hop=last_hop)
 
@@ -377,6 +405,7 @@ class IncrementalDDSBuilder:
             snapshot=snapshot,
             label=label,
             label_mask=label_mask,
+            tower=_tower_codes(n_nodes, entity_snap_ids),
         )
         dds = DDSGraph(coo=coo, num_orders=n_ord, entity_snap_ids=entity_snap_ids,
                        last_hop=last_hop)
@@ -495,6 +524,7 @@ class IncrementalDDSBuilder:
             snapshot=snapshot,
             label=label,
             label_mask=label_mask,
+            tower=_tower_codes(n_nodes, entity_snap_ids),
         )
         return DDSGraph(coo=coo, num_orders=n_sub,
                         entity_snap_ids=entity_snap_ids, last_hop=last_hop)

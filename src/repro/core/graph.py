@@ -55,6 +55,10 @@ class PaddedGraph(NamedTuple):
     snapshot: jax.Array      # [N] int32 — snapshot index t (-1 for padding)
     label: jax.Array         # [N] float32 — fraud label (orders only)
     label_mask: jax.Array    # [N] float32 — 1 where label is valid
+    # [N] int32 entity-type tower codes (-1 = untyped/non-entity), or None
+    # on a homogeneous graph — the trailing default keeps untyped pytrees
+    # (and their jit caches) byte-identical to the pre-hetero layout
+    tower: jax.Array | None = None
 
     @property
     def num_nodes(self) -> int:
@@ -78,6 +82,9 @@ class COOGraph:
     snapshot: np.ndarray     # [N]
     label: np.ndarray        # [N]
     label_mask: np.ndarray   # [N]
+    # [N] entity-type tower codes (-1 = untyped/non-entity); None on
+    # homogeneous graphs (see repro.core.hetero)
+    tower: np.ndarray | None = None
 
     def in_degrees(self) -> np.ndarray:
         deg = np.zeros(self.num_nodes, np.int64)
@@ -143,6 +150,10 @@ def pad_graph(
     label[:n_real] = g.label
     label_mask = np.zeros(num_nodes, np.float32)
     label_mask[:n_real] = g.label_mask
+    tower = None
+    if g.tower is not None:
+        tower = np.full(num_nodes, -1, np.int32)
+        tower[:n_real] = g.tower
 
     return PaddedGraph(
         features=feat,
@@ -153,4 +164,5 @@ def pad_graph(
         snapshot=snapshot,
         label=label,
         label_mask=label_mask,
+        tower=tower,
     )

@@ -29,6 +29,16 @@ from repro.core.layers import LAYER_REGISTRY, _glorot, weighted_gather_sum
 
 @dataclass(frozen=True)
 class LNNConfig:
+    """Hyperparameters of the Lambda Neural Network (see module docstring).
+
+    ``entity_types`` opts into heterogeneous per-type entity towers: a
+    non-empty tuple of type names (canonically
+    :data:`repro.core.hetero.ENTITY_TYPE_NAMES`) adds a per-type input
+    embedding to stage 1 and per-type weight blocks to stage 2.  Empty
+    (the default) keeps the homogeneous model — parameters, pytree
+    structure, and numerics all bit-identical to the pre-hetero layout.
+    """
+
     gnn_type: str = "gcn"            # 'gcn' | 'gat' | 'sage'
     num_gnn_layers: int = 3          # total GNN layers (>= 2: stage1 has L-1)
     hidden_dim: int = 64
@@ -36,17 +46,28 @@ class LNNConfig:
     feat_dim: int = 16               # raw checkout feature width
     use_pallas: bool = False
     pos_weight: float = 1.0          # BCE positive-class weight (fraud is rare)
+    entity_types: tuple = ()         # () = homogeneous; e.g. hetero.ENTITY_TYPE_NAMES
 
     def __post_init__(self):
         if self.num_gnn_layers < 2:
             raise ValueError("LNN needs >= 2 GNN layers (stage1 >= 1, stage2 == 1)")
         if self.gnn_type not in LAYER_REGISTRY:
             raise ValueError(f"unknown gnn_type {self.gnn_type}")
+        object.__setattr__(self, "entity_types", tuple(self.entity_types))
 
 
 def lnn_init(rng, cfg: LNNConfig):
+    """Initialize an LNN parameter pytree for ``cfg``.
+
+    The homogeneous layout (and its PRNG key schedule) is untouched by the
+    heterogeneous extension: typed parameters draw from *extra* keys
+    appended after the base split, and the ``"typed"`` subtree exists only
+    when ``cfg.entity_types`` is non-empty.
+    """
     init_fn, _ = LAYER_REGISTRY[cfg.gnn_type]
-    keys = jax.random.split(rng, cfg.num_gnn_layers + len(cfg.mlp_dims) + 3)
+    n_base = cfg.num_gnn_layers + len(cfg.mlp_dims) + 3
+    n_types = len(cfg.entity_types)
+    keys = jax.random.split(rng, n_base)
     params = {
         "input": {
             "w": _glorot(keys[0], (cfg.feat_dim, cfg.hidden_dim)),
@@ -70,7 +91,41 @@ def lnn_init(rng, cfg: LNNConfig):
                 "b": jnp.zeros((dims[i + 1],)),
             }
         )
+    if n_types:
+        # independent key stream (fold_in, not a wider base split) so the
+        # homogeneous leaves stay bit-identical to an untyped init
+        emb_key, tower_rng = jax.random.split(jax.random.fold_in(rng, n_base))
+        tower_keys = jax.random.split(tower_rng, n_types)
+        params["typed"] = {
+            # stage-1 additive input embedding per entity type
+            "entity_type_emb": 0.02 * jax.random.normal(
+                emb_key, (n_types, cfg.hidden_dim)),
+            # stage-2 per-type weight blocks (type-partitioned residual
+            # towers over the KV-fetched entity embeddings)
+            "tower_w": jnp.stack([
+                _glorot(tower_keys[t], (cfg.hidden_dim, cfg.hidden_dim))
+                for t in range(n_types)
+            ]),
+            "tower_b": jnp.zeros((n_types, cfg.hidden_dim)),
+        }
     return params
+
+
+def _apply_towers(params, x, codes):
+    """Per-type entity tower: rows whose type code is ``t`` are replaced by
+    ``relu(x @ tower_w[t] + tower_b[t])``; rows with code ``-1`` (orders,
+    shadows, untyped entities, padding) pass through unchanged.
+
+    One static Python loop over T <= 7 types, each a masked select over a
+    single dense matmul — the same formulation the batch, online, and fused
+    Pallas paths all use, so the three stay numerically aligned.
+    """
+    tw, tb = params["typed"]["tower_w"], params["typed"]["tower_b"]
+    out = x
+    for t in range(tw.shape[0]):
+        out = jnp.where((codes == t)[..., None],
+                        jax.nn.relu(x @ tw[t] + tb[t]), out)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -92,6 +147,11 @@ def lnn_stage1(params, cfg: LNNConfig, graph: PaddedGraph):
     )
     h = graph.features @ params["input"]["w"] + params["input"]["b"]
     h = h + params["type_emb"][graph.node_type]
+    if "typed" in params and graph.tower is not None:
+        # heterogeneous input: typed entity-snapshot vertices additionally
+        # receive their per-entity-type embedding (tower < 0 rows add zero)
+        emb = params["typed"]["entity_type_emb"]
+        h = h + (graph.tower >= 0)[:, None] * emb[jnp.clip(graph.tower, 0)]
     h = jax.nn.relu(h)
     for layer in params["gnn"]:
         h = apply_fn(layer, h, stage1_graph, cfg.use_pallas)
@@ -167,6 +227,10 @@ def lnn_stage2_batch(params, cfg: LNNConfig, h, graph: PaddedGraph):
 
     Returns logits [N]; only rows with node_type == ORDER are meaningful.
     """
+    if "typed" in params and graph.tower is not None:
+        # heterogeneous stage 2: per-type towers over entity rows before
+        # the final-hop aggregation (order/shadow rows pass through)
+        h = _apply_towers(params, h, graph.tower)
     agg = _final_hop_aggregate(params, cfg, h, graph)
     self_h = h
     g_out = _last_layer_combine(params, cfg, agg, self_h)
@@ -174,30 +238,23 @@ def lnn_stage2_batch(params, cfg: LNNConfig, h, graph: PaddedGraph):
     return _mlp(params, x)
 
 
-def lnn_stage2_online(params, cfg: LNNConfig, entity_emb, emb_mask, order_feats,
-                      order_h=None):
-    """Online scoring path: KV-fetched entity embeddings -> risk logit.
+def lnn_stage2_embed(params, cfg: LNNConfig, entity_emb, emb_mask, order_feats,
+                     order_h=None, slot_type=None):
+    """Online stage-2 *embedding*: everything up to (but excluding) the MLP
+    head — the last GNN layer's output concatenated with the raw checkout
+    features, ``[B, H + F]``.
 
-    entity_emb: [B, K, H] stage-1 embeddings of the ≤K linked effective
-    entities (zero rows where absent); emb_mask: [B, K]; order_feats: [B, F]
-    raw checkout features; order_h: [B, H] the order's own stage-1 hidden
-    state — optional, recomputed from ``order_feats`` when omitted (always
-    valid: stage 1 masks final-hop edges, so an order's stage-1 state is a
-    pure function of its own raw features, see ``lnn_order_tower``).
-
-    With ``cfg.use_pallas`` the whole path — tower, masked aggregation,
-    last-layer combine, MLP logit — runs as ONE fused Pallas launch
-    (``kernels.stage2_score``; interpret mode on CPU).  The tower is then
-    always recomputed inside the kernel, so a supplied ``order_h`` is
-    ignored on that path.
+    This is the representation the hybrid GNN→GBDT head
+    (``repro.models.hybrid``) feeds to its booster; the pure-MLP scorer is
+    exactly ``_mlp`` over the same tensor, so factoring it out changes no
+    numerics.  ``slot_type``: optional [B, K] int type codes per entity
+    slot (-1 = untyped/padding) — applies the per-type towers of a
+    heterogeneous model before aggregation.
     """
-    if cfg.use_pallas:
-        from repro.kernels.ops import stage2_score
-
-        return stage2_score(params, cfg.gnn_type, entity_emb, emb_mask,
-                            order_feats)
     if order_h is None:
         order_h = lnn_order_tower(params, cfg, order_feats)
+    if "typed" in params and slot_type is not None:
+        entity_emb = _apply_towers(params, entity_emb, slot_type)
     if cfg.gnn_type in ("gcn", "sage"):
         cnt = jnp.maximum(emb_mask.sum(-1, keepdims=True), 1.0)
         agg = jnp.einsum("bkh,bk->bh", entity_emb, emb_mask / cnt)
@@ -211,7 +268,35 @@ def lnn_stage2_online(params, cfg: LNNConfig, entity_emb, emb_mask, order_feats,
         attn = jax.nn.softmax(logits, axis=-1) * emb_mask
         agg = jnp.einsum("bkh,bk->bh", z, attn)
     g_out = _last_layer_combine(params, cfg, agg, order_h)
-    x = jnp.concatenate([g_out, order_feats], axis=-1)
+    return jnp.concatenate([g_out, order_feats], axis=-1)
+
+
+def lnn_stage2_online(params, cfg: LNNConfig, entity_emb, emb_mask, order_feats,
+                      order_h=None, slot_type=None):
+    """Online scoring path: KV-fetched entity embeddings -> risk logit.
+
+    entity_emb: [B, K, H] stage-1 embeddings of the ≤K linked effective
+    entities (zero rows where absent); emb_mask: [B, K]; order_feats: [B, F]
+    raw checkout features; order_h: [B, H] the order's own stage-1 hidden
+    state — optional, recomputed from ``order_feats`` when omitted (always
+    valid: stage 1 masks final-hop edges, so an order's stage-1 state is a
+    pure function of its own raw features, see ``lnn_order_tower``).
+    ``slot_type``: optional [B, K] int entity-type codes (heterogeneous
+    models; -1 = padding/untyped slot).
+
+    With ``cfg.use_pallas`` the whole path — tower, masked aggregation,
+    last-layer combine, MLP logit — runs as ONE fused Pallas launch
+    (``kernels.stage2_score``; interpret mode on CPU).  The tower is then
+    always recomputed inside the kernel, so a supplied ``order_h`` is
+    ignored on that path.
+    """
+    if cfg.use_pallas:
+        from repro.kernels.ops import stage2_score
+
+        return stage2_score(params, cfg.gnn_type, entity_emb, emb_mask,
+                            order_feats, slot_type=slot_type)
+    x = lnn_stage2_embed(params, cfg, entity_emb, emb_mask, order_feats,
+                         order_h=order_h, slot_type=slot_type)
     return _mlp(params, x)
 
 

@@ -336,6 +336,26 @@ class IncrementalPartitioner:
             return [e]
         return list(self._members[self._find(e)])
 
+    def type_histogram(self, entity_or_community: int) -> dict:
+        """Entity-type composition of one community: ``{type_name: count}``.
+
+        Communities are id-agnostic (the union-find never decodes ids), so
+        heterogeneous graphs get typed communities for free — this is the
+        introspection side: tagged members count under their
+        :data:`~repro.core.hetero.ENTITY_TYPE_NAMES` name, untagged ones
+        under ``"untyped"``.  A fraud ring shows up here as one community
+        whose histogram spans many devices/payments but few buyers.
+        """
+        from repro.core.hetero import ENTITY_TYPE_NAMES, type_code_of
+
+        hist: dict = {}
+        for e in self.members(entity_or_community):
+            code = type_code_of(e)
+            name = (ENTITY_TYPE_NAMES[code]
+                    if 0 <= code < len(ENTITY_TYPE_NAMES) else "untyped")
+            hist[name] = hist.get(name, 0) + 1
+        return hist
+
     def order_count(self, entity_or_community: int) -> int:
         """Orders absorbed by the component containing the given entity."""
         e = int(entity_or_community)

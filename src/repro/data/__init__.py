@@ -1,5 +1,7 @@
+from repro.data.attacks import ATTACK_NAMES, AttackConfig, generate_attack_stream
 from repro.data.synth import SynthConfig, generate_event_stream, generate_transactions
 from repro.data.pipeline import build_communities, make_split_masks
 
 __all__ = ["SynthConfig", "generate_event_stream", "generate_transactions",
-           "build_communities", "make_split_masks"]
+           "build_communities", "make_split_masks",
+           "ATTACK_NAMES", "AttackConfig", "generate_attack_stream"]

@@ -8,6 +8,7 @@ lowering is backend-independent.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.csr_spmm import csr_spmm_pallas
@@ -51,17 +52,26 @@ def ssd_scan(x, dt, a, b, c, d_skip=None, chunk: int = 128):
 
 
 def stage2_score(params, gnn_type, entity_emb, emb_mask, order_feats,
-                 block_b: int = 128):
+                 block_b: int = 128, slot_type=None):
     """Fused speed-layer scoring: whole online stage-2 path in one launch.
 
     Takes the full ``lnn_init`` params pytree; the stage-2-relevant leaves
     are flattened into the kernel's argument order here (cheap — slicing and
-    one stack, folded away under jit).  Returns logits [B].
+    one stack, folded away under jit).  Heterogeneous params (``"typed"`` in
+    the pytree) select the typed kernel variant: ``slot_type`` is the int32
+    ``[B, K]`` entity-type code per slot (-1 = padding/untyped; defaults to
+    all -1 when omitted).  Returns logits [B].
     """
+    typed = "typed" in params
     flat = flatten_stage2_params(params, gnn_type)
+    if typed and slot_type is None:
+        slot_type = jnp.full(emb_mask.shape, -1, jnp.int32)
+    if not typed:
+        slot_type = None
     return stage2_score_pallas(entity_emb, emb_mask, order_feats, flat,
                                gnn_type=gnn_type, block_b=block_b,
-                               interpret=_interpret())
+                               interpret=_interpret(),
+                               slot_type=slot_type, typed=typed)
 
 
 # re-export oracles for convenience

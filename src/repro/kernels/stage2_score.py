@@ -54,13 +54,31 @@ def _bucket_block(b: int, cap: int) -> int:
     return min(p, cap)
 
 
-def _make_stage2_kernel(gnn_type: str, n_tower: int, n_mlp_extra: int):
-    """Build the kernel body for a static (gnn_type, depth) configuration."""
+def _make_stage2_kernel(gnn_type: str, n_tower: int, n_mlp_extra: int,
+                        typed: bool = False, n_types: int = 0):
+    """Build the kernel body for a static (gnn_type, depth) configuration.
+
+    ``typed``: heterogeneous variant — a fourth data input carries per-slot
+    entity-type codes and two extra weight refs carry the type-partitioned
+    tower blocks ``[T, H, H]`` / ``[T, H]``, applied to each entity slot
+    before aggregation (code -1 = padding/untyped slot, passthrough).  The
+    untyped kernel signature and body are byte-identical to the pre-hetero
+    version — bit-parity gates on homogeneous configs see the same launch.
+    """
 
     def kernel(*refs):
-        emb_ref, mask_ref, feats_ref = refs[0:3]
-        w_in_ref, b_in_ref, type_ref, tw_ref, tb_ref = refs[3:8]
-        rest = refs[8:]
+        if typed:
+            emb_ref, mask_ref, feats_ref, st_ref = refs[0:4]
+            woff = 4
+        else:
+            emb_ref, mask_ref, feats_ref = refs[0:3]
+            woff = 3
+        w_in_ref, b_in_ref, type_ref, tw_ref, tb_ref = refs[woff:woff + 5]
+        if typed:
+            ttw_ref, ttb_ref = refs[woff + 5:woff + 7]
+            rest = refs[woff + 7:]
+        else:
+            rest = refs[woff + 5:]
         if gnn_type == "gat":
             (w_self_ref, b_last_ref, w_gat_ref,
              a_src_ref, a_dst_ref, a_et_ref) = rest[0:6]
@@ -74,6 +92,18 @@ def _make_stage2_kernel(gnn_type: str, n_tower: int, n_mlp_extra: int):
         mask = mask_ref[...].astype(jnp.float32)    # [bb, K]
         feats = feats_ref[...].astype(jnp.float32)  # [bb, F]
         bb, K, H = emb.shape
+
+        # ---- per-type entity towers (heterogeneous models only) ----
+        if typed:
+            st = st_ref[...]                        # [bb, K] int32 codes
+            ttw = ttw_ref[...]                      # [T, H, H]
+            ttb = ttb_ref[...]                      # [T, H]
+            emb0 = emb
+            for t in range(n_types):
+                tr = jnp.maximum(
+                    emb0.reshape(bb * K, H) @ ttw[t] + ttb[t], 0.0
+                ).reshape(bb, K, H)
+                emb = jnp.where((st == t)[..., None], tr, emb)
 
         # ---- order tower: input projection + stage-1 self transforms ----
         h = feats @ w_in_ref[...] + b_in_ref[...] + type_ref[...]
@@ -145,6 +175,10 @@ def flatten_stage2_params(params, gnn_type: str):
         jnp.stack([lyr["w_self"] for lyr in params["gnn"]]),
         jnp.stack([lyr["b"] for lyr in params["gnn"]]),
     ]
+    if "typed" in params:
+        # Heterogeneous models: per-type entity tower blocks ride along
+        # right after the stage-1 stacks (order is part of the kernel ABI).
+        flat += [params["typed"]["tower_w"], params["typed"]["tower_b"]]
     p = params["last"]
     if gnn_type == "gcn":
         flat += [p["w_self"], p["w_nbr"][EdgeType.ENTITY_TO_ORDER], p["b"][None, :]]
@@ -164,12 +198,20 @@ def flatten_stage2_params(params, gnn_type: str):
     return tuple(flat)
 
 
-@functools.partial(jax.jit, static_argnames=("gnn_type", "block_b", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("gnn_type", "block_b", "interpret", "typed"))
 def stage2_score_pallas(entity_emb, emb_mask, order_feats, flat,
                         gnn_type: str = "gcn", block_b: int = 128,
-                        interpret: bool = True):
+                        interpret: bool = True, slot_type=None,
+                        typed: bool = False):
     """Fused online stage-2 scoring: ``(emb [B,K,H], mask [B,K], feats [B,F])
     -> logits [B]``.  ``flat`` comes from :func:`flatten_stage2_params`.
+
+    ``typed=True`` selects the heterogeneous kernel variant: ``slot_type``
+    (int32 ``[B, K]`` entity-type codes, -1 for padding/untyped slots) rides
+    as a fourth data input and ``flat`` carries the two extra tower refs.
+    With ``typed=False`` the call is byte-identical to the homogeneous
+    kernel — same inputs, same trace, same jit cache key.
     """
     b, k, hdim = entity_emb.shape
     f = order_feats.shape[1]
@@ -177,7 +219,9 @@ def stage2_score_pallas(entity_emb, emb_mask, order_feats, flat,
     grid = (ceil_div(b, bb),)
 
     n_tower = flat[3].shape[0]
-    n_fixed = 11 if gnn_type == "gat" else 8
+    n_typed = 2 if typed else 0
+    n_types = flat[5].shape[0] if typed else 0
+    n_fixed = (11 if gnn_type == "gat" else 8) + n_typed
     n_mlp_extra = (len(flat) - n_fixed - 3) // 2
 
     def _full(a):
@@ -188,13 +232,19 @@ def stage2_score_pallas(entity_emb, emb_mask, order_feats, flat,
         pl.BlockSpec((bb, k, hdim), lambda i: (i, 0, 0)),
         pl.BlockSpec((bb, k), lambda i: (i, 0)),
         pl.BlockSpec((bb, f), lambda i: (i, 0)),
-    ] + [_full(a) for a in flat]
+    ]
+    data = [entity_emb, emb_mask, order_feats]
+    if typed:
+        in_specs.append(pl.BlockSpec((bb, k), lambda i: (i, 0)))
+        data.append(slot_type)
+    in_specs += [_full(a) for a in flat]
 
     return pl.pallas_call(
-        _make_stage2_kernel(gnn_type, n_tower, n_mlp_extra),
+        _make_stage2_kernel(gnn_type, n_tower, n_mlp_extra,
+                            typed=typed, n_types=n_types),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
         interpret=interpret,
-    )(entity_emb, emb_mask, order_feats, *flat)
+    )(*data, *flat)

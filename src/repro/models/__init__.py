@@ -1,4 +1,11 @@
 from repro.models.config import INPUT_SHAPES, ArchConfig, InputShape
+from repro.models.hybrid import (
+    HybridModel,
+    is_hybrid_checkpoint,
+    load_hybrid,
+    save_hybrid,
+    train_hybrid,
+)
 from repro.models.transformer import (
     decode_step,
     forward,
@@ -11,6 +18,11 @@ __all__ = [
     "INPUT_SHAPES",
     "ArchConfig",
     "InputShape",
+    "HybridModel",
+    "is_hybrid_checkpoint",
+    "load_hybrid",
+    "save_hybrid",
+    "train_hybrid",
     "decode_step",
     "forward",
     "forward_train",

@@ -1,0 +1,169 @@
+"""Hybrid GNN -> GBDT risk head (paper §4.2's "LNN + LGB" composition).
+
+The paper feeds *encoded* features into downstream learners; the hybrid
+head runs that composition at serving time in the opposite direction: the
+(frozen) LNN produces its pre-MLP stage-2 embedding ``[g_out ; feats]``
+for each request, and a histogram-GBDT booster (``baselines/gbdt.py``, the
+LightGBM stand-in) replaces the MLP as the final risk scorer.  Trees over
+the learned graph embedding pick up axis-aligned interactions the small
+MLP head misses — on the named-attack workload this is the
+``hybrid_beats_mlp_on_rings`` gate in ``BENCH_hetero.json``.
+
+Serving contract: a :class:`HybridModel` registers with
+:class:`~repro.service.service.FraudService` as an ordinary model version.
+The GNN embedding runs through the same fused path as the MLP head (one
+jit dispatch via :func:`~repro.core.lnn.lnn_stage2_embed`); the booster
+scores on host — numpy, element-deterministic, so replay parity holds
+exactly like the MLP path's host-side sigmoid.
+
+Persistence piggybacks on the ``.npz`` checkpoint format
+(``train/checkpoint.py``): LNN leaves save under their usual key paths, the
+booster's flat arrays save under a ``__gbdt__/...`` namespace, and a
+``__hybrid__`` marker key lets :func:`is_hybrid_checkpoint` route restores.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.baselines.gbdt import GBDTConfig, GBDTModel, _Tree, train_gbdt
+from repro.core.lnn import LNNConfig, lnn_stage2_embed
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+
+@dataclass
+class HybridModel:
+    """Frozen LNN embedding + GBDT booster over ``[g_out ; feats]``.
+
+    ``lnn_params`` is the full ``lnn_init`` pytree (stage-1 refresh uses it
+    unchanged — the hybrid head only replaces online stage-2's MLP).
+    """
+
+    lnn_params: dict
+    cfg: LNNConfig
+    gbdt: GBDTModel
+
+    def embed(self, entity_emb, emb_mask, order_feats, slot_type=None):
+        """Pre-MLP stage-2 embedding ``[B, H+F]`` (host numpy, f32)."""
+        x = lnn_stage2_embed(self.lnn_params, self.cfg, entity_emb, emb_mask,
+                             order_feats, slot_type=slot_type)
+        return np.asarray(x, np.float32)
+
+    def score(self, entity_emb, emb_mask, order_feats, slot_type=None):
+        """Fraud probability per row — embedding dispatch + host booster."""
+        return self.gbdt.predict_proba(
+            self.embed(entity_emb, emb_mask, order_feats, slot_type=slot_type))
+
+
+def train_hybrid(lnn_params, cfg: LNNConfig, embeddings: np.ndarray,
+                 labels: np.ndarray, gbdt_cfg: GBDTConfig | None = None,
+                 x_val: np.ndarray | None = None,
+                 y_val: np.ndarray | None = None) -> HybridModel:
+    """Fit the booster on pre-computed stage-2 embeddings (LNN stays frozen).
+
+    ``embeddings`` are :meth:`HybridModel.embed` outputs (or
+    ``lnn_stage2_embed`` directly) for the training split.
+    """
+    gbdt = train_gbdt(np.asarray(embeddings, np.float64),
+                      np.asarray(labels, np.float64),
+                      cfg=gbdt_cfg or GBDTConfig(),
+                      x_val=x_val, y_val=y_val)
+    return HybridModel(lnn_params=lnn_params, cfg=cfg, gbdt=gbdt)
+
+
+# --------------------------------------------------------------- persistence
+
+def _gbdt_payload(gbdt: GBDTModel) -> dict:
+    """Flatten a booster into npz-able arrays under the __gbdt__ namespace."""
+    out = {
+        "__hybrid__": np.asarray(1, np.int64),
+        "__gbdt__/base_score": np.asarray(gbdt.base_score, np.float64),
+        "__gbdt__/n_trees": np.asarray(len(gbdt.trees), np.int64),
+        "__gbdt__/n_features": np.asarray(len(gbdt.bin_edges), np.int64),
+        "__gbdt__/cfg": np.asarray([
+            gbdt.cfg.num_trees, gbdt.cfg.max_depth, gbdt.cfg.num_bins,
+        ], np.int64),
+        "__gbdt__/cfg_f": np.asarray([
+            gbdt.cfg.learning_rate, gbdt.cfg.min_child_weight,
+            gbdt.cfg.reg_lambda, gbdt.cfg.min_gain,
+        ], np.float64),
+    }
+    for j, edges in enumerate(gbdt.bin_edges):
+        out[f"__gbdt__/edges/{j}"] = np.asarray(edges, np.float64)
+    for i, t in enumerate(gbdt.trees):
+        out[f"__gbdt__/tree/{i}/feature"] = t.feature
+        out[f"__gbdt__/tree/{i}/threshold_bin"] = t.threshold_bin
+        out[f"__gbdt__/tree/{i}/left"] = t.left
+        out[f"__gbdt__/tree/{i}/right"] = t.right
+        out[f"__gbdt__/tree/{i}/value"] = t.value
+    return out
+
+
+def _gbdt_from_payload(data) -> GBDTModel:
+    ci = data["__gbdt__/cfg"]
+    cf = data["__gbdt__/cfg_f"]
+    cfg = GBDTConfig(num_trees=int(ci[0]), max_depth=int(ci[1]),
+                     num_bins=int(ci[2]), learning_rate=float(cf[0]),
+                     min_child_weight=float(cf[1]), reg_lambda=float(cf[2]),
+                     min_gain=float(cf[3]))
+    gbdt = GBDTModel(cfg=cfg, base_score=float(data["__gbdt__/base_score"]))
+    for j in range(int(data["__gbdt__/n_features"])):
+        gbdt.bin_edges.append(np.asarray(data[f"__gbdt__/edges/{j}"]))
+    for i in range(int(data["__gbdt__/n_trees"])):
+        gbdt.trees.append(_Tree(
+            feature=np.asarray(data[f"__gbdt__/tree/{i}/feature"]),
+            threshold_bin=np.asarray(data[f"__gbdt__/tree/{i}/threshold_bin"]),
+            left=np.asarray(data[f"__gbdt__/tree/{i}/left"]),
+            right=np.asarray(data[f"__gbdt__/tree/{i}/right"]),
+            value=np.asarray(data[f"__gbdt__/tree/{i}/value"]),
+        ))
+    return gbdt
+
+
+def save_hybrid(path: str, model: HybridModel) -> str:
+    """Atomically write a hybrid model to ``path`` (.npz) — LNN leaves under
+    their checkpoint key paths plus the ``__gbdt__`` namespace."""
+    save_checkpoint(path, model.lnn_params)
+    # re-write with the booster payload merged in (save_checkpoint owns the
+    # atomic-replace dance; one extra read-modify-write keeps it simple)
+    with np.load(path) as data:
+        payload = {k: data[k] for k in data.files}
+    payload.update(_gbdt_payload(model.gbdt))
+    import os
+    import tempfile
+    fd, tmp = tempfile.mkstemp(
+        dir=os.path.dirname(os.path.abspath(path)), suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return path
+
+
+def is_hybrid_checkpoint(path: str) -> bool:
+    """True when ``path`` is a :func:`save_hybrid` artifact (``__hybrid__``
+    marker present), False for a plain LNN checkpoint."""
+    with np.load(path) as data:
+        return "__hybrid__" in data.files
+
+
+def load_hybrid(path: str, like_lnn_params, cfg: LNNConfig) -> HybridModel:
+    """Restore a hybrid model; ``like_lnn_params`` is the ``lnn_init``
+    template used by ``load_checkpoint`` to rebuild the LNN pytree."""
+    lnn_params, _ = load_checkpoint(path, like_lnn_params)
+    lnn_params = jax.tree_util.tree_map(np.asarray, lnn_params)
+    with np.load(path) as data:
+        gbdt = _gbdt_from_payload(data)
+    return HybridModel(lnn_params=lnn_params, cfg=cfg, gbdt=gbdt)
+
+
+__all__ = [
+    "HybridModel", "train_hybrid", "save_hybrid", "load_hybrid",
+    "is_hybrid_checkpoint",
+]

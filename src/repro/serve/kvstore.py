@@ -30,6 +30,7 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.core.hetero import is_typed
 from repro.dist.sharding import rendezvous_shard, stable_shard
 from repro.utils import crashpoint
 
@@ -38,33 +39,56 @@ MAX_SNAPSHOT = (1 << SNAPSHOT_BITS) - 1
 MAX_ENTITY = (1 << (63 - SNAPSHOT_BITS)) - 1
 
 
-def pack_key(entity: int, snapshot: int) -> int:
+def _reject_untagged(entity: int) -> None:
+    """Raise for an untagged entity id reaching a heterogeneous keyspace.
+
+    With ``require_typed`` set, a legacy (untagged) id must fail loudly:
+    silently admitting it would collapse buyer and device ids into one
+    keyspace (identical raw ids shard — and collide — together)."""
+    if not is_typed(entity):
+        raise ValueError(
+            f"entity id {int(entity)} carries no type tag but this keyspace "
+            "is heterogeneous (require_typed=True) — tag ids with "
+            "repro.core.hetero.tag_entity to keep per-type keyspaces disjoint")
+
+
+def pack_key(entity: int, snapshot: int, require_typed: bool = False) -> int:
     """Pack (entity, snapshot) into one int64: entity << 20 | snapshot.
 
     Guards the packing domain — out-of-range inputs used to alias other
     entities' keys silently (e.g. snapshot 2^20 bled into entity bits).
+    ``require_typed`` additionally rejects entity ids without a
+    :mod:`repro.core.hetero` type tag (heterogeneous keyspaces).
     """
     e, t = int(entity), int(snapshot)
     if not 0 <= t <= MAX_SNAPSHOT:
         raise ValueError(f"snapshot {t} outside [0, {MAX_SNAPSHOT}] — would collide")
     if not 0 <= e <= MAX_ENTITY:
         raise ValueError(f"entity {e} outside [0, {MAX_ENTITY}] — would collide")
+    if require_typed:
+        _reject_untagged(e)
     return (e << SNAPSHOT_BITS) | t
 
 
 def unpack_key(key: int) -> tuple[int, int]:
+    """Inverse of :func:`pack_key`: ``(entity, snapshot)`` from one int64."""
     return int(key) >> SNAPSHOT_BITS, int(key) & MAX_SNAPSHOT
 
 
-def entity_shard(entity: int, num_shards: int) -> int:
+def entity_shard(entity: int, num_shards: int,
+                 require_typed: bool = False) -> int:
     """Shard an *entity* (all its snapshots together) over ``num_shards``.
 
     Rendezvous placement over the entity id — the same function the
     speed-layer :class:`~repro.stream.workers.ShardRouter` uses, so a store
     built with ``shard_by_entity=True`` and ``num_shards == num_workers``
     puts every snapshot of an entity on exactly the worker that scores its
-    requests (key-affinity, see docs/streaming.md).
+    requests (key-affinity, see docs/streaming.md).  ``require_typed``
+    rejects untagged ids — sharding them would silently collapse per-type
+    keyspaces (see :func:`pack_key`).
     """
+    if require_typed:
+        _reject_untagged(entity)
     return rendezvous_shard(int(entity), num_shards)
 
 
@@ -87,7 +111,10 @@ class KVStore:
     ``capacity``: max total entries (None = unbounded); enforced per shard
     with LRU order (gets refresh recency).  ``ttl_seconds``: entries older
     than this expire lazily on access.  ``clock``: injectable time source
-    for deterministic TTL tests.
+    for deterministic TTL tests.  ``require_typed``: heterogeneous mode —
+    every write or versioned read whose entity id lacks a
+    :mod:`repro.core.hetero` type tag raises instead of silently sharing
+    the untyped keyspace.
     """
 
     def __init__(
@@ -98,6 +125,7 @@ class KVStore:
         num_shards: int = 1,
         clock=time.time,
         shard_by_entity: bool = False,
+        require_typed: bool = False,
     ):
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
@@ -106,6 +134,7 @@ class KVStore:
         self.ttl_seconds = ttl_seconds
         self.num_shards = num_shards
         self.shard_by_entity = shard_by_entity
+        self.require_typed = bool(require_typed)
         self._clock = clock
         self._shards: list[OrderedDict[int, _Entry]] = [
             OrderedDict() for _ in range(num_shards)
@@ -132,7 +161,10 @@ class KVStore:
         speed layer needs for key-affine routing (workers own whole
         entities, not scattered snapshots)."""
         if self.shard_by_entity:
-            return entity_shard(int(key) >> SNAPSHOT_BITS, self.num_shards)
+            return entity_shard(int(key) >> SNAPSHOT_BITS, self.num_shards,
+                                require_typed=self.require_typed)
+        if self.require_typed:
+            _reject_untagged(int(key) >> SNAPSHOT_BITS)
         return stable_shard(key, self.num_shards)
 
     def reshard(self, num_shards: int) -> None:
@@ -313,6 +345,8 @@ class KVStore:
                                expected_model_version=None):
         for i, pairs in enumerate(entity_t_lists):
             for j, (ent, t_e) in enumerate(pairs[:k_max]):
+                if self.require_typed:
+                    _reject_untagged(ent)
                 self.stats["gets"] += 1
                 t_found = self.latest_snapshot(ent, t_e)
                 if t_found is None:

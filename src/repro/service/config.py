@@ -57,10 +57,15 @@ class ModelSection:
     feat_dim: int = 16
     use_pallas: bool = False
     pos_weight: float = 1.0
+    # heterogeneous vocabulary (e.g. core.hetero.ENTITY_TYPE_NAMES); empty =
+    # homogeneous model, no per-type towers, untagged entity ids accepted
+    entity_types: tuple = ()
 
     def __post_init__(self):
         # JSON round-trips tuples as lists; normalize back
         object.__setattr__(self, "mlp_dims", tuple(self.mlp_dims))
+        object.__setattr__(self, "entity_types",
+                           tuple(str(t) for t in self.entity_types))
 
     def to_lnn_config(self) -> LNNConfig:
         return LNNConfig(**dataclasses.asdict(self))

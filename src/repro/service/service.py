@@ -138,16 +138,24 @@ class FraudService:
         cfg = self.config
         lnn = cfg.to_lnn_config()
         if self.mode == "streaming":
-            from repro.stream.engine import StreamingEngine
+            from repro.stream.engine import StreamingEngine, _stage1_params
 
             self._engine = StreamingEngine(
                 self._params, lnn, cfg.to_engine_config(),
                 store=self._external_store, _via_service=True)
             self._engine.model_version = self._model_version
             self._engine.pool.set_model(self._params, self._model_version)
-            self._engine.refresher.set_model(self._params, self._model_version)
+            self._engine.refresher.set_model(
+                _stage1_params(self._params), self._model_version)
             self.store = self._engine.store
         else:
+            from repro.models.hybrid import HybridModel
+
+            if isinstance(self._params, HybridModel):
+                raise ServiceLifecycleError(
+                    "hybrid GNN->GBDT models serve in mode='streaming' only "
+                    "(the booster replaces the online stage-2 head; the "
+                    "batch pipeline has no online stage 2)")
             from repro.serve.lambda_pipeline import BatchLayer, SpeedLayer
 
             if self.store is None:
@@ -421,16 +429,26 @@ class FraudService:
         sigmoid; batch: exact-key lookup as ``serve.SpeedLayer`` does)."""
         import jax
 
-        from repro.core.lnn import lnn_stage2_online
+        from repro.core.hetero import type_code_of
+        from repro.core.lnn import lnn_stage2_embed, lnn_stage2_online
+        from repro.models.hybrid import HybridModel
         from repro.stream.microbatch import bucket_size
 
         lnn = self.config.to_lnn_config()
         k = self.config.engine.k_max
+        shadow_params = self._models[version]
+        hybrid = isinstance(shadow_params, HybridModel)
         jit = self._shadow_jits.get(version)
         if jit is None:
-            jit = self._shadow_jits[version] = jax.jit(
-                lambda p, emb, mask, feats: lnn_stage2_online(
-                    p, lnn, emb, mask, feats))
+            if hybrid:
+                jit = jax.jit(
+                    lambda p, emb, mask, feats, st: lnn_stage2_embed(
+                        p, lnn, emb, mask, feats, slot_type=st))
+            else:
+                jit = jax.jit(
+                    lambda p, emb, mask, feats, st: lnn_stage2_online(
+                        p, lnn, emb, mask, feats, slot_type=st))
+            self._shadow_jits[version] = jit
         n = len(requests)
         b = bucket_size(n, max(2, self.config.engine.max_batch))
         feats = np.zeros((b, lnn.feat_dim), np.float32)
@@ -438,6 +456,13 @@ class FraudService:
         for i, r in enumerate(requests):
             feats[i] = r.features
             key_lists[i] = list(r.entity_keys)
+        st = None
+        if lnn.entity_types:
+            # same per-slot type codes the primary Stage2Scorer derives
+            st = np.full((b, k), -1, np.int32)
+            for i, keys in enumerate(key_lists):
+                for j, (ent, _t) in enumerate(keys[:k]):
+                    st[i, j] = type_code_of(ent)
         if self.mode == "streaming":
             # expected_model_version=None: shadow reads must not pollute the
             # production model_stale_reads counter
@@ -447,7 +472,11 @@ class FraudService:
 
             packed = [[pack_key(e, t) for (e, t) in keys] for keys in key_lists]
             emb, mask = self.store.lookup_batch(packed, k)
-        logits = np.asarray(jit(self._models[version], emb, mask, feats),
+        if hybrid:
+            x = np.asarray(jit(shadow_params.lnn_params, emb, mask, feats, st),
+                           np.float32)
+            return shadow_params.gbdt.predict_proba(x).astype(np.float32)[:n]
+        logits = np.asarray(jit(shadow_params, emb, mask, feats, st),
                             np.float64)
         # host-side f64 sigmoid, matching Stage2Scorer exactly (bit-parity);
         # a strongly-perturbed canary can drive exp to +inf, which saturates
@@ -634,13 +663,19 @@ class FraudService:
     def _persist_params(self, params, version: int) -> str:
         """Write one model version under the WAL root (idempotent).
         Returns the root-relative path checkpoint manifests / WAL model
-        records reference."""
+        records reference.  Hybrid models persist as ``save_hybrid``
+        artifacts in the same ``.npz`` slot (the ``__hybrid__`` marker
+        routes the restore)."""
+        from repro.models.hybrid import HybridModel, save_hybrid
         from repro.train.checkpoint import save_checkpoint
 
         rel = os.path.join("models", f"v{int(version)}.npz")
         path = os.path.join(self._wal_root, rel)
         if not os.path.exists(path):
-            save_checkpoint(path, params)
+            if isinstance(params, HybridModel):
+                save_hybrid(path, params)
+            else:
+                save_checkpoint(path, params)
         return rel
 
     def enable_wal(self, root: str, fsync: bool = False) -> "FraudService":
@@ -723,6 +758,7 @@ class FraudService:
         import jax
 
         from repro.core.lnn import lnn_init
+        from repro.models.hybrid import is_hybrid_checkpoint, load_hybrid
         from repro.stream import checkpoint as ckpt
         from repro.train.checkpoint import load_checkpoint
 
@@ -730,7 +766,13 @@ class FraudService:
         with open(os.path.join(root, "genesis.json")) as f:
             genesis = json.load(f)
         # params files restore into a like-structured template
-        template = lnn_init(jax.random.PRNGKey(0), config.to_lnn_config())
+        lnn_cfg = config.to_lnn_config()
+        template = lnn_init(jax.random.PRNGKey(0), lnn_cfg)
+
+        def _load_params(path):
+            if is_hybrid_checkpoint(path):
+                return load_hybrid(path, template, lnn_cfg)
+            return load_checkpoint(path, template)[0]
 
         found = ckpt.latest_checkpoint(root)
         if found is not None:
@@ -748,8 +790,7 @@ class FraudService:
         svc = cls(config)
         svc._wal_root = root
         for v in sorted(registry):
-            params, _ = load_checkpoint(os.path.join(root, registry[v]),
-                                        template)
+            params = _load_params(os.path.join(root, registry[v]))
             svc.register_model(params, v)
         svc._params = svc._models[active]
         svc._model_version = active
@@ -768,8 +809,7 @@ class FraudService:
         try:
             for rec in wal.scan(after_seq=applied):
                 if rec["kind"] == "model":
-                    params, _ = load_checkpoint(
-                        os.path.join(root, rec["path"]), template)
+                    params = _load_params(os.path.join(root, rec["path"]))
                     svc.load_model(params, rec["version"])
                 elif rec["kind"] == "drain":
                     responses.extend(svc.drain(rec["now"]))

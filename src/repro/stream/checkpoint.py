@@ -89,6 +89,8 @@ def encode_event(event: CheckoutEvent) -> dict:
 
 
 def decode_event(record: dict) -> CheckoutEvent:
+    """Inverse of :func:`encode_event` — rebuild the event from one WAL
+    JSON record (features decode little-endian f32, platform-independent)."""
     feats = np.frombuffer(
         base64.b64decode(record["features"]), dtype="<f4"
     ).astype(np.float32)
@@ -529,6 +531,8 @@ def apply_checkpoint(service, manifest: dict, arrays: dict) -> None:
 
 # -------------------------------------------------------------- disk layout
 def checkpoint_dir(root: str, applied_seq: int) -> str:
+    """Directory one checkpoint occupies under ``root`` — named by the
+    zero-padded WAL sequence it covers, so lexical order is replay order."""
     return os.path.join(root, _CKPT_DIR, f"{_CKPT_PREFIX}{applied_seq:012d}")
 
 
@@ -604,6 +608,7 @@ def read_checkpoint(path: str) -> tuple[dict, dict]:
 
 
 def wal_path(root: str) -> str:
+    """The write-ahead log file under a recovery root."""
     return os.path.join(root, _WAL_NAME)
 
 

@@ -46,8 +46,20 @@ from repro.stream.refresh import RefreshDriver
 from repro.stream.workers import WorkerPool
 
 
+def _stage1_params(params):
+    """The LNN pytree driving batch-layer refreshes: hybrid models carry it
+    under ``.lnn_params`` (the booster only replaces online stage 2)."""
+    from repro.models.hybrid import HybridModel
+
+    return params.lnn_params if isinstance(params, HybridModel) else params
+
+
 @dataclass
 class EngineConfig:
+    """Knobs for :class:`StreamingEngine` — micro-batching, refresh cadence,
+    DDS history, KV store sizing/sharding, and the multi-worker speed layer.
+    ``FraudService`` builds one from ``ServiceConfig.to_engine_config()``."""
+
     k_max: int = 8                  # entity slots per request
     max_batch: int = 16             # micro-batch size trigger (per worker)
     max_wait_s: float = 0.005       # micro-batch deadline trigger (virtual s)
@@ -117,6 +129,10 @@ class StreamingEngine:
             num_shards=(self.ecfg.num_workers if by_entity
                         else self.ecfg.store_shards),
             shard_by_entity=by_entity,
+            # heterogeneous model => every entity id must carry a type tag;
+            # an untagged id in a typed deployment is a caller bug the
+            # store rejects loudly (core.hetero.tag_entity)
+            require_typed=bool(cfg.entity_types),
         )
         self.ingester = StreamIngester(
             cfg.feat_dim,
@@ -133,7 +149,7 @@ class StreamingEngine:
             steal_threshold=self.ecfg.steal_threshold,
         )
         self.refresher = RefreshDriver(
-            params, cfg, self.store, self.ingester,
+            _stage1_params(params), cfg, self.store, self.ingester,
             max_deg=self.ecfg.max_deg,
             refresh_every=self.ecfg.refresh_every,
             async_mode=self.ecfg.async_refresh,
@@ -168,13 +184,16 @@ class StreamingEngine:
         every subsequent flush scores under the new version; subsequent
         batch-layer puts are stamped with it (so reads of pre-swap
         embeddings are detectable via ``store.stats['model_stale_reads']``).
+        ``params`` may be an ``lnn_init`` pytree or a
+        :class:`~repro.models.hybrid.HybridModel` (the refresh driver then
+        runs stage 1 with the hybrid's frozen LNN leaves).
         Returns the version activated (default: current + 1)."""
         if version is None:
             version = self.model_version + 1
         self.params = params
         self.model_version = int(version)
         self.pool.set_model(params, self.model_version)
-        self.refresher.set_model(params, self.model_version)
+        self.refresher.set_model(_stage1_params(params), self.model_version)
         return self.model_version
 
     # ----------------------------------------------------------------- events
@@ -226,6 +245,9 @@ class StreamingEngine:
 
 @dataclass
 class ReplayReport:
+    """Outcome of one full stream replay: the admitted per-request results
+    plus the engine they ran on, with latency / score / staleness views."""
+
     results: list
     engine: StreamingEngine
     _lat: np.ndarray | None = field(default=None, repr=False)

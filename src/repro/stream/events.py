@@ -23,6 +23,12 @@ from repro.core.dds import StaticGraph
 
 @dataclass(frozen=True)
 class CheckoutEvent:
+    """One checkout on the wire: the unit of streaming ingest and scoring.
+
+    ``entities`` may be raw ids (homogeneous) or type-tagged ids
+    (``core.hetero.tag_entity``) — both travel as plain ints through the
+    WAL and checkpoints."""
+
     order_id: int             # id in the source static graph (-1 for live traffic)
     snapshot: int             # event-time snapshot index (paper: one day)
     entities: tuple           # linked global entity ids, in entity-type order

@@ -43,6 +43,11 @@ class IngestResult:
 
 
 class StreamIngester:
+    """Event-at-a-time DDS growth: feeds each :class:`CheckoutEvent` to the
+    incremental builder, tracks the open snapshot window, marks dirty
+    ``(entity, t)`` pairs for the refresh driver, and maintains the
+    incremental community partition."""
+
     def __init__(
         self,
         feat_dim: int,

@@ -70,6 +70,12 @@ def _pow2_at_least(n: int, floor: int = 64) -> int:
 
 
 class RefreshDriver:
+    """The batch layer on a timer: when ingest closes snapshot windows, runs
+    stage 1 over the affected (community-local by default) subgraph and
+    writes the refreshed entity embeddings to the KV store as versioned,
+    model-stamped puts — sharded to match the speed layer's key-affine
+    routing."""
+
     def __init__(
         self,
         params,

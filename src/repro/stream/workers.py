@@ -36,7 +36,9 @@ import time
 import jax
 import numpy as np
 
-from repro.core.lnn import LNNConfig, lnn_stage2_online
+from repro.core.hetero import type_code_of
+from repro.core.lnn import LNNConfig, lnn_stage2_embed, lnn_stage2_online
+from repro.models.hybrid import HybridModel
 from repro.serve.kvstore import KVStore, entity_shard
 from repro.stream.microbatch import (
     MicroBatcher,
@@ -125,36 +127,68 @@ class Stage2Scorer:
         self.cfg = cfg
         self.store = store
         self.k_max = int(k_max)
+        self._typed = bool(cfg.entity_types)
         self._jits: dict[int, object] = {}
         self.set_model(params, model_version)
 
     def set_model(self, params, model_version: int) -> None:
         """Activate a parameter version.  New flushes score under it; the
-        per-version jit wrapper keeps every version's compiled cache warm."""
+        per-version jit wrapper keeps every version's compiled cache warm.
+
+        ``params`` may be a plain ``lnn_init`` pytree (MLP risk head) or a
+        :class:`~repro.models.hybrid.HybridModel` (GNN embedding -> GBDT):
+        the hybrid's jit covers the fused embedding only, the booster runs
+        on host like the MLP path's sigmoid."""
         version = int(model_version)
+        hybrid = isinstance(params, HybridModel)
         if version not in self._jits:
             cfg = self.cfg
-            self._jits[version] = jax.jit(
-                lambda p, emb, mask, feats: lnn_stage2_online(
-                    p, cfg, emb, mask, feats)
-            )
-        # assign the triple last-to-first so a concurrent flush reading
+            if hybrid:
+                self._jits[version] = jax.jit(
+                    lambda p, emb, mask, feats, st: lnn_stage2_embed(
+                        p, cfg, emb, mask, feats, slot_type=st)
+                )
+            else:
+                self._jits[version] = jax.jit(
+                    lambda p, emb, mask, feats, st: lnn_stage2_online(
+                        p, cfg, emb, mask, feats, slot_type=st)
+                )
+        # assign the tuple last-to-first so a concurrent flush reading
         # (params, version, jit) at entry never pairs new params with an
         # old version stamp
+        self._hybrid = hybrid
         self._stage2 = self._jits[version]
         self.model_version = version
         self.params = params
+
+    def _slot_types(self, entity_t_lists: list) -> np.ndarray:
+        """Per-slot entity-type codes ``[B, k_max]`` (-1 = empty/untagged),
+        aligned with the KV lookup's slot order (pair j -> slot j)."""
+        st = np.full((len(entity_t_lists), self.k_max), -1, np.int32)
+        for i, pairs in enumerate(entity_t_lists):
+            for j, (ent, _t) in enumerate(pairs[: self.k_max]):
+                st[i, j] = type_code_of(ent)
+        return st
 
     def __call__(self, feats: np.ndarray, entity_t_lists: list):
         # capture the active model ONCE per flush: an in-flight micro-batch
         # finishes on the version it started with even if set_model lands
         # mid-flush (async refresh thread / live hot-swap)
-        params, version, stage2 = self.params, self.model_version, self._stage2
+        params, version, stage2, hybrid = (
+            self.params, self.model_version, self._stage2, self._hybrid)
         emb, mask, stale = self.store.lookup_batch_versioned(
             entity_t_lists, self.k_max, expected_model_version=version
         )
         f = np.ascontiguousarray(feats, np.float32)
-        logits = np.asarray(stage2(params, emb, mask, f), np.float64)
+        st = self._slot_types(entity_t_lists) if self._typed else None
+        if hybrid:
+            # one jit dispatch for the fused embedding, booster on host —
+            # numpy trees are element-deterministic, replay parity holds
+            x = np.asarray(stage2(params.lnn_params, emb, mask, f, st),
+                           np.float32)
+            probs = params.gbdt.predict_proba(x).astype(np.float32)
+            return probs, stale.max(axis=1), version
+        logits = np.asarray(stage2(params, emb, mask, f, st), np.float64)
         # host-side f64 sigmoid, NOT jax.nn.sigmoid: XLA CPU's vectorized
         # exp rounds differently per array length (bucket 2 vs 4 diverge by
         # 1 ulp), while numpy ufuncs are element-deterministic for any

@@ -1,0 +1,337 @@
+"""Heterogeneous multi-entity-type coverage: the tag scheme, typed DDS
+towers, untyped bit-parity, the typed Pallas stage-2 path, the KV
+keyspace guard, the hybrid GNN->GBDT head, typed-key WAL/checkpoint
+round-trips, and the BENCH_hetero schema gates.
+
+The load-bearing invariant throughout: ``entity_types=()`` (the default)
+must stay bit-identical to the homogeneous stack — heterogeneity is an
+opt-in extension, never a silent behavior change.
+"""
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import (ENTITY_TYPE_NAMES, LNNConfig, lnn_init,
+                        lnn_stage2_embed, lnn_stage2_online)
+from repro.core.hetero import (MAX_TYPE_CODE, entity_type_of, is_typed,
+                               strip_type, tag_entity, type_code_of,
+                               type_codes_array)
+from repro.core.partition import IncrementalPartitioner
+from repro.data.attacks import ATTACK_NAMES, AttackConfig, generate_attack_stream
+from repro.models.hybrid import (HybridModel, is_hybrid_checkpoint,
+                                 load_hybrid, save_hybrid, train_hybrid)
+from repro.serve.kvstore import KVStore, entity_shard, pack_key
+from repro.service import FraudService, ModelSection, ServiceConfig
+from repro.stream.events import CheckoutEvent
+from tools.check_bench_schema import check_hetero
+
+_TINY = AttackConfig(num_buyers=25, num_merchants=6, num_rings=2,
+                     ring_size=4, ring_pool=2, num_bursts=1, burst_orders=6,
+                     num_bin_runs=1, bin_cards=5, num_snapshots=6)
+
+
+def _typed_cfg(**kw):
+    base = dict(num_gnn_layers=2, hidden_dim=8, mlp_dims=(8,), feat_dim=4,
+                entity_types=ENTITY_TYPE_NAMES)
+    base.update(kw)
+    return LNNConfig(**base)
+
+
+def _service(cfg, params, max_batch=4):
+    sc = ServiceConfig(mode="streaming",
+                       model=ModelSection.from_lnn_config(cfg),
+                       ).replace(engine={"max_batch": max_batch})
+    return FraudService(sc, params).build()
+
+
+# ------------------------------------------------------------- tag scheme
+def test_tag_roundtrip_all_types():
+    for code, name in enumerate(ENTITY_TYPE_NAMES):
+        e = tag_entity(12345, code)
+        assert is_typed(e)
+        assert type_code_of(e) == code
+        assert entity_type_of(e) == name
+        assert strip_type(e) == 12345
+    # distinct types on the same raw id live in disjoint keyspaces
+    tagged = [tag_entity(7, c) for c in range(len(ENTITY_TYPE_NAMES))]
+    assert len(set(tagged)) == len(tagged)
+
+
+def test_untagged_ids_are_detectable():
+    for raw in (0, 1, 7, 2**40 - 1):
+        assert not is_typed(raw)
+        assert type_code_of(raw) == -1
+    codes = type_codes_array(np.asarray([tag_entity(3, 1), 5, tag_entity(0, 3)]))
+    assert codes.tolist() == [1, -1, 3]
+
+
+def test_tag_bounds_rejected():
+    with pytest.raises(ValueError):
+        tag_entity(1, MAX_TYPE_CODE + 1)
+    with pytest.raises(ValueError):
+        tag_entity(-1, 0)
+    with pytest.raises(ValueError):
+        tag_entity(2**40, 0)  # raw id must fit under the type field
+
+
+# ------------------------------------------- KV keyspace guard (satellite)
+def test_pack_key_rejects_untagged_when_heterogeneous():
+    tagged = tag_entity(9, 2)
+    assert pack_key(tagged, 3, require_typed=True) == pack_key(tagged, 3)
+    with pytest.raises(ValueError, match="no type tag"):
+        pack_key(9, 3, require_typed=True)
+    with pytest.raises(ValueError, match="no type tag"):
+        entity_shard(9, 4, require_typed=True)
+
+
+def test_kvstore_require_typed_guards_reads_and_writes():
+    store = KVStore(dim=2, num_shards=2, require_typed=True)
+    ok = tag_entity(4, 0)
+    store.put(pack_key(ok, 1, require_typed=True), np.zeros(2), version=1)
+    with pytest.raises(ValueError, match="no type tag"):
+        store.put(pack_key(4, 1), np.zeros(2), version=1)
+    with pytest.raises(ValueError, match="no type tag"):
+        store.lookup_batch_versioned([[(4, 1)]], k_max=2)
+    # untyped stores keep accepting raw ids — opt-in only
+    KVStore(dim=2).put(pack_key(4, 1), np.zeros(2), version=1)
+
+
+# ------------------------------------------------- untyped bit-parity gate
+def test_untyped_init_is_bit_identical_under_typed_config():
+    """Adding entity_types must not perturb a single shared parameter leaf
+    (typed extras draw from a folded-in key, not the shared split)."""
+    rng = jax.random.PRNGKey(7)
+    p_plain = lnn_init(rng, _typed_cfg(entity_types=()))
+    p_typed = lnn_init(rng, _typed_cfg())
+    assert "typed" in p_typed and "typed" not in p_plain
+    for path, leaf in jax.tree_util.tree_leaves_with_path(p_plain):
+        other = p_typed
+        for k in path:
+            other = other[getattr(k, "key", getattr(k, "idx", None))]
+        assert np.array_equal(np.asarray(leaf), np.asarray(other)), path
+    tw = p_typed["typed"]["tower_w"]
+    assert tw.shape[0] == len(ENTITY_TYPE_NAMES)
+
+
+def test_all_untagged_slots_match_untyped_scores_bitwise():
+    """slot_type all -1 routes every slot around the towers: the typed
+    params must reproduce the untyped forward bit-for-bit."""
+    rng = jax.random.PRNGKey(0)
+    cfg_t, cfg_p = _typed_cfg(), _typed_cfg(entity_types=())
+    p_t, p_p = lnn_init(rng, cfg_t), lnn_init(rng, cfg_p)
+    B, K = 5, 3
+    emb = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (B, K, 8)))
+    mask = np.ones((B, K), np.float32)
+    feats = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (B, 4)))
+    st = np.full((B, K), -1, np.int32)
+    out_t = lnn_stage2_online(p_t, cfg_t, emb, mask, feats, slot_type=st)
+    out_p = lnn_stage2_online(p_p, cfg_p, emb, mask, feats)
+    np.testing.assert_array_equal(np.asarray(out_t), np.asarray(out_p))
+
+
+@pytest.mark.parametrize("gnn", ["gcn", "sage", "gat"])
+def test_typed_pallas_matches_unfused(gnn):
+    rng = jax.random.PRNGKey(3)
+    cfg = _typed_cfg(gnn_type=gnn)
+    cfg_pl = _typed_cfg(gnn_type=gnn, use_pallas=True)
+    params = lnn_init(rng, cfg)
+    B, K = 6, 4
+    emb = np.asarray(jax.random.normal(jax.random.PRNGKey(4), (B, K, 8)),
+                     np.float32)
+    mask = (np.arange(K) < 3).astype(np.float32) * np.ones((B, K), np.float32)
+    feats = np.asarray(jax.random.normal(jax.random.PRNGKey(5), (B, 4)),
+                       np.float32)
+    st = np.asarray(jax.random.randint(jax.random.PRNGKey(6), (B, K), 0, 4),
+                    np.int32)
+    ref = np.asarray(lnn_stage2_online(params, cfg, emb, mask, feats,
+                                       slot_type=st))
+    fused = np.asarray(lnn_stage2_online(params, cfg_pl, emb, mask, feats,
+                                         slot_type=st))
+    np.testing.assert_allclose(fused, ref, atol=2e-6, rtol=2e-6)
+    # towers must actually fire: typed slots change the score
+    ref_plain = np.asarray(lnn_stage2_online(
+        params, cfg, emb, mask, feats,
+        slot_type=np.full((B, K), -1, np.int32)))
+    assert not np.array_equal(ref, ref_plain)
+
+
+# ---------------------------------------------------- typed DDS + workload
+def test_attack_stream_is_fully_typed_and_labeled():
+    events, patterns = generate_attack_stream(_TINY)
+    assert len(events) == len(patterns)
+    assert set(patterns) <= {"legit", *ATTACK_NAMES}
+    for a in ATTACK_NAMES:
+        assert (patterns == a).sum() > 0, f"no {a} orders generated"
+    snaps = [ev.snapshot for ev in events]
+    assert snaps == sorted(snaps)
+    arr = [ev.arrival for ev in events]
+    assert all(b > a for a, b in zip(arr, arr[1:]))
+    for ev, pat in zip(events, patterns):
+        assert len(ev.entities) == 4
+        assert [entity_type_of(e) for e in ev.entities] == list(ENTITY_TYPE_NAMES)
+        assert (ev.label == 1.0) == (pat != "legit")
+
+
+def test_dds_tower_codes_follow_entity_types():
+    from repro.core.dds import IncrementalDDSBuilder
+
+    events, _ = generate_attack_stream(_TINY)
+    b = IncrementalDDSBuilder(feat_dim=events[0].features.shape[0])
+    for ev in events[:40]:
+        b.add_order(ev.entities, ev.snapshot, ev.features, ev.label)
+    g = b.build()
+    tower = g.coo.tower
+    assert tower is not None
+    n_ord = 2 * g.num_orders
+    # order + shadow nodes bypass the towers; entity nodes carry their code
+    assert (tower[:n_ord] == -1).all()
+    ent_codes = tower[n_ord:]
+    assert ((ent_codes >= 0) & (ent_codes < len(ENTITY_TYPE_NAMES))).all()
+    for (ent, _t), nid in g.entity_snap_ids.items():
+        assert tower[nid] == type_code_of(int(ent))
+
+
+def test_type_histogram_reads_community_composition():
+    part = IncrementalPartitioner()
+    ring = [tag_entity(i, 0) for i in range(3)]       # 3 buyers
+    dev, pay = tag_entity(0, 2), tag_entity(0, 3)     # shared device+token
+    for buyer in ring:
+        part.add_order((buyer, dev, pay))
+    hist = part.type_histogram(ring[0])
+    assert hist == {"buyer": 3, "device": 1, "payment": 1}
+    part2 = IncrementalPartitioner()
+    part2.add_order((1, 2, 3))
+    assert part2.type_histogram(1) == {"untyped": 3}
+
+
+# ------------------------------------------------------ hybrid GNN -> GBDT
+def test_hybrid_train_save_load_roundtrip(tmp_path):
+    rng = jax.random.PRNGKey(1)
+    cfg = _typed_cfg()
+    params = lnn_init(rng, cfg)
+    n, dim = 64, cfg.hidden_dim + cfg.feat_dim
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (n, dim)),
+                   np.float32)
+    y = (x[:, 0] > 0).astype(np.float64)
+    hy = train_hybrid(params, cfg, x, y)
+    assert isinstance(hy, HybridModel)
+    ref = hy.gbdt.predict_proba(x.astype(np.float64))
+    path = str(tmp_path / "hybrid.npz")
+    save_hybrid(path, hy)
+    assert is_hybrid_checkpoint(path)
+    back = load_hybrid(path, params, cfg)
+    np.testing.assert_array_equal(
+        back.gbdt.predict_proba(x.astype(np.float64)), ref)
+    for a, b in zip(jax.tree_util.tree_leaves(hy.lnn_params),
+                    jax.tree_util.tree_leaves(back.lnn_params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_plain_checkpoint_is_not_hybrid(tmp_path):
+    from repro.train.checkpoint import save_checkpoint
+
+    params = lnn_init(jax.random.PRNGKey(0), _typed_cfg())
+    path = str(tmp_path / "plain.npz")
+    save_checkpoint(path, params)
+    assert not is_hybrid_checkpoint(path)
+
+
+# ------------------------------------- typed-key WAL/checkpoint round-trip
+def test_typed_wal_checkpoint_restore_bit_identical(tmp_path):
+    """Typed entity ids survive the WAL event codec and checkpointing: a
+    restored service must score probe traffic bit-identically — with the
+    active version being the hybrid registered before the crash."""
+    events, _ = generate_attack_stream(_TINY)
+    cfg = _typed_cfg(feat_dim=events[0].features.shape[0])
+    params = lnn_init(jax.random.PRNGKey(0), cfg)
+    svc = _service(cfg, params)
+    svc.enable_wal(str(tmp_path))
+    half = len(events) // 2
+    svc.replay(events[:half])
+
+    # register + activate a hybrid mid-stream (persisted via save_hybrid)
+    eng = svc.engine
+    done = events[:half]
+    key_lists = [eng.ingester.builder.entity_keys(ev.entities, ev.snapshot)
+                 for ev in done]
+    emb, mask, _ = svc.store.lookup_batch_versioned(
+        key_lists, svc.config.engine.k_max)
+    st = eng.pool.workers[0].scorer._slot_types(key_lists)
+    feats = np.stack([ev.features for ev in done]).astype(np.float32)
+    x = np.asarray(lnn_stage2_embed(params, cfg, emb, mask, feats,
+                                    slot_type=st), np.float32)
+    hy = train_hybrid(params, cfg, x,
+                      np.asarray([ev.label for ev in done]))
+    svc.activate_model(svc.register_model(hy, version=1))
+    svc.checkpoint()
+    svc.replay(events[half:], warmup=False)
+
+    restored = FraudService.restore(str(tmp_path))
+    assert restored.model_version == 1
+    assert isinstance(restored._models[1], HybridModel)
+    probes = [CheckoutEvent(order_id=90_000 + i,
+                            snapshot=_TINY.num_snapshots,
+                            entities=ev.entities, features=ev.features,
+                            label=ev.label,
+                            arrival=events[-1].arrival + 1.0 + i)
+              for i, ev in enumerate(events[-6:])]
+    s1 = svc.replay(probes, warmup=False).scores_by_order()
+    s2 = restored.replay(probes, warmup=False).scores_by_order()
+    assert set(s1) == set(s2) and all(s2[o] == s1[o] for o in s1)
+    svc.close()
+    restored.close()
+
+
+def test_typed_engine_rejects_untagged_mixins():
+    """A heterogeneous service's refresh path must reject an untagged id
+    at the KV boundary instead of silently co-sharding it."""
+    cfg = _typed_cfg(feat_dim=3)
+    svc = _service(cfg, lnn_init(jax.random.PRNGKey(0), cfg))
+    assert svc.store.require_typed
+    with pytest.raises(ValueError, match="no type tag"):
+        svc.store.put(pack_key(5, 0), np.zeros(cfg.hidden_dim), version=0)
+    svc.close()
+
+
+# ----------------------------------------------- BENCH_hetero schema gates
+def _hetero_record() -> dict:
+    budgets = {f"budget_{b}": {a: 0.5 for a in ATTACK_NAMES}
+               for b in ("0.02", "0.05")}
+    return {
+        "n_events": 100,
+        "config": {"num_buyers": 10, "num_merchants": 3, "num_rings": 1,
+                   "num_bursts": 1, "num_bin_runs": 1, "num_snapshots": 4,
+                   "entity_types": list(ENTITY_TYPE_NAMES),
+                   "hidden_dim": 8, "gbdt_trees": 5, "train_frac": 0.6},
+        "attacks": {"ring": 5, "burst": 4, "bin_test": 3, "legit": 88},
+        "test_events": 40, "test_fraud": 6,
+        "recall": {m: json.loads(json.dumps(budgets))
+                   for m in ("mlp_raw", "gbdt_raw", "hybrid")},
+        "auc": {"mlp_raw": 0.7, "gbdt_raw": 0.71, "hybrid": 0.72},
+        "gates": {"hybrid_beats_mlp_on_rings": True,
+                  "typed_replay_parity": True},
+    }
+
+
+def test_hetero_schema_accepts_valid_record():
+    assert check_hetero(_hetero_record()) == []
+
+
+@pytest.mark.parametrize("gate", ["hybrid_beats_mlp_on_rings",
+                                  "typed_replay_parity"])
+def test_hetero_schema_gates_must_be_true(gate):
+    rec = _hetero_record()
+    rec["gates"][gate] = False
+    assert any(gate in e for e in check_hetero(rec))
+
+
+def test_hetero_schema_requires_per_attack_recall():
+    rec = _hetero_record()
+    del rec["recall"]["hybrid"]["budget_0.02"]["ring"]
+    assert any("ring" in e for e in check_hetero(rec))

@@ -25,6 +25,7 @@ DEFAULT_RECORDS = [
     "experiments/BENCH_refresh.json",
     "experiments/BENCH_gateway.json",
     "experiments/BENCH_recovery.json",
+    "experiments/BENCH_hetero.json",
 ]
 
 PCTS = ("p50", "p95", "p99")
@@ -196,6 +197,47 @@ def check_recovery(d: dict) -> list[str]:
     return e
 
 
+def check_hetero(d: dict) -> list[str]:
+    e: list[str] = []
+    _require(e, _num(d.get("n_events")), "n_events: finite number required")
+    cfg = d.get("config") or {}
+    for k in ("num_buyers", "num_merchants", "num_rings", "num_bursts",
+              "num_bin_runs", "num_snapshots", "hidden_dim", "gbdt_trees",
+              "train_frac"):
+        _require(e, _num(cfg.get(k)), f"config.{k}: number")
+    _require(e, isinstance(cfg.get("entity_types"), list) and cfg.get("entity_types"),
+             "config.entity_types: non-empty list")
+    att = d.get("attacks") or {}
+    for k in ("ring", "burst", "bin_test", "legit"):
+        _require(e, _num(att.get(k)), f"attacks.{k}: number")
+    for k in ("test_events", "test_fraud"):
+        _require(e, _num(d.get(k)), f"{k}: number")
+    recall = d.get("recall")
+    _require(e, isinstance(recall, dict) and recall, "recall: non-empty dict")
+    for model, budgets in (recall or {}).items():
+        _require(e, isinstance(budgets, dict) and budgets,
+                 f"recall[{model}]: non-empty dict")
+        for b, per_attack in (budgets or {}).items():
+            # the per-attack recall curve is the whole point of the named
+            # workload — every attack pattern must appear at every budget
+            for k in ("ring", "burst", "bin_test"):
+                _require(e, _num((per_attack or {}).get(k)),
+                         f"recall[{model}][{b}].{k}: number")
+    auc = d.get("auc") or {}
+    for model in ("mlp_raw", "gbdt_raw", "hybrid"):
+        _require(e, _num(auc.get(model)), f"auc.{model}: number")
+    # the hybrid head must exploit the typed linkage the raw-feature MLP
+    # can't see, and typed replay must stay deterministic — gates, not stats
+    gates = d.get("gates") or {}
+    _require(e, gates.get("hybrid_beats_mlp_on_rings") is True,
+             "gates.hybrid_beats_mlp_on_rings: must be True "
+             "(hybrid ring-recall gate)")
+    _require(e, gates.get("typed_replay_parity") is True,
+             "gates.typed_replay_parity: must be True "
+             "(typed replay-parity gate)")
+    return e
+
+
 CHECKERS = {
     "BENCH_streaming.json": check_streaming,
     "BENCH_stage2.json": check_stage2,
@@ -203,6 +245,7 @@ CHECKERS = {
     "BENCH_refresh.json": check_refresh,
     "BENCH_gateway.json": check_gateway,
     "BENCH_recovery.json": check_recovery,
+    "BENCH_hetero.json": check_hetero,
 }
 
 

@@ -1,21 +1,31 @@
 """Docs honesty checker (the CI ``docs`` job).
 
-Two guarantees over README.md + docs/*.md:
+Three guarantees:
 
-1. every intra-repo markdown link ``[text](target)`` resolves to a real
-   file or directory (anchors and external http(s)/mailto links skipped);
+1. every intra-repo markdown link ``[text](target)`` in README.md +
+   docs/*.md resolves to a real file or directory (anchors and external
+   http(s)/mailto links skipped);
 2. every inline code reference to a repo path — ``src/repro/...``,
    ``tests/...``, ``benchmarks/...``, ``examples/...``, ``docs/...``,
    ``tools/...`` — points at an existing file, so renames can't silently
    rot the docs.  ``path::test_name`` pytest selectors are handled (the
-   regex stops at the extension).
+   regex stops at the extension);
+3. every public symbol in the reviewed API surface
+   (``tools/api_surface.json``) carries a real docstring — the snapshot
+   gate already forces surface changes through review, this forces them
+   through *documentation*.  A dataclass's auto-generated
+   ``Name(field: type, ...)`` signature string does not count.
 
-Exit code 1 with a per-file report when anything is broken.
+Exit code 1 with a per-file / per-symbol report when anything is broken.
 
 Run:  python tools/check_docs.py
 """
 from __future__ import annotations
 
+import importlib
+import inspect
+import json
+import os
 import re
 import sys
 from pathlib import Path
@@ -56,6 +66,35 @@ def check_file(md: Path) -> list[str]:
     return sorted(set(errors))
 
 
+def check_docstrings() -> tuple[list[str], int]:
+    """Docstring coverage over the reviewed API surface.
+
+    Returns ``(errors, n_symbols_checked)``.  Non-callable exports (bare
+    constants like ``CHECKPOINT_FORMAT``) are exempt — there is nothing to
+    call, so the module docstring is their documentation.
+    """
+    sys.path.insert(0, os.path.join(str(ROOT), "src"))
+    surface = json.loads((ROOT / "tools" / "api_surface.json").read_text())
+    errors: list[str] = []
+    n = 0
+    for mod_name, names in surface.items():
+        mod = importlib.import_module(mod_name)
+        if not inspect.getdoc(mod):
+            errors.append(f"{mod_name}: module docstring missing")
+        for name in names:
+            obj = getattr(mod, name, None)
+            if not callable(obj):
+                continue
+            n += 1
+            doc = inspect.getdoc(obj)
+            # a dataclass with no explicit docstring inherits its generated
+            # signature string — that documents nothing, flag it
+            if not doc or doc.startswith(f"{name}("):
+                errors.append(f"{mod_name}.{name}: public symbol has no "
+                              "real docstring")
+    return sorted(set(errors)), n
+
+
 def main() -> int:
     n_checked, failed = 0, False
     for md in md_files():
@@ -66,9 +105,14 @@ def main() -> int:
             rel = md.relative_to(ROOT)
             for e in errors:
                 print(f"FAIL {rel}: {e}")
+    doc_errors, n_symbols = check_docstrings()
+    for e in doc_errors:
+        print(f"FAIL docstrings: {e}")
+    failed |= bool(doc_errors)
     if failed:
         return 1
-    print(f"docs check OK ({n_checked} markdown files)")
+    print(f"docs check OK ({n_checked} markdown files, "
+          f"{n_symbols} documented API symbols)")
     return 0
 
 
