@@ -1,0 +1,254 @@
+"""Continuous-learning benchmark — recall recovery on a drifting stream.
+
+The learn plane's reason to exist, measured: a named-attack stream whose
+ring fraud *changes shape mid-stream* (``repro.learn.drift``: new feature
+signature, disjoint entity linkage) is replayed through a streaming
+:class:`~repro.service.FraudService` with the full loop attached —
+WAL tap → rolling-window fine-tunes → shadow-gated promotion.  The bench
+records the **recall-recovery curve** (ring recall@budget per stream
+segment, with the serving model version at each point) and two gates:
+
+* ``finetuned_recovers_recall`` — ring recall over phase-B traffic served
+  by a post-drift fine-tune beats the frozen pre-drift model's phase-B
+  ring recall by ``min_lift`` (the drop-and-recover shape the paper's
+  retrain loop exists for), AND a shadow-gated promotion actually
+  happened after the drift;
+* ``promotion_shadow_gated`` — that promotion carried at least
+  ``min_eval`` labeled shadow samples and beat the incumbent by the
+  configured margin on live traffic, AND an injected post-promotion
+  regression (a perturbed clone hot-swapped in) auto-rolled back to
+  last-good through the shared rollback path.
+
+Writes ``experiments/BENCH_learning.json``
+(``tools/check_bench_schema.py`` enforces the gates).
+
+Run:  PYTHONPATH=src python benchmarks/learning_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+#: review budget for every recall figure in this bench
+BUDGET = 0.15
+
+
+def _ring_recall(rows, budget: float = BUDGET) -> float:
+    """Ring recall@budget over (is_ring, score) rows — the fraction of
+    ring orders surfaced in the top-``budget`` fraction by score."""
+    import numpy as np
+
+    from repro.learn import recall_at_budget
+
+    if not rows:
+        return float("nan")
+    flags = np.asarray([r[0] for r in rows], np.float64)
+    scores = np.asarray([r[1] for r in rows], np.float64)
+    return recall_at_budget(flags, scores, budget)
+
+
+def run_learning_bench(*, num_buyers=100, num_rings=5, ring_size=6,
+                       num_snapshots=12, steps=15, min_window=48,
+                       max_window=256, stride=48, min_eval=32,
+                       promote_margin=0.01, min_lift=0.10,
+                       step_every=16, regression_tail=40,
+                       seed=0) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.core import lnn_init
+    from repro.core.hetero import ENTITY_TYPE_NAMES
+    from repro.data.attacks import AttackConfig
+    from repro.learn import ContinuousLearner, drifting_attack_stream
+    from repro.learn.promote import PromotionController
+    from repro.service import FraudService, ServiceConfig
+
+    acfg = AttackConfig(num_buyers=num_buyers, num_rings=num_rings,
+                        ring_size=ring_size, num_snapshots=num_snapshots,
+                        num_bursts=1, num_bin_runs=1, seed=seed)
+    events, patterns, split = drifting_attack_stream(acfg, rate_per_s=500.0)
+    pattern_of = {ev.order_id: p for ev, p in zip(events, patterns)}
+
+    sc = ServiceConfig.from_dict({
+        "mode": "streaming",
+        "model": {"num_gnn_layers": 2, "hidden_dim": 16,
+                  "feat_dim": int(events[0].features.shape[0]),
+                  "mlp_dims": [16], "entity_types": list(ENTITY_TYPE_NAMES)},
+        "engine": {"num_workers": 1, "max_batch": 8, "k_max": 4},
+        "learn": {"enabled": True, "min_window": min_window,
+                  "max_window": max_window, "stride": stride,
+                  "steps": steps, "lr": 1e-2, "optimizer": "adam",
+                  "head": "hybrid", "gbdt_trees": 20,
+                  "min_eval": min_eval, "min_eval_pos": 3,
+                  "eval_budget": BUDGET, "eval_max": 96,
+                  "promote_margin": promote_margin,
+                  "rollback_margin": 0.10, "watch_min_eval": 48},
+    })
+    params0 = lnn_init(jax.random.PRNGKey(seed), sc.to_lnn_config())
+    scratch = tempfile.mkdtemp(prefix="bench_learning_")
+    svc = FraudService(sc, params=params0).build()
+    svc.enable_wal(os.path.join(scratch, "wal"))
+    svc.enable_auto_checkpoint(every_windows=4, keep_last=3)
+    learner = ContinuousLearner(svc)
+
+    # ---- the live loop: serve + shadow-observe + learn, one pass ----------
+    main_events = events[:-regression_tail]
+    tail_events = events[-regression_tail:]
+    rows: list = []         # (is_ring, label, score, version) per response
+    decisions: list = []    # (event_index, decision dict)
+    for i, ev in enumerate(main_events):
+        out = svc.submit(ev)
+        svc.shadow_observe(out)
+        for r in out:
+            if r.admitted:
+                tag = r.request.tag
+                rows.append((float(pattern_of[tag.order_id] == "ring"),
+                             float(tag.label), float(r.score),
+                             int(r.model_version)))
+            else:
+                rows.append(None)   # hold index alignment for shed rows
+        if (i + 1) % step_every == 0:
+            s = learner.step()
+            if s["decision"]:
+                decisions.append((i, s["decision"]))
+    for r in svc.drain():
+        if r.admitted:
+            tag = r.request.tag
+            rows.append((float(pattern_of[tag.order_id] == "ring"),
+                         float(tag.label), float(r.score),
+                         int(r.model_version)))
+    s = learner.step()
+    if s["decision"]:
+        decisions.append((len(main_events) - 1, s["decision"]))
+    rows = [r for r in rows if r is not None]
+
+    # ---- recall-recovery evidence -----------------------------------------
+    v0 = 0
+    promotions = [(i, d) for i, d in decisions if d.get("action") == "promote"]
+    post_drift = [(i, d) for i, d in promotions if i >= split]
+    # frozen = phase-B responses still scored by the pre-drift incumbent;
+    # recovered = phase-B responses scored by any post-drift promotee
+    pre_drift_versions = {v0} | {
+        d["candidate"] for i, d in promotions if i < split}
+    b_rows = [r for r in rows[split:]]
+    frozen = [(r[0], r[2]) for r in b_rows if r[3] in pre_drift_versions]
+    recovered = [(r[0], r[2]) for r in b_rows if r[3] not in pre_drift_versions]
+    frozen_recall = _ring_recall(frozen)
+    recovered_recall = _ring_recall(recovered)
+
+    # per-segment curve for the JSON record (dashboards, eyeballs)
+    seg = 64
+    curve = []
+    for s0 in range(0, len(rows), seg):
+        chunk = rows[s0:s0 + seg]
+        versions = sorted({r[3] for r in chunk})
+        curve.append({
+            "start": s0, "n": len(chunk),
+            "phase": "A" if s0 + len(chunk) <= split else "B",
+            "model_versions": versions,
+            "ring_recall": _ring_recall([(r[0], r[2]) for r in chunk]),
+            "fraud_recall": _ring_recall([(r[1], r[2]) for r in chunk]),
+        })
+
+    recovers = (not np.isnan(frozen_recall) and not np.isnan(recovered_recall)
+                and recovered_recall >= frozen_recall + min_lift
+                and len(post_drift) > 0)
+
+    # ---- injected post-promotion regression → auto-rollback ---------------
+    promoted_v = svc.model_version
+    bad_v = svc.register_perturbed(promoted_v, scale=3.0, seed=seed)
+    svc.activate_model(bad_v)           # promoted_v becomes last-good
+    svc.enable_shadow(promoted_v, fraction=1.0, threshold=0.25,
+                      collect_eval=96, role="last_good")
+    watcher = PromotionController.attach(svc, watch_min_eval=8,
+                                         rollback_margin=0.10)
+    rollback_decision = None
+    for ev in tail_events:
+        out = svc.submit(ev)
+        svc.shadow_observe(out)
+        d = watcher.step()
+        if d is not None:
+            rollback_decision = d
+            break
+    svc.drain()
+    rolled_back = (svc.stats().rollbacks >= 1
+                   and svc.model_version == promoted_v)
+
+    gated = bool(post_drift) and all(
+        d["n_eval"] >= min_eval
+        and d["candidate_recall"] >= d["incumbent_recall"] + promote_margin
+        for _, d in post_drift[-1:])
+    learn_stats = learner.stats()
+    learner.close()
+    svc.close()
+    shutil.rmtree(scratch)
+
+    return {
+        "n_events": len(events), "split": int(split),
+        "budget": BUDGET, "min_lift": min_lift,
+        "config": {"steps": steps, "min_window": min_window,
+                   "max_window": max_window, "stride": stride,
+                   "head": "hybrid", "min_eval": min_eval,
+                   "promote_margin": promote_margin},
+        "frozen_ring_recall": float(frozen_recall),
+        "recovered_ring_recall": float(recovered_recall),
+        "recall_curve": curve,
+        "promotions": [
+            {"event_index": int(i), **{k: v for k, v in d.items()}}
+            for i, d in promotions],
+        "learn": {"fires": learn_stats["fires"],
+                  "tap": learn_stats["tap"],
+                  "promotion": learn_stats["promotion"]},
+        "regression": {"bad_version": int(bad_v),
+                       "restored_version": int(promoted_v),
+                       "rollback": rollback_decision,
+                       "rolled_back": bool(rolled_back)},
+        "gates": {
+            "finetuned_recovers_recall": bool(recovers),
+            "promotion_shadow_gated": bool(gated and rolled_back),
+        },
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    if smoke:
+        r = run_learning_bench(num_buyers=80, num_rings=4, steps=12,
+                               min_window=48, stride=48)
+    else:
+        r = run_learning_bench(num_buyers=160, num_rings=6, ring_size=8,
+                               num_snapshots=16, steps=25)
+
+    print("\n# Continuous learning (drifting attack stream)")
+    print(f"  events={r['n_events']} drift@{r['split']} "
+          f"budget={r['budget']:.2f}")
+    print(f"  ring recall on phase B: frozen={r['frozen_ring_recall']:.3f} "
+          f"-> recovered={r['recovered_ring_recall']:.3f} "
+          f"(min lift {r['min_lift']:.2f})")
+    for p in r["promotions"]:
+        print(f"  promote@{p['event_index']:>4}: v{p['candidate']} over "
+              f"v{p['incumbent']} "
+              f"({p['candidate_recall']:.3f} vs {p['incumbent_recall']:.3f}, "
+              f"n={p['n_eval']})")
+    reg = r["regression"]
+    print(f"  regression: v{reg['bad_version']} injected -> rolled_back="
+          f"{reg['rolled_back']} (restored v{reg['restored_version']})")
+    print(f"  gates: {r['gates']}")
+
+    outdir = os.path.join("experiments", "smoke") if smoke else "experiments"
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, "BENCH_learning.json"), "w") as f:
+        json.dump(r, f, indent=1)
+    return r
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI smoke (seconds, not minutes)")
+    main(smoke=ap.parse_args().smoke)

@@ -11,9 +11,11 @@
   gateway   HTTP gateway under open-loop Poisson load (429/503/canary gates)
   recovery  crash recovery (checkpoint write/restore latency, replay-suffix
             cost vs log length, bit-identical recovery gate)
+  learning  continuous-learning loop on a drifting attack stream (recall
+            recovery + shadow-gated promotion + auto-rollback gates)
 
 ``--smoke`` runs only the serving benches (streaming + multiworker + stage2
-+ gateway + recovery) at tiny sizes — seconds, not minutes — then validates the emitted
++ gateway + recovery + learning) at tiny sizes — seconds, not minutes — then validates the emitted
 ``BENCH_*.json`` records against their schemas (``tools/check_bench_schema``).
 That is the CI ``bench-smoke`` gate: it fails on crash or schema drift.
 
@@ -90,6 +92,18 @@ def _recovery_rows(csv_rows, rec) -> None:
     ))
 
 
+def _learning_rows(csv_rows, lrn) -> None:
+    csv_rows.append((
+        "learning/recall_recovery", "",
+        f"frozen={lrn['frozen_ring_recall']:.3f},"
+        f"recovered={lrn['recovered_ring_recall']:.3f},"
+        f"promotions={len(lrn['promotions'])},"
+        f"rolled_back={lrn['regression']['rolled_back']}",
+    ))
+    csv_rows.append(("learning/gates", "",
+                     ",".join(f"{k}={v}" for k, v in lrn["gates"].items())))
+
+
 def _gateway_rows(csv_rows, gwr) -> None:
     for name, s in gwr["scenarios"].items():
         pct = s["latency_ms"]
@@ -126,12 +140,16 @@ def run_smoke() -> None:
     rec = recovery_main(smoke=True)       # writes BENCH_recovery.json
     _recovery_rows(csv_rows, rec)
 
+    from benchmarks.learning_bench import main as learning_main
+    lrn = learning_main(smoke=True)       # writes BENCH_learning.json
+    _learning_rows(csv_rows, lrn)
+
     from tools.check_bench_schema import main as schema_main
     rc = schema_main([os.path.join("experiments", "smoke", name) for name in
                       ("BENCH_streaming.json", "BENCH_stage2.json",
                        "BENCH_multiworker.json", "BENCH_refresh.json",
                        "BENCH_gateway.json", "BENCH_recovery.json",
-                       "BENCH_hetero.json")])
+                       "BENCH_hetero.json", "BENCH_learning.json")])
     if rc != 0:
         raise SystemExit(rc)
 
@@ -179,6 +197,10 @@ def run_full() -> None:
     from benchmarks.recovery_bench import main as recovery_main
     rec = recovery_main()   # writes experiments/BENCH_recovery.json
     _recovery_rows(csv_rows, rec)
+
+    from benchmarks.learning_bench import main as learning_main
+    lrn = learning_main()   # writes experiments/BENCH_learning.json
+    _learning_rows(csv_rows, lrn)
 
     from benchmarks.kernels_bench import main as kernels_main
     ker = kernels_main()

@@ -21,6 +21,11 @@ The wire protocol the serving facade was missing: a dependency-free
 ``POST /admin/checkpoint``   write a durable checkpoint of the full streaming
                              state (requires ``gateway.checkpoint_dir``);
                              ``{"compact": true}`` also truncates the WAL
+``POST /admin/train``        tick the continuous-learning loop (tap → rolling
+                             fine-tune → shadow-gated promotion); requires an
+                             attached :class:`~repro.learn.ContinuousLearner`
+``GET  /v1/learn/stats``     the learn-plane snapshot: tap cursor/pending,
+                             trainer window state, promotion state machine
 ===========================  ====================================================
 
 **Backpressure at the socket.**  Admission control stops being an
@@ -36,6 +41,16 @@ traffic is re-scored under the canary version *after* the HTTP response
 bytes are flushed to the socket (off the response path), and the
 |primary − shadow| divergence counters/alert surface in ``/metrics`` and
 ``/v1/stats``.
+
+**Canary auto-rollback.**  With ``gateway.auto_rollback`` enabled, a
+sticky shadow-divergence alert observed after shadow scoring triggers
+:meth:`FraudService.rollback_model` — automatic ``activate_model`` back
+to the last-good version (``repro_service_rollbacks_total`` counts it) —
+instead of page-only alerting.  Only ``canary``-role shadows arm the
+trigger; the learn plane's ``candidate``/``last_good`` shadows belong to
+the promotion controller.  The controller's rollback path
+(``repro.learn.promote``) goes through the same service method, so the
+counter and ``last_rollback`` record are shared.
 
 Every touch of the wrapped ``FraudService`` happens under one gateway
 RLock — the facade itself is single-threaded by design, the gateway is the
@@ -126,6 +141,8 @@ _SERVICE_SCALARS = [
     ("entities_written", "repro_service_entities_written_total", "counter"),
     ("model_stale_reads", "repro_service_model_stale_reads_total", "counter"),
     ("store_size", "repro_service_store_size", "gauge"),
+    ("rollbacks", "repro_service_rollbacks_total", "counter"),
+    ("last_good_version", "repro_service_last_good_version", "gauge"),
 ]
 
 _SHADOW_SCALARS = [
@@ -158,7 +175,7 @@ def service_metric_lines(snap: dict) -> list[str]:
         lines.append(f"{name}{labels} {int(v) if v.is_integer() else repr(v)}")
 
     for key, name, kind in _SERVICE_SCALARS:
-        if key in snap:
+        if snap.get(key) is not None:   # last_good_version is None-able
             emit(name, kind, snap[key])
     by_version = snap.get("scores_by_version") or {}
     if by_version:
@@ -175,6 +192,43 @@ def service_metric_lines(snap: dict) -> list[str]:
     for key, value in sorted((snap.get("store_stats") or {}).items()):
         if isinstance(value, (int, float)) and not isinstance(value, bool):
             emit(f"repro_store_{key}_total", "counter", value)
+    return lines
+
+
+#: learn-plane snapshot key paths -> metric name/TYPE (see learn_metric_lines)
+_LEARN_SCALARS = [
+    (("fires",), "repro_learn_fires_total", "counter"),
+    (("tap", "examples"), "repro_learn_examples_total", "counter"),
+    (("tap", "pending"), "repro_learn_label_pending", "gauge"),
+    (("tap", "label_joins"), "repro_learn_label_joins_total", "counter"),
+    (("tap", "cursor"), "repro_learn_tap_cursor", "gauge"),
+    (("promotion", "submitted"), "repro_learn_candidates_total", "counter"),
+    (("promotion", "promoted"), "repro_learn_promotions_total", "counter"),
+    (("promotion", "rejected"), "repro_learn_rejections_total", "counter"),
+    (("promotion", "rollbacks"), "repro_learn_rollbacks_total", "counter"),
+]
+
+
+def learn_metric_lines(stats: dict) -> list[str]:
+    """Render the learn-plane half of ``GET /metrics`` from a
+    :meth:`~repro.learn.ContinuousLearner.stats` snapshot — the same
+    object ``GET /v1/learn/stats`` returns."""
+    lines = [
+        "# HELP repro_learn_info promotion state machine phase",
+        "# TYPE repro_learn_info gauge",
+        f'repro_learn_info{{state="{stats.get("state", "")}"}} 1',
+    ]
+    for path, name, kind in _LEARN_SCALARS:
+        node = stats
+        for k in path:
+            node = node.get(k) if isinstance(node, dict) else None
+            if node is None:
+                break
+        if node is None:
+            continue
+        v = float(node)
+        lines.append(f"# TYPE {name} {kind}")
+        lines.append(f"{name} {int(v) if v.is_integer() else repr(v)}")
     return lines
 
 
@@ -196,10 +250,17 @@ class FraudGateway:
 
     The service must already be ``build()``-ed; ``warmup()`` beforehand
     keeps jit compiles off the first request's latency.
+
+    ``learner``: an optional :class:`~repro.learn.ContinuousLearner`
+    bound to the same service — enables ``POST /admin/train`` and
+    ``GET /v1/learn/stats`` (``serve_gateway`` attaches one when
+    ``config.learn.enabled``).
     """
 
-    def __init__(self, service: FraudService, config: GatewaySection | None = None):
+    def __init__(self, service: FraudService, config: GatewaySection | None = None,
+                 learner=None):
         self.service = service
+        self.learner = learner
         self.config = config or service.config.gateway
         self.lock = threading.RLock()
         self.draining = False
@@ -346,8 +407,37 @@ class FraudGateway:
     def handle_metrics(self):
         with self.lock:
             snap = self.service.stats().to_dict()
-        text = "\n".join(service_metric_lines(snap)) + "\n" + self.metrics.render()
+            learn = self.learner.stats() if self.learner is not None else None
+        lines = service_metric_lines(snap)
+        if learn is not None:
+            lines += learn_metric_lines(learn)
+        text = "\n".join(lines) + "\n" + self.metrics.render()
         return 200, text, {"Content-Type": "text/plain; version=0.0.4"}, None
+
+    def handle_learn_stats(self):
+        if self.learner is None:
+            raise GatewayError(409, "no continuous learner attached — boot "
+                                    "with config.learn.enabled=true")
+        with self.lock:
+            return 200, self.learner.stats(), {}, None
+
+    def handle_admin_train(self, body: dict):
+        """One learn tick on demand: poll the WAL tap, fine-tune if the
+        rolling window advanced (``{"force": true}`` fires regardless),
+        and step the promotion state machine."""
+        if self.learner is None:
+            raise GatewayError(409, "no continuous learner attached — boot "
+                                    "with config.learn.enabled=true")
+        if not isinstance(body, dict):
+            raise GatewayError(400, "body must be a JSON object")
+        force = bool(body.get("force", False))
+        now = body.get("now")
+        with self.lock:
+            out = self.learner.step(
+                now=None if now is None else float(now), force=force)
+            out["state"] = self.learner.controller.state
+            out["model_version"] = self.service.model_version
+        return 200, out, {}, None
 
     def handle_admin_model(self, body: dict):
         svc, role = self.service, body.get("role", "primary")
@@ -414,11 +504,27 @@ class FraudGateway:
 
     def shadow_after(self, responses: list) -> None:
         """Feed delivered responses to the canary — called by the HTTP
-        layer strictly after the response bytes hit the socket."""
+        layer strictly after the response bytes hit the socket.
+
+        With ``gateway.auto_rollback`` enabled, a sticky divergence alert
+        raised by this batch triggers the shared rollback path
+        (:meth:`FraudService.rollback_model`) when a last-good version
+        exists — the swap is immediate, not page-and-wait.  Only
+        ``canary``-role shadows arm this: a ``candidate`` shadow is a
+        fine-tune that is *expected* to diverge (that's the promotion
+        signal), and ``last_good`` watches belong to the
+        :class:`~repro.learn.PromotionController`'s own rollback logic."""
         if not responses:
             return
         with self.lock:
             self.service.shadow_observe(responses)
+            sh = self.service.shadow_stats()
+            if (self.config.auto_rollback
+                    and sh.get("role") == "canary"
+                    and sh.get("alert_active")
+                    and self.service.last_good_version is not None):
+                self.service.rollback_model(
+                    "gateway auto-rollback: shadow divergence alert")
 
     @staticmethod
     def _body_items(body: dict, one: str, many: str):
@@ -441,11 +547,13 @@ class _Handler(BaseHTTPRequestHandler):
 
     protocol_version = "HTTP/1.1"   # keep-alive: bench clients reuse sockets
     _GET = {"/healthz": "handle_health", "/v1/stats": "handle_stats",
+            "/v1/learn/stats": "handle_learn_stats",
             "/metrics": "handle_metrics"}
     _POST = {"/v1/score": "handle_score", "/v1/ingest": "handle_ingest",
              "/admin/model": "handle_admin_model",
              "/admin/drain": "handle_admin_drain",
-             "/admin/checkpoint": "handle_admin_checkpoint"}
+             "/admin/checkpoint": "handle_admin_checkpoint",
+             "/admin/train": "handle_admin_train"}
 
     @property
     def gateway(self) -> FraudGateway:
@@ -560,9 +668,27 @@ def serve_gateway(config, params, *, warmup: bool = True) -> FraudGateway:
         svc = build_service(config, params, warmup=warmup)
         if root:
             svc.enable_wal(root)
-    return FraudGateway(svc).start()
+    gw = config.gateway
+    if svc.wal is not None and (gw.checkpoint_every_s is not None
+                                or gw.checkpoint_every_windows is not None):
+        # scheduled checkpointing is process-local cadence state — re-armed
+        # on every boot, including restores
+        svc.enable_auto_checkpoint(
+            every_s=gw.checkpoint_every_s,
+            every_windows=gw.checkpoint_every_windows,
+            keep_last=gw.checkpoint_keep_last)
+    learner = None
+    if config.learn.enabled:
+        if svc.wal is None:
+            raise ValueError(
+                "learn.enabled=true requires gateway.checkpoint_dir — the "
+                "continuous learner taps the write-ahead log")
+        from repro.learn import ContinuousLearner
+
+        learner = ContinuousLearner(svc)
+    return FraudGateway(svc, learner=learner).start()
 
 
-__all__ = ["FraudGateway", "GatewayError", "serve_gateway",
-           "event_from_json", "request_from_json", "response_to_json",
-           "service_metric_lines"]
+__all__ = ["FraudGateway", "GatewayError", "learn_metric_lines",
+           "serve_gateway", "event_from_json", "request_from_json",
+           "response_to_json", "service_metric_lines"]

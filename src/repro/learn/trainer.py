@@ -1,0 +1,263 @@
+"""Rolling-window fine-tunes over tap examples (Morpheus-DFP-style).
+
+The trainer holds a bounded buffer of :class:`~repro.learn.tap.TrainingExample`
+rows and advances a **rolling window**: once at least ``min_window``
+examples are buffered (and ``stride`` new ones since the last fire), it
+trains on the newest ``max_window`` examples — deduplicated by order id,
+keep-latest, so re-scored orders and label-log corrections supersede
+their earlier copies — and records the fire so the next one waits for
+another stride of fresh data.
+
+A fine-tune warm-starts from the incumbent's parameters and runs a few
+steps of locally-implemented SGD/Adam (no optax) on
+:func:`~repro.core.lnn.lnn_loss` over the *window-local* DDS graph: the
+window's examples are replayed through a fresh
+:class:`~repro.core.dds.IncrementalDDSBuilder`, materialized, and padded
+to a power-of-two node budget (bounded jit recompiles, same trick as the
+batch-layer refresher).  With ``head="hybrid"`` the tuned stage-1/2
+parameters are then frozen and the PR-8 GBDT head is refit on the
+window's pre-MLP embeddings (:func:`~repro.models.hybrid.train_hybrid`),
+yielding a :class:`~repro.models.hybrid.HybridModel` candidate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dds import IncrementalDDSBuilder
+from repro.core.graph import pad_graph
+from repro.core.hetero import type_code_of
+from repro.core.lnn import LNNConfig, lnn_loss, lnn_stage1, lnn_stage2_embed
+
+__all__ = ["FineTuneResult", "RollingWindowTrainer", "WindowPolicy",
+           "adam", "sgd"]
+
+
+# ---------------------------------------------------------------- optimizers
+def sgd(lr: float = 1e-2, momentum: float = 0.0):
+    """Plain (heavy-ball) SGD as an ``(init_fn, update_fn)`` pair —
+    ``update_fn(grads, state, params) -> (new_params, new_state)``.
+    Local implementation, no optax (mirrors ``repro.train.optim``)."""
+
+    def init_fn(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update_fn(grads, state, params):
+        vel = jax.tree_util.tree_map(
+            lambda v, g: momentum * v + g, state, grads)
+        new = jax.tree_util.tree_map(lambda p, v: p - lr * v, params, vel)
+        return new, vel
+
+    return init_fn, update_fn
+
+
+def adam(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8):
+    """Adam as an ``(init_fn, update_fn)`` pair (bias-corrected moments;
+    local implementation, no optax)."""
+
+    def init_fn(params):
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return {"step": jnp.zeros((), jnp.int32), "mu": z, "nu": z}
+
+    def update_fn(grads, state, params):
+        step = state["step"] + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda n, g: b2 * n + (1 - b2) * g * g, state["nu"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+        new = jax.tree_util.tree_map(
+            lambda p, m, n: p - lr * (m / c1) / (jnp.sqrt(n / c2) + eps),
+            params, mu, nu)
+        return new, {"step": step, "mu": mu, "nu": nu}
+
+    return init_fn, update_fn
+
+
+_OPTIMIZERS = {"sgd": sgd, "adam": adam}
+
+
+# -------------------------------------------------------------------- policy
+@dataclass(frozen=True)
+class WindowPolicy:
+    """Rolling-window advance policy: fire on ``min_window`` buffered +
+    ``stride`` fresh, train on the newest ``max_window`` (``dedup`` =
+    keep-latest per order id)."""
+
+    min_window: int = 32
+    max_window: int = 256
+    stride: int = 32
+    dedup: bool = True
+
+    def __post_init__(self):
+        if self.min_window < 1:
+            raise ValueError("min_window must be >= 1")
+        if self.max_window < self.min_window:
+            raise ValueError("max_window must be >= min_window")
+        if not (1 <= self.stride <= self.max_window):
+            raise ValueError("stride must be in [1, max_window]")
+
+
+@dataclass
+class FineTuneResult:
+    """One fine-tune outcome: the candidate model plus its training trace."""
+
+    params: dict                 # tuned LNN pytree
+    model: object                # what to register: params, or a HybridModel
+    head: str                    # 'mlp' | 'hybrid'
+    window: int                  # examples actually trained on (post-dedup)
+    steps: int
+    losses: list                 # per-step lnn_loss values (python floats)
+
+
+def _pow2_at_least(n: int, floor: int = 64) -> int:
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+# ------------------------------------------------------------------- trainer
+class RollingWindowTrainer:
+    """Accumulate tap examples; fine-tune on rolling windows.
+
+    ``k_max``/``max_deg`` come from the serving engine so the window graph
+    is padded the same way the batch layer pads — the candidate sees
+    exactly the serving geometry.
+    """
+
+    def __init__(self, cfg: LNNConfig, policy: WindowPolicy | None = None, *,
+                 optimizer: str = "adam", lr: float = 5e-3, steps: int = 40,
+                 head: str = "mlp", gbdt_trees: int = 25, k_max: int = 8,
+                 max_deg: int = 32, entity_history: str = "all",
+                 max_history: int | None = None):
+        if optimizer not in _OPTIMIZERS:
+            raise ValueError(f"optimizer must be one of {sorted(_OPTIMIZERS)}")
+        if head not in ("mlp", "hybrid"):
+            raise ValueError("head must be 'mlp' or 'hybrid'")
+        if steps < 1:
+            raise ValueError("steps must be >= 1")
+        self.cfg = cfg
+        self.policy = policy if policy is not None else WindowPolicy()
+        self.optimizer, self.lr, self.steps = optimizer, float(lr), int(steps)
+        self.head, self.gbdt_trees = head, int(gbdt_trees)
+        self.k_max, self.max_deg = int(k_max), int(max_deg)
+        self.entity_history, self.max_history = entity_history, max_history
+        self._buffer: list = []
+        self._since_fire: int | None = None   # None = never fired
+        self.stats = {"examples": 0, "fires": 0, "last_window": 0,
+                      "last_loss": None}
+
+    # -------------------------------------------------------------- buffering
+    def add(self, example) -> None:
+        """Buffer one tap example (arrival order)."""
+        self._buffer.append(example)
+        if self._since_fire is not None:
+            self._since_fire += 1
+        self.stats["examples"] += 1
+        # bound memory: the policy can never look past max_window examples,
+        # except that dedup needs slack for superseded duplicates
+        cap = 4 * self.policy.max_window
+        if len(self._buffer) > cap:
+            del self._buffer[: len(self._buffer) - cap]
+
+    def extend(self, examples) -> None:
+        """Buffer many tap examples."""
+        for ex in examples:
+            self.add(ex)
+
+    def ready(self) -> bool:
+        """True when the rolling window should advance: enough buffered,
+        and a full stride of fresh examples since the last fire."""
+        if len(self._buffer) < self.policy.min_window:
+            return False
+        return self._since_fire is None \
+            or self._since_fire >= self.policy.stride
+
+    def _window(self) -> list:
+        """The newest ``max_window`` examples, deduped keep-latest."""
+        ex = self._buffer
+        if self.policy.dedup:
+            latest: dict[tuple, object] = {}
+            for e in ex:     # later entries overwrite earlier (keep-latest)
+                latest[(e.order_id, e.seq if e.order_id < 0 else -1)] = e
+            ex = list(latest.values())
+        return ex[-self.policy.max_window:]
+
+    # ----------------------------------------------------------------- train
+    def train(self, params) -> FineTuneResult:
+        """Fine-tune ``params`` on the current window; marks the fire."""
+        window = self._window()
+        if not window:
+            raise ValueError("train() with an empty window")
+        self._since_fire = 0
+        self.stats["fires"] += 1
+        self.stats["last_window"] = len(window)
+
+        dds, pg = self._materialize(window)
+        init_fn, update_fn = _OPTIMIZERS[self.optimizer](self.lr)
+        loss_grad = jax.jit(jax.value_and_grad(
+            lambda p, g: lnn_loss(p, self.cfg, g)))
+        opt = init_fn(params)
+        losses = []
+        for _ in range(self.steps):
+            loss, grads = loss_grad(params, pg)
+            params, opt = update_fn(grads, opt, params)
+            losses.append(float(loss))
+        self.stats["last_loss"] = losses[-1]
+
+        model = params
+        if self.head == "hybrid":
+            model = self._fit_hybrid(params, window, dds, pg)
+        return FineTuneResult(params=params, model=model, head=self.head,
+                              window=len(window), steps=self.steps,
+                              losses=losses)
+
+    def _materialize(self, window):
+        """Window examples → window-local DDS graph, padded to pow2 nodes
+        (receptive cones are window-local by design: the rolling window IS
+        the context the fine-tune sees, matching its serving horizon)."""
+        b = IncrementalDDSBuilder(
+            feat_dim=self.cfg.feat_dim, entity_history=self.entity_history,
+            max_history=self.max_history)
+        for e in sorted(window, key=lambda e: (e.snapshot, e.arrival)):
+            b.add_order(e.entities, e.snapshot, e.features, e.label)
+        dds = b.build()
+        pg = pad_graph(dds.coo,
+                       num_nodes=_pow2_at_least(dds.coo.num_nodes),
+                       max_deg=self.max_deg)
+        return dds, pg
+
+    def _fit_hybrid(self, params, window, dds, pg):
+        """Refit the GBDT head on the tuned-then-frozen embedding: stage-1
+        over the window graph, each order's final-hop cone gathered into
+        the online [B, K, H] layout, then ``train_hybrid`` on the pre-MLP
+        stage-2 embeddings."""
+        from repro.baselines.gbdt import GBDTConfig
+        from repro.models.hybrid import train_hybrid
+
+        h = np.asarray(lnn_stage1(params, self.cfg, pg), np.float32)
+        n_ord = dds.num_orders
+        hid = h.shape[-1]
+        ent = np.zeros((n_ord, self.k_max, hid), np.float32)
+        mask = np.zeros((n_ord, self.k_max), np.float32)
+        slot = np.full((n_ord, self.k_max), -1, np.int32)
+        typed = bool(self.cfg.entity_types)
+        for o in range(n_ord):
+            for k, (e, _t, nid) in enumerate(dds.last_hop.get(o, [])[: self.k_max]):
+                ent[o, k] = h[nid]
+                mask[o, k] = 1.0
+                if typed:
+                    slot[o, k] = type_code_of(e)
+        feats = np.asarray(pg.features[:n_ord], np.float32)
+        emb = np.asarray(lnn_stage2_embed(
+            params, self.cfg, ent, mask, feats,
+            slot_type=slot if typed else None), np.float32)
+        labels = np.asarray(pg.label[:n_ord], np.float32)
+        return train_hybrid(params, self.cfg, emb, labels,
+                            gbdt_cfg=GBDTConfig(num_trees=self.gbdt_trees))

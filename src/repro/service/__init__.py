@@ -22,6 +22,7 @@ __all__ = [
     "AdmissionSection",
     "EngineSection",
     "FraudService",
+    "LearnSection",
     "ModelSection",
     "RefreshSection",
     "ScoreRequest",
@@ -36,6 +37,7 @@ __all__ = [
 _HOMES = {
     "AdmissionSection": "repro.service.config",
     "EngineSection": "repro.service.config",
+    "LearnSection": "repro.service.config",
     "ModelSection": "repro.service.config",
     "RefreshSection": "repro.service.config",
     "ServiceConfig": "repro.service.config",

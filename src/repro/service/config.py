@@ -4,7 +4,7 @@ Before ``repro.service`` existed, each entry point re-assembled
 ``params + LNNConfig + EngineConfig + KVStore kwargs`` by hand: the batch
 pipeline took (cfg, k_max, store), the streaming engine took (cfg,
 EngineConfig, store), and every benchmark wired its own variant.
-``ServiceConfig`` subsumes all of them in six sections:
+``ServiceConfig`` subsumes all of them in seven sections:
 
 * :class:`ModelSection`     — the LNN itself (mirrors ``LNNConfig``);
 * :class:`EngineSection`    — speed-layer scheduling: micro-batch triggers,
@@ -14,7 +14,11 @@ EngineConfig, store), and every benchmark wired its own variant.
 * :class:`AdmissionSection` — overload policy: queue-depth / in-flight caps
   with shed-vs-block and a bounded block wait;
 * :class:`GatewaySection`   — the HTTP front-end (``repro.gateway``): bind
-  address, body limits, 429 Retry-After hint, canary/shadow defaults.
+  address, body limits, 429 Retry-After hint, canary/shadow defaults,
+  scheduled-checkpoint cadence, canary auto-rollback;
+* :class:`LearnSection`     — the continuous-learning plane
+  (``repro.learn``): WAL-tap label join, rolling-window trainer, and
+  shadow-gated promotion knobs.
 
 The tree round-trips through ``to_dict``/``from_dict`` and JSON
 (``to_json``/``from_json``, ``save``/``load``), with **unknown-key
@@ -194,6 +198,16 @@ class GatewaySection:
       builds fresh and enables the write-ahead log under it
       (``enable_wal``).  ``POST /admin/checkpoint`` writes checkpoints
       into the same directory.
+    * ``checkpoint_every_s`` / ``checkpoint_every_windows`` /
+      ``checkpoint_keep_last`` — scheduled-checkpoint cadence wired into
+      ``FraudService.enable_auto_checkpoint`` at boot (requires
+      ``checkpoint_dir``): write a compacting checkpoint after this many
+      wall seconds and/or closed snapshot windows, retaining only the
+      newest ``checkpoint_keep_last`` ``ckpt-*`` directories.
+    * ``auto_rollback`` — when True, a sticky shadow-divergence alert
+      observed after canary scoring triggers an automatic
+      ``FraudService.rollback_model`` to the last-good version (counted
+      in ``rollbacks_total``) instead of page-only alerting.
     """
 
     host: str = "127.0.0.1"
@@ -205,6 +219,10 @@ class GatewaySection:
     latency_buckets: tuple = (0.001, 0.0025, 0.005, 0.01, 0.025,
                               0.05, 0.1, 0.25, 1.0)
     checkpoint_dir: str | None = None   # durable WAL + checkpoint root
+    checkpoint_every_s: float | None = None      # scheduled-ckpt wall cadence
+    checkpoint_every_windows: int | None = None  # ...and/or closed-window cadence
+    checkpoint_keep_last: int | None = None      # retention: keep newest N
+    auto_rollback: bool = False     # sticky shadow alert -> rollback_model()
 
     def __post_init__(self):
         object.__setattr__(self, "latency_buckets",
@@ -221,6 +239,94 @@ class GatewaySection:
             raise ValueError("gateway.retry_after_s must be >= 0")
         if list(self.latency_buckets) != sorted(set(self.latency_buckets)):
             raise ValueError("gateway.latency_buckets must be strictly increasing")
+        if self.checkpoint_every_s is not None and self.checkpoint_every_s <= 0:
+            raise ValueError("gateway.checkpoint_every_s must be > 0 or None")
+        if self.checkpoint_every_windows is not None \
+                and self.checkpoint_every_windows < 1:
+            raise ValueError(
+                "gateway.checkpoint_every_windows must be >= 1 or None")
+        if self.checkpoint_keep_last is not None and self.checkpoint_keep_last < 1:
+            raise ValueError("gateway.checkpoint_keep_last must be >= 1 or None")
+
+
+@dataclass(frozen=True)
+class LearnSection:
+    """Continuous-learning plane (``repro.learn``) knobs.
+
+    The WAL training tap, rolling-window trainer, and shadow-gated
+    promotion controller are configured here; ``enabled=True`` makes
+    ``serve_gateway`` attach a :class:`~repro.learn.ContinuousLearner`
+    (which needs ``gateway.checkpoint_dir`` for the WAL tap) and exposes
+    ``POST /admin/train`` + ``GET /v1/learn/stats``.
+
+    Window policy (Morpheus-DFP-style rolling window): a fine-tune fires
+    once ``min_window`` new labeled examples accumulated; it trains on the
+    newest ``max_window`` examples (per-window dedup by order id when
+    ``dedup``), then the window advances by ``stride`` examples.
+
+    Promotion: each candidate registers as a canary
+    (``FraudService.enable_shadow``) sampled at ``shadow_fraction``; after
+    ``min_eval`` labeled shadow samples (with at least ``min_eval_pos``
+    positives), the candidate promotes only when its recall@``eval_budget``
+    beats the incumbent's by ``promote_margin``.  Post-promotion, the
+    displaced incumbent keeps shadow-scoring as the watch reference:
+    divergence alerts or a recall drop of ``rollback_margin`` (after
+    ``watch_min_eval`` labeled samples) auto-roll back to last-good.
+    """
+
+    enabled: bool = False
+    # WAL tap / delayed-label join
+    label_latency_s: float = 0.0    # 0 = event labels are final at ingest
+    include_ingest: bool = True     # backfill events become examples too
+    # rolling-window trainer
+    min_window: int = 32            # new examples that arm a fine-tune
+    max_window: int = 256           # newest examples per training window
+    stride: int = 32                # examples consumed per window advance
+    dedup: bool = True              # per-window dedup by order id
+    optimizer: str = "adam"         # 'sgd' | 'adam' (repro.learn.trainer)
+    lr: float = 5e-3
+    steps: int = 40                 # optimizer steps per fine-tune
+    head: str = "mlp"               # 'mlp' | 'hybrid' (GBDT head retrain)
+    gbdt_trees: int = 25            # booster size for head='hybrid'
+    # promotion controller
+    shadow_fraction: float = 1.0    # canary sampling during candidate eval
+    promote_margin: float = 0.02    # candidate recall must beat incumbent by
+    min_eval: int = 32              # labeled shadow samples before a verdict
+    min_eval_pos: int = 3           # ...of which positives
+    eval_budget: float = 0.15       # review-budget fraction for recall@budget
+    eval_max: int = 4096            # eval-buffer cap (bounded memory)
+    rollback_margin: float = 0.05   # post-promotion recall drop that rolls back
+    watch_min_eval: int = 32        # labeled watch samples before rollback check
+    watch_divergence_threshold: float = 5.0   # watch-phase alert threshold
+
+    def __post_init__(self):
+        if self.optimizer not in ("sgd", "adam"):
+            raise ValueError(
+                f"learn.optimizer must be 'sgd' or 'adam', got {self.optimizer!r}")
+        if self.head not in ("mlp", "hybrid"):
+            raise ValueError(
+                f"learn.head must be 'mlp' or 'hybrid', got {self.head!r}")
+        for name in ("min_window", "max_window", "stride", "steps",
+                     "gbdt_trees", "min_eval", "min_eval_pos", "eval_max",
+                     "watch_min_eval"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"learn.{name} must be >= 1")
+        if self.max_window < self.min_window:
+            raise ValueError("learn.max_window must be >= learn.min_window")
+        if self.stride > self.max_window:
+            raise ValueError("learn.stride must be <= learn.max_window")
+        if self.label_latency_s < 0:
+            raise ValueError("learn.label_latency_s must be >= 0")
+        if not 0.0 < self.shadow_fraction <= 1.0:
+            raise ValueError("learn.shadow_fraction must be in (0, 1]")
+        if not 0.0 < self.eval_budget <= 1.0:
+            raise ValueError("learn.eval_budget must be in (0, 1]")
+        if self.lr <= 0:
+            raise ValueError("learn.lr must be > 0")
+        for name in ("promote_margin", "rollback_margin",
+                     "watch_divergence_threshold"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"learn.{name} must be >= 0")
 
 
 _SECTIONS = {
@@ -230,6 +336,7 @@ _SECTIONS = {
     "refresh": RefreshSection,
     "admission": AdmissionSection,
     "gateway": GatewaySection,
+    "learn": LearnSection,
 }
 
 
@@ -244,6 +351,7 @@ class ServiceConfig:
     refresh: RefreshSection = field(default_factory=RefreshSection)
     admission: AdmissionSection = field(default_factory=AdmissionSection)
     gateway: GatewaySection = field(default_factory=GatewaySection)
+    learn: LearnSection = field(default_factory=LearnSection)
 
     def __post_init__(self):
         if self.mode not in ("batch", "streaming"):

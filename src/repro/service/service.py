@@ -38,6 +38,7 @@ import json
 import math
 import os
 import threading
+import time
 
 import numpy as np
 
@@ -83,6 +84,11 @@ class FraudService:
         self._model_version = 0
         self._model_swaps = 0
         self._params = None
+        # previous active version after a live swap — the rollback target
+        # (rollback_model); None until the first post-build activation
+        self._last_good: int | None = None
+        self.last_rollback: dict | None = None
+        self._auto_ckpt: dict | None = None   # enable_auto_checkpoint state
         # crash consistency (enable_wal / checkpoint / restore) — these must
         # exist before the eager load_model below consults them
         self._wal = None
@@ -94,7 +100,7 @@ class FraudService:
             self.load_model(params, version=0)
         # admission + traffic accounting (ServiceStats surface)
         self._acct = {"requests": 0, "scored": 0, "shed": 0, "blocked": 0,
-                      "block_timeouts": 0,
+                      "block_timeouts": 0, "rollbacks": 0,
                       "queue_depth_peak": 0, "in_flight_peak": 0}
         self._scores_by_version: dict[int, int] = {}
         # canary/shadow scoring state (enable_shadow); the lock makes the
@@ -253,11 +259,15 @@ class FraudService:
             # log the swap — a logged swap is always replayable
             rel = self._persist_params(params, version)
             seq = self._wal.append_model(version, rel)
+        prev = self._model_version
         self._models[version] = params
         self._params = params
         self._model_version = version
         if self._state != "created":
             self._model_swaps += 1
+            if prev != version and prev in self._models:
+                # the displaced incumbent becomes the rollback target
+                self._last_good = prev
             if self.mode == "streaming":
                 self._engine.load_model(params, version)
             else:
@@ -271,9 +281,26 @@ class FraudService:
     def model_version(self) -> int:
         return self._model_version
 
+    @property
+    def wal(self):
+        """The live :class:`~repro.stream.checkpoint.WriteAheadLog` (None
+        before :meth:`enable_wal`) — the continuous-learning plane's
+        training tap reads committed suffixes from it (``repro.learn``)."""
+        return self._wal
+
     def model_versions(self) -> tuple:
         """Every registered version, ascending."""
         return tuple(sorted(self._models))
+
+    def model_params(self, version: int | None = None):
+        """Registered parameters for ``version`` (default: the active
+        version) — the fine-tune warm start for ``repro.learn``."""
+        v = self._model_version if version is None else int(version)
+        if v not in self._models:
+            raise KeyError(
+                f"model version {v} is not registered "
+                f"(registered: {self.model_versions()})")
+        return self._models[v]
 
     def register_model(self, params, version: int | None = None) -> int:
         """Add ``params`` to the version registry WITHOUT activating them —
@@ -312,13 +339,19 @@ class FraudService:
         ``scale=0.0`` clones the weights — the wire-parity tests hot-swap to
         such a clone to prove scores stay bit-identical across a version
         bump; a nonzero scale makes a deliberately-divergent canary that
-        must trip the shadow divergence alert."""
+        must trip the shadow divergence alert.
+
+        Hybrid models perturb their LNN tower only (the GBDT head is
+        shared by reference) — ``HybridModel`` is not a JAX pytree, so
+        mapping over it whole would collapse it into an object array."""
         from_version = int(from_version)
         if from_version not in self._models:
             raise KeyError(
                 f"model version {from_version} is not registered "
                 f"(registered: {self.model_versions()})")
         import jax
+
+        from ..models.hybrid import HybridModel
 
         rng = np.random.default_rng(seed)
 
@@ -328,12 +361,55 @@ class FraudService:
                 return a
             return (a + scale * rng.standard_normal(a.shape)).astype(a.dtype)
 
-        params = jax.tree_util.tree_map(perturb, self._models[from_version])
+        source = self._models[from_version]
+        if isinstance(source, HybridModel):
+            import dataclasses
+
+            params = dataclasses.replace(
+                source,
+                lnn_params=jax.tree_util.tree_map(perturb, source.lnn_params))
+        else:
+            params = jax.tree_util.tree_map(perturb, source)
         return self.register_model(params, version)
+
+    @property
+    def last_good_version(self) -> int | None:
+        """The version a :meth:`rollback_model` would return to — the
+        incumbent displaced by the most recent live swap (None until a swap
+        happens, and cleared by a rollback so two alerts can never
+        ping-pong between a bad version and its predecessor)."""
+        return self._last_good
+
+    def rollback_model(self, reason: str = "") -> int:
+        """Roll the active model back to the last-good version.
+
+        The shared rollback path of the promotion controller
+        (``repro.learn.promote``) and the gateway's canary auto-rollback: it
+        disables shadow scoring (the alert source), re-activates
+        :attr:`last_good_version`, counts the event
+        (``ServiceStats.rollbacks``), and records ``last_rollback`` for the
+        stats surface.  Raises :class:`ServiceLifecycleError` when no
+        last-good version exists."""
+        if self._last_good is None or self._last_good not in self._models:
+            raise ServiceLifecycleError(
+                "rollback_model() needs a last-good version — no live swap "
+                "has displaced an incumbent (or it was already rolled back)")
+        bad, target = self._model_version, self._last_good
+        self.disable_shadow()
+        out = self.activate_model(target)
+        # activate_model recorded ``bad`` as the displaced incumbent; a
+        # rolled-back-from version is NOT a rollback target
+        self._last_good = None
+        self._acct["rollbacks"] += 1
+        self.last_rollback = {"from": bad, "to": target,
+                              "reason": str(reason)}
+        return out
 
     # ------------------------------------------------------- shadow (canary)
     def enable_shadow(self, version: int, fraction: float | None = None,
-                      threshold: float | None = None) -> dict:
+                      threshold: float | None = None,
+                      collect_eval: int | None = None,
+                      role: str = "canary") -> dict:
         """Start canary/shadow scoring: a sampled ``fraction`` of admitted
         responses is re-scored under registered ``version`` (off the
         response path — callers invoke :meth:`shadow_observe` AFTER the
@@ -343,6 +419,16 @@ class FraudService:
 
         Defaults for ``fraction``/``threshold`` come from
         ``config.gateway``.  Returns the initial shadow-state snapshot.
+
+        ``collect_eval``: when set, each sampled response additionally
+        appends a ``[label, primary_score, shadow_score]`` triple to a
+        bounded eval buffer (``shadow['eval']``, capped at ``collect_eval``
+        entries) — the promotion controller's recall@budget evidence.  The
+        buffer lives inside the shadow dict, so it rides checkpoint
+        manifests and a crash mid-eval resumes the window instead of
+        double-counting.  ``role`` labels the shadow's purpose
+        (``'canary'`` / ``'candidate'`` / ``'last_good'``) so a restored
+        promotion controller can re-attach to the right state.
         """
         if self._state == "closed":
             raise ServiceLifecycleError("enable_shadow() on a closed service")
@@ -360,12 +446,25 @@ class FraudService:
         with self._shadow_lock:
             self._shadow = {
                 "version": version, "fraction": fraction,
-                "threshold": threshold, "sampled": 0,
+                "threshold": threshold, "role": str(role), "sampled": 0,
                 "divergence_sum": 0.0, "divergence_max": 0.0,
                 "last_divergence": 0.0, "alerts": 0, "alert_active": False,
             }
+            if collect_eval is not None:
+                if int(collect_eval) < 1:
+                    raise ValueError("collect_eval must be >= 1 or None")
+                self._shadow["eval"] = []
+                self._shadow["eval_max"] = int(collect_eval)
             self._shadow_acc = 0.0
-            return dict(self._shadow)
+            return self._shadow_snapshot()
+
+    def _shadow_snapshot(self) -> dict:
+        """Copy of the shadow dict (eval buffer deep-copied) — callers must
+        never alias the live mutable state.  Lock held by caller."""
+        snap = dict(self._shadow)
+        if "eval" in snap:
+            snap["eval"] = [list(t) for t in snap["eval"]]
+        return snap
 
     def disable_shadow(self) -> None:
         with self._shadow_lock:
@@ -374,7 +473,7 @@ class FraudService:
     def shadow_stats(self) -> dict:
         """Snapshot of the divergence counters (empty dict = shadow off)."""
         with self._shadow_lock:
-            return dict(self._shadow) if self._shadow is not None else {}
+            return self._shadow_snapshot() if self._shadow is not None else {}
 
     def shadow_observe(self, responses: list) -> int:
         """Feed delivered responses to the shadow scorer.
@@ -420,6 +519,13 @@ class FraudService:
                 if d > sh["threshold"]:
                     sh["alerts"] += 1
                     sh["alert_active"] = True
+                if "eval" in sh and len(sh["eval"]) < sh["eval_max"]:
+                    # [label, primary, shadow] — labels ride the request tag
+                    # (the CheckoutEvent); tagless batch-mode requests record
+                    # NaN, which recall evaluation skips
+                    label = getattr(r.request.tag, "label", math.nan)
+                    sh["eval"].append(
+                        [float(label), float(r.score), float(p)])
         return len(picked)
 
     def _shadow_score(self, requests: list, version: int) -> np.ndarray:
@@ -580,6 +686,7 @@ class FraudService:
                 model_version=self._model_version))
             if seq is not None:
                 self._applied_seq = seq
+            self._maybe_auto_checkpoint()
             return out
         # peak records the depth the admitted request actually observed
         # (post block-drain), so it never exceeds an enforced cap + 1 frame
@@ -589,6 +696,7 @@ class FraudService:
         self._account_scored(out)
         if seq is not None:
             self._applied_seq = seq
+        self._maybe_auto_checkpoint()
         return out
 
     def _admit(self, req, pool, adm, now: float, out: list) -> bool:
@@ -637,6 +745,7 @@ class FraudService:
         self._engine.ingest(event)
         if seq is not None:
             self._applied_seq = seq
+        self._maybe_auto_checkpoint()
 
     def replay(self, events, warmup: bool = True):
         """Drive a whole event stream; returns the engine's
@@ -742,6 +851,66 @@ class FraudService:
         if compact:
             self._wal.compact(self._applied_seq)
         return path
+
+    def enable_auto_checkpoint(self, every_s: float | None = None,
+                               every_windows: int | None = None,
+                               keep_last: int | None = None,
+                               clock=time.monotonic) -> "FraudService":
+        """Arm scheduled checkpointing: after each applied event, a
+        compacting :meth:`checkpoint` fires once ``every_s`` wall seconds
+        have elapsed and/or ``every_windows`` snapshot windows have closed
+        since the last one; ``keep_last`` additionally prunes all but the
+        newest N ``ckpt-*`` directories (``prune_checkpoints``).
+
+        Long runs stay bounded on disk: the WAL is truncated up to each
+        checkpoint's ``applied_seq`` (open training-tap pins clamp the
+        truncation — see ``WriteAheadLog.compact``) and old checkpoint
+        directories age out.  ``clock`` is injectable for tests.  Cadence
+        state is process-local: a restored service re-arms via this call
+        (``serve_gateway`` does, from the gateway config)."""
+        if self._wal is None:
+            raise ServiceLifecycleError(
+                "enable_auto_checkpoint() requires enable_wal() first")
+        if every_s is None and every_windows is None:
+            raise ServiceLifecycleError(
+                "enable_auto_checkpoint() needs every_s and/or every_windows")
+        if every_s is not None and every_s <= 0:
+            raise ValueError("every_s must be > 0 or None")
+        if every_windows is not None and every_windows < 1:
+            raise ValueError("every_windows must be >= 1 or None")
+        if keep_last is not None and keep_last < 1:
+            raise ValueError("keep_last must be >= 1 or None")
+        self._auto_ckpt = {
+            "every_s": every_s, "every_windows": every_windows,
+            "keep_last": keep_last, "clock": clock,
+            "last_t": clock(),
+            "last_windows": self._engine.ingester.stats["windows_closed"],
+            "checkpoints": 0, "pruned": 0,
+        }
+        return self
+
+    def _maybe_auto_checkpoint(self) -> None:
+        """Fire the scheduled checkpoint when its cadence is due (called
+        after each applied submit/ingest; never during WAL replay)."""
+        ac = self._auto_ckpt
+        if ac is None or self._replaying or self._wal is None:
+            return
+        windows = self._engine.ingester.stats["windows_closed"]
+        due = (ac["every_s"] is not None
+               and ac["clock"]() - ac["last_t"] >= ac["every_s"])
+        due = due or (ac["every_windows"] is not None
+                      and windows - ac["last_windows"] >= ac["every_windows"])
+        if not due:
+            return
+        self.checkpoint(compact=True)
+        ac["last_t"] = ac["clock"]()
+        ac["last_windows"] = windows
+        ac["checkpoints"] += 1
+        if ac["keep_last"] is not None:
+            from repro.stream import checkpoint as ckpt
+
+            ac["pruned"] += len(
+                ckpt.prune_checkpoints(self._wal_root, ac["keep_last"]))
 
     @classmethod
     def restore(cls, root: str) -> "FraudService":
@@ -856,6 +1025,8 @@ class FraudService:
             in_flight_peak=acct["in_flight_peak"],
             scores_by_version=dict(self._scores_by_version),
             shadow=self.shadow_stats(),
+            rollbacks=acct["rollbacks"],
+            last_good_version=self._last_good,
         )
         if self.store is not None:
             st.store_size = len(self.store)
@@ -871,6 +1042,11 @@ class FraudService:
                         "workers": pool.worker_summary()}
         elif self._batch_layer is not None:
             st.extra = {"speed_k_max": self.config.engine.k_max}
+        if self._auto_ckpt is not None:
+            st.extra = dict(st.extra or {})
+            st.extra["auto_checkpoint"] = {
+                "checkpoints": self._auto_ckpt["checkpoints"],
+                "pruned": self._auto_ckpt["pruned"]}
         return st
 
     # ------------------------------------------------------------- internals

@@ -98,6 +98,8 @@ class ServiceStats:
     entities_written: int = 0
     model_stale_reads: int = 0              # KV hits stamped by an older model
     store_size: int = 0
+    rollbacks: int = 0                      # rollback_model() calls since build
+    last_good_version: int | None = None    # rollback target (None = no target)
     scores_by_version: dict = field(default_factory=dict)  # version -> scored
     shadow: dict = field(default_factory=dict)   # canary/shadow divergence state
     store_stats: dict = field(default_factory=dict)

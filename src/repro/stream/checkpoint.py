@@ -128,6 +128,12 @@ class WriteAheadLog:
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         self.first_seq = 0   # seq of the first on-disk record (post-compaction)
         self.last_seq = 0    # highest durable seq; append() hands out last_seq+1
+        # reader pins: pin_id -> after_seq.  A pin at ``s`` promises its
+        # holder every record with seq > s stays readable, so compaction may
+        # never drop past min(pins) (see compact()).  Open training taps
+        # (repro.learn.tap) hold one pin each at their scan cursor.
+        self._pins: dict[int, int] = {}
+        self._next_pin = 1
         self._recover_tail()
         self._f = open(path, "a", encoding="utf-8")
 
@@ -227,10 +233,54 @@ class WriteAheadLog:
         return self._append({"kind": "drain",
                              "now": None if now is None else float(now)})
 
+    # ------------------------------------------------------------ reader pins
+    def pin(self, after_seq: int) -> int:
+        """Register a reader pin: records with ``seq > after_seq`` are
+        protected from :meth:`compact` until the pin is moved past them or
+        released.  Returns the pin id.
+
+        This closes the WAL-compaction vs. reader race: a checkpoint's
+        ``compact(applied_seq)`` used to delete records a concurrently-open
+        training tap had not consumed yet; with the tap holding a pin at
+        its cursor, compaction is clamped to what every open reader has
+        already read (``tests/test_learn.py::test_compact_respects_pins``).
+        """
+        pin_id = self._next_pin
+        self._next_pin += 1
+        self._pins[pin_id] = int(after_seq)
+        return pin_id
+
+    def move_pin(self, pin_id: int, after_seq: int) -> None:
+        """Advance a pin to a new cursor (monotonic: moving a pin backwards
+        would retro-claim records compaction may already have dropped)."""
+        cur = self._pins.get(pin_id)
+        if cur is None:
+            raise KeyError(f"unknown WAL pin {pin_id}")
+        if after_seq < cur:
+            raise ValueError(
+                f"pin {pin_id} may only advance (at {cur}, got {after_seq})")
+        self._pins[pin_id] = int(after_seq)
+
+    def unpin(self, pin_id: int) -> None:
+        """Release a reader pin (idempotent)."""
+        self._pins.pop(pin_id, None)
+
+    def min_pinned(self) -> int | None:
+        """The most conservative pin cursor (None = no open readers)."""
+        return min(self._pins.values()) if self._pins else None
+
     # --------------------------------------------------------------- compact
     def compact(self, upto_seq: int) -> int:
         """Atomically drop records with ``seq <= upto_seq`` (they are covered
-        by a checkpoint).  Returns the number of records dropped."""
+        by a checkpoint).  Returns the number of records dropped.
+
+        Open reader pins clamp the drop: a pin at ``s`` keeps every record
+        with ``seq > s``, so the effective bound is
+        ``min(upto_seq, min_pinned())`` — compaction behind a lagging
+        training tap is deferred, never destructive."""
+        floor = self.min_pinned()
+        if floor is not None:
+            upto_seq = min(int(upto_seq), floor)
         keep = list(self.scan(after_seq=int(upto_seq)))
         total = sum(1 for _ in self.scan())
         dropped = total - len(keep)
@@ -411,6 +461,7 @@ def snapshot_state(service, applied_seq: int) -> tuple[dict, dict]:
         "models": {str(v): f"models/v{v}.npz"
                    for v in service.model_versions()},
         "model_swaps": service._model_swaps,
+        "last_good": service._last_good,
         "acct": dict(service._acct),
         "scores_by_version": {
             str(k): v for k, v in service._scores_by_version.items()},
@@ -524,6 +575,8 @@ def apply_checkpoint(service, manifest: dict, arrays: dict) -> None:
     service._scores_by_version = {
         int(k): v for k, v in manifest["scores_by_version"].items()}
     service._model_swaps = int(manifest["model_swaps"])
+    lg = manifest.get("last_good")
+    service._last_good = None if lg is None else int(lg)
     service._shadow = manifest["shadow"]
     service._shadow_acc = float(manifest["shadow_acc"])
     service._state = manifest["state"]
@@ -594,6 +647,20 @@ def latest_checkpoint(root: str) -> str | None:
     return found[-1] if found else None
 
 
+def prune_checkpoints(root: str, keep_last: int) -> list[str]:
+    """Delete all but the newest ``keep_last`` committed checkpoints under
+    ``root`` (retention for scheduled checkpointing — a long training run
+    would otherwise grow ``checkpoints/`` without bound).  Returns the
+    removed directories, oldest first."""
+    if keep_last < 1:
+        raise ValueError("prune_checkpoints keep_last must be >= 1")
+    found = list_checkpoints(root)
+    doomed = found[:-keep_last] if len(found) > keep_last else []
+    for path in doomed:
+        shutil.rmtree(path)
+    return doomed
+
+
 def read_checkpoint(path: str) -> tuple[dict, dict]:
     """(manifest, arrays) from one committed checkpoint directory."""
     try:
@@ -622,6 +689,7 @@ __all__ = [
     "encode_event",
     "latest_checkpoint",
     "list_checkpoints",
+    "prune_checkpoints",
     "read_checkpoint",
     "snapshot_state",
     "wal_path",

@@ -1,0 +1,360 @@
+"""The promotion state machine and the end-to-end continuous-learning loop.
+
+State-machine tests drive :class:`PromotionController` with synthetic eval
+triples injected into the service's shadow dict — the controller's whole
+contract is "decide from the checkpointed eval evidence", so the tests pin
+each transition against exactly-known evidence:
+
+    idle -> shadowing -> (promote -> watching -> cleared | rollback)
+                       | reject -> idle
+
+The closed-loop test at the bottom is the PR's acceptance path: drifting
+traffic -> WAL tap -> rolling fine-tune -> shadow-gated promote -> injected
+post-promotion regression -> automatic rollback, all through public APIs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import LNNConfig, lnn_init
+from repro.core.hetero import ENTITY_TYPE_NAMES
+from repro.data import SynthConfig, generate_event_stream
+from repro.data.attacks import AttackConfig
+from repro.learn import ContinuousLearner, drifting_attack_stream
+from repro.learn.promote import PromotionController
+from repro.service import (FraudService, ModelSection, ServiceConfig,
+                           ServiceLifecycleError)
+
+import jax
+
+
+@pytest.fixture(scope="module")
+def world():
+    events, g, _ = generate_event_stream(
+        SynthConfig(num_users=30, num_rings=2, feature_noise=0.8, seed=5),
+        rate_per_s=500.0)
+    cfg = LNNConfig(num_gnn_layers=2, hidden_dim=8,
+                    feat_dim=g.order_features.shape[1], mlp_dims=(8,))
+    params = lnn_init(jax.random.PRNGKey(0), cfg)
+    return events, cfg, params
+
+
+def _build(cfg, params):
+    sc = ServiceConfig(
+        mode="streaming", model=ModelSection.from_lnn_config(cfg),
+    ).replace(engine={"num_workers": 1, "max_batch": 4})
+    return FraudService(sc, params=params).build()
+
+
+def _controller(svc, **kw):
+    kw.setdefault("promote_margin", 0.1)
+    kw.setdefault("min_eval", 16)
+    kw.setdefault("min_eval_pos", 2)
+    kw.setdefault("eval_budget", 0.25)
+    kw.setdefault("eval_max", 64)
+    kw.setdefault("watch_min_eval", 16)
+    kw.setdefault("rollback_margin", 0.1)
+    return PromotionController(svc, **kw)
+
+
+def _inject_eval(svc, triples):
+    """Append [label, primary, shadow] rows to the live shadow eval buffer
+    — standing in for sampled traffic with exactly-known evidence."""
+    with svc._shadow_lock:
+        svc._shadow["eval"].extend([list(t) for t in triples])
+
+
+def _evidence(n=16, pos=4, *, candidate_wins):
+    """n triples, ``pos`` positives.  The winner scores positives at 1.0
+    (perfect recall@25%); the loser scores them at 0.0 (zero recall)."""
+    rows = []
+    for i in range(n):
+        label = 1.0 if i < pos else 0.0
+        good, bad = label, 1.0 - label
+        rows.append([label, bad, good] if candidate_wins
+                    else [label, good, bad])
+    return rows
+
+
+# --------------------------------------------------------- state transitions
+def test_submit_candidate_enables_shadow(world):
+    _events, cfg, params = world
+    svc = _build(cfg, params)
+    ctl = _controller(svc)
+    v = ctl.submit_candidate(params)
+    assert ctl.state == "shadowing" and ctl.candidate_version == v
+    sh = svc.shadow_stats()
+    assert sh["role"] == "candidate" and sh["version"] == v
+    assert sh["eval"] == [] and sh["eval_max"] == 64
+    with pytest.raises(RuntimeError, match="one candidate at a time"):
+        ctl.submit_candidate(params)
+    assert ctl.stats["submitted"] == 1
+    svc.close()
+
+
+def test_step_waits_for_min_evidence(world):
+    _events, cfg, params = world
+    svc = _build(cfg, params)
+    ctl = _controller(svc)
+    ctl.submit_candidate(params)
+    assert ctl.step() is None                       # no evidence at all
+    _inject_eval(svc, _evidence(n=8, pos=2, candidate_wins=True))
+    assert ctl.step() is None                       # n < min_eval
+    assert ctl.state == "shadowing"
+    svc.close()
+
+
+def test_promotes_on_margin_then_watches_then_clears(world):
+    _events, cfg, params = world
+    svc = _build(cfg, params)
+    ctl = _controller(svc)
+    v = ctl.submit_candidate(params)
+    _inject_eval(svc, _evidence(n=20, pos=5, candidate_wins=True))
+    d = ctl.step()
+    assert d["action"] == "promote"
+    assert d["candidate"] == v and d["incumbent"] == 0
+    assert d["candidate_recall"] == 1.0 and d["incumbent_recall"] == 0.0
+    assert d["n_eval"] == 20
+    assert svc.model_version == v                   # hot-swapped live
+    # the displaced incumbent now watches the promotee
+    assert ctl.state == "watching"
+    sh = svc.shadow_stats()
+    assert sh["role"] == "last_good" and sh["version"] == 0
+    # healthy watch window: promotee keeps its lead until eval_max closes it
+    _inject_eval(svc, _evidence(n=64, pos=8, candidate_wins=False))
+    # (primary column is the promotee here — and it scores the positives)
+    d = ctl.step()
+    assert d["action"] == "cleared"
+    assert ctl.state == "idle" and svc.shadow_stats() == {}
+    assert svc.model_version == v
+    assert ctl.stats == {"submitted": 1, "promoted": 1, "rejected": 0,
+                         "rollbacks": 0, "cleared": 1}
+    svc.close()
+
+
+def test_rejects_when_margin_not_met(world):
+    _events, cfg, params = world
+    svc = _build(cfg, params)
+    ctl = _controller(svc)
+    ctl.submit_candidate(params)
+    _inject_eval(svc, _evidence(n=20, pos=5, candidate_wins=False))
+    d = ctl.step()
+    assert d["action"] == "reject"
+    assert svc.model_version == 0                   # incumbent stays
+    assert ctl.state == "idle" and svc.shadow_stats() == {}
+    assert ctl.stats["rejected"] == 1
+    svc.close()
+
+
+def _enter_watching(svc, ctl_kw=None):
+    """Manufacture the post-promotion state: a (perturbed) promotee serving
+    as primary, the displaced incumbent shadowing as last-good."""
+    bad = svc.register_perturbed(0, scale=2.0)
+    svc.activate_model(bad)
+    svc.enable_shadow(0, fraction=1.0, threshold=10.0, collect_eval=64,
+                      role="last_good")
+    ctl = PromotionController.attach(svc, **dict(
+        promote_margin=0.1, min_eval=16, min_eval_pos=2, eval_budget=0.25,
+        eval_max=64, watch_min_eval=16, rollback_margin=0.1,
+        **(ctl_kw or {})))
+    assert ctl.state == "watching" and ctl.candidate_version == bad
+    return ctl, bad
+
+
+def test_watch_rolls_back_on_recall_regression(world):
+    _events, cfg, params = world
+    svc = _build(cfg, params)
+    ctl, bad = _enter_watching(svc)
+    # the promotee (primary column) misses every positive the last-good
+    # shadow still catches — a recall regression past the margin
+    _inject_eval(svc, _evidence(n=20, pos=5, candidate_wins=True))
+    d = ctl.step()
+    assert d["action"] == "rollback" and "recall regression" in d["reason"]
+    assert d["restored"] == 0 and svc.model_version == 0
+    assert svc.shadow_stats() == {} and ctl.state == "idle"
+    assert svc.stats().rollbacks == 1
+    assert svc.last_rollback["from"] == bad
+    svc.close()
+
+
+def test_watch_rolls_back_on_divergence_alert(world):
+    _events, cfg, params = world
+    svc = _build(cfg, params)
+    ctl, bad = _enter_watching(svc)
+    with svc._shadow_lock:                 # a sampled response tripped it
+        svc._shadow["alert_active"] = True
+        svc._shadow["divergence_max"] = 0.9
+    d = ctl.step()
+    assert d["action"] == "rollback" and "divergence" in d["reason"]
+    assert svc.model_version == 0 and ctl.state == "idle"
+    assert ctl.stats["rollbacks"] == 1
+    svc.close()
+
+
+def test_midstream_hotswap_steals_shadow(world):
+    """An operator replacing the shadow mid-eval must not wedge the
+    controller: the candidate's evidence is gone, so it resets to idle
+    (and a fresh candidate can be submitted)."""
+    _events, cfg, params = world
+    svc = _build(cfg, params)
+    ctl = _controller(svc)
+    ctl.submit_candidate(params)
+    _inject_eval(svc, _evidence(n=20, pos=5, candidate_wins=True))
+    v9 = svc.register_perturbed(0, scale=0.0, version=9)
+    svc.enable_shadow(v9, fraction=0.5)    # ops canary steals the slot
+    assert ctl.step() is None
+    assert ctl.state == "idle" and ctl.candidate_version is None
+    assert svc.model_version == 0          # no promotion from stolen state
+    ctl.submit_candidate(params)           # machine is reusable
+    assert ctl.state == "shadowing"
+    svc.close()
+
+
+def test_midstream_primary_hotswap_during_shadowing(world):
+    """A primary hot-swap while a candidate shadows: the paired eval keeps
+    meaning (primary column mixes versions, as in production), and a
+    promotion still swaps to the candidate."""
+    _events, cfg, params = world
+    svc = _build(cfg, params)
+    ctl = _controller(svc)
+    v = ctl.submit_candidate(params)
+    _inject_eval(svc, _evidence(n=10, pos=3, candidate_wins=True))
+    v2 = svc.register_perturbed(0, scale=0.0, version=v + 7)
+    svc.activate_model(v2)                 # operator swaps primary mid-eval
+    _inject_eval(svc, _evidence(n=10, pos=3, candidate_wins=True))
+    d = ctl.step()
+    assert d["action"] == "promote" and d["incumbent"] == v2
+    assert svc.model_version == v
+    assert svc.last_good_version == v2     # rollback target is the swap-ee
+    svc.close()
+
+
+# ------------------------------------------------- crash/restore mid-eval
+def test_crash_mid_shadow_eval_resumes_without_double_count(world, tmp_path):
+    events, cfg, params = world
+    root = str(tmp_path / "wal")
+    svc = _build(cfg, params).enable_wal(root)
+    ctl = _controller(svc)
+    cand = ctl.submit_candidate(params)
+    for ev in events[:12]:
+        svc.shadow_observe(svc.submit(ev))
+    svc.shadow_observe(svc.drain())
+    n1 = len(svc.shadow_stats()["eval"])
+    assert n1 > 0
+    svc.checkpoint()                       # durable mid-eval
+    for ev in events[12:16]:               # post-checkpoint traffic, then
+        svc.shadow_observe(svc.submit(ev))  # the process dies
+    eval_before = svc.shadow_stats()["eval"]
+
+    svc2 = FraudService.restore(root)
+    sh = svc2.shadow_stats()
+    # the checkpointed window resumed exactly: the n1 pre-checkpoint triples,
+    # once each — replaying the WAL suffix must not re-append them
+    assert len(sh["eval"]) == n1
+    assert sh["eval"] == eval_before[:n1]
+    assert sh["role"] == "candidate" and sh["version"] == cand
+    ctl2 = PromotionController.attach(
+        svc2, promote_margin=0.1, min_eval=16, min_eval_pos=2,
+        eval_budget=0.25, eval_max=64)
+    assert ctl2.state == "shadowing" and ctl2.candidate_version == cand
+    # fresh traffic keeps filling the SAME window
+    for ev in events[16:20]:
+        svc2.shadow_observe(svc2.submit(ev))
+    svc2.shadow_observe(svc2.drain())
+    assert len(svc2.shadow_stats()["eval"]) > n1
+    svc.close()
+    svc2.close()
+
+
+def test_crash_mid_watch_restores_last_good_target(world, tmp_path):
+    """last_good survives the crash: a restored service can still roll
+    back to the displaced incumbent."""
+    _events, cfg, params = world
+    root = str(tmp_path / "wal")
+    svc = _build(cfg, params).enable_wal(root)
+    ctl, bad = _enter_watching(svc)
+    svc.checkpoint()
+
+    svc2 = FraudService.restore(root)
+    assert svc2.model_version == bad
+    assert svc2.last_good_version == 0
+    ctl2 = PromotionController.attach(svc2)
+    assert ctl2.state == "watching"
+    with svc2._shadow_lock:
+        svc2._shadow["alert_active"] = True
+    d = ctl2.step()
+    assert d["action"] == "rollback" and svc2.model_version == 0
+    svc.close()
+    svc2.close()
+
+
+# --------------------------------------------------------- the closed loop
+def test_closed_loop_drift_finetune_promote_rollback(tmp_path):
+    """The PR's acceptance path end-to-end through public APIs: drifting
+    traffic -> WAL tap -> rolling fine-tune -> shadow-gated promotion ->
+    injected post-promotion regression -> automatic rollback."""
+    acfg = AttackConfig(num_buyers=60, num_rings=3, ring_size=5,
+                        num_snapshots=10, num_bursts=1, num_bin_runs=1,
+                        seed=0)
+    events, _patterns, split = drifting_attack_stream(acfg, rate_per_s=500.0)
+    sc = ServiceConfig.from_dict({
+        "mode": "streaming",
+        "model": {"num_gnn_layers": 2, "hidden_dim": 8,
+                  "feat_dim": int(events[0].features.shape[0]),
+                  "mlp_dims": [8], "entity_types": list(ENTITY_TYPE_NAMES)},
+        "engine": {"num_workers": 1, "max_batch": 8, "k_max": 4},
+        "learn": {"enabled": True, "min_window": 32, "max_window": 128,
+                  "stride": 32, "steps": 10, "lr": 1e-2, "min_eval": 16,
+                  "min_eval_pos": 2, "eval_max": 64, "promote_margin": 0.0},
+    })
+    params = lnn_init(jax.random.PRNGKey(0), sc.to_lnn_config())
+    svc = FraudService(sc, params=params).build()
+    svc.enable_wal(str(tmp_path / "wal"))
+    svc.enable_auto_checkpoint(every_windows=3, keep_last=2)
+    learner = ContinuousLearner(svc)
+
+    decisions = []
+    for i, ev in enumerate(events):
+        svc.shadow_observe(svc.submit(ev))
+        if (i + 1) % 8 == 0:
+            d = learner.step()["decision"]
+            if d:
+                decisions.append(d)
+    svc.drain()
+
+    promotions = [d for d in decisions if d["action"] == "promote"]
+    assert promotions, "the loop never promoted a fine-tune"
+    # margin-gated: every promotion carried real paired evidence
+    assert all(d["n_eval"] >= 16 and d["candidate_recall"]
+               >= d["incumbent_recall"] for d in promotions)
+    # the tap saw (almost) everything: only events after the last learner
+    # tick — at most one stride of 8 — can be un-polled
+    assert learner.tap.stats["examples"] >= len(events) - 8 - learner.tap.pending
+    assert svc.stats().extra["auto_checkpoint"]["checkpoints"] >= 1
+    promoted_v = svc.model_version
+    assert promoted_v != 0
+
+    # ---- injected regression: a perturbed promotee must auto-roll-back
+    rollbacks_before = svc.stats().rollbacks
+    bad = svc.register_perturbed(promoted_v, scale=3.0)
+    svc.activate_model(bad)
+    svc.enable_shadow(promoted_v, fraction=1.0, threshold=0.05,
+                      collect_eval=64, role="last_good")
+    watcher = PromotionController.attach(svc, watch_min_eval=8,
+                                         rollback_margin=0.05)
+    assert watcher.state == "watching"
+    rolled = None
+    for ev in events[-40:]:
+        ev2 = ev.__class__(order_id=ev.order_id + 9_000_000,
+                           snapshot=events[-1].snapshot,
+                           entities=ev.entities, features=ev.features,
+                           label=ev.label, arrival=ev.arrival)
+        svc.shadow_observe(svc.submit(ev2))
+        rolled = watcher.step()
+        if rolled is not None:
+            break
+    svc.drain()
+    assert rolled is not None and rolled["action"] == "rollback"
+    assert svc.model_version == promoted_v
+    assert svc.stats().rollbacks == rollbacks_before + 1
+    learner.close()
+    svc.close()

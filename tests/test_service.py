@@ -442,6 +442,7 @@ def test_service_stats_json_roundtrip():
         shed=7, blocked=5, block_timeouts=3, queue_depth=4,
         queue_depth_peak=12, in_flight_peak=2, flushes=31, refreshes=6,
         entities_written=250, model_stale_reads=11, store_size=420,
+        rollbacks=1, last_good_version=0,
         scores_by_version={0: 40, 3: 50},
         shadow={"version": 9, "fraction": 0.5, "threshold": 0.25,
                 "sampled": 45, "divergence_sum": 0.5, "divergence_max": 0.1,

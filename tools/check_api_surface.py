@@ -27,8 +27,8 @@ sys.path.insert(0, os.path.join(str(ROOT), "src"))
 
 #: the reviewed serving surface: the typed API, the HTTP gateway over it,
 #: both shim packages, and the crash-consistency layer
-MODULES = ["repro.service", "repro.gateway", "repro.serve", "repro.stream",
-           "repro.stream.checkpoint"]
+MODULES = ["repro.service", "repro.gateway", "repro.learn", "repro.serve",
+           "repro.stream", "repro.stream.checkpoint"]
 
 SNAPSHOT = ROOT / "tools" / "api_surface.json"
 

@@ -26,6 +26,7 @@ DEFAULT_RECORDS = [
     "experiments/BENCH_gateway.json",
     "experiments/BENCH_recovery.json",
     "experiments/BENCH_hetero.json",
+    "experiments/BENCH_learning.json",
 ]
 
 PCTS = ("p50", "p95", "p99")
@@ -238,6 +239,50 @@ def check_hetero(d: dict) -> list[str]:
     return e
 
 
+def check_learning(d: dict) -> list[str]:
+    e: list[str] = []
+    _require(e, _num(d.get("n_events")), "n_events: finite number required")
+    for k in ("split", "budget", "min_lift"):
+        _require(e, _num(d.get(k)), f"{k}: number")
+    cfg = d.get("config") or {}
+    for k in ("steps", "min_window", "max_window", "stride", "min_eval",
+              "promote_margin"):
+        _require(e, _num(cfg.get(k)), f"config.{k}: number")
+    for k in ("frozen_ring_recall", "recovered_ring_recall"):
+        _require(e, _num(d.get(k)), f"{k}: number")
+    curve = d.get("recall_curve")
+    _require(e, isinstance(curve, list) and curve,
+             "recall_curve: non-empty list")
+    for i, p in enumerate(curve or []):
+        for k in ("start", "n"):
+            _require(e, _num(p.get(k)), f"recall_curve[{i}].{k}: number")
+        _require(e, p.get("phase") in ("A", "B"),
+                 f"recall_curve[{i}].phase: 'A' or 'B'")
+        _require(e, isinstance(p.get("model_versions"), list),
+                 f"recall_curve[{i}].model_versions: list")
+    proms = d.get("promotions")
+    _require(e, isinstance(proms, list) and proms,
+             "promotions: non-empty list (the loop must actually promote)")
+    for i, p in enumerate(proms or []):
+        for k in ("event_index", "candidate", "incumbent",
+                  "candidate_recall", "incumbent_recall", "n_eval"):
+            _require(e, _num(p.get(k)), f"promotions[{i}].{k}: number")
+    reg = d.get("regression") or {}
+    for k in ("bad_version", "restored_version"):
+        _require(e, _num(reg.get(k)), f"regression.{k}: number")
+    # the two closed-loop invariants are gates, not statistics: a post-drift
+    # fine-tune must recover ring recall, and the promotion that shipped it
+    # must have been shadow-gated with the injected regression rolled back
+    gates = d.get("gates") or {}
+    _require(e, gates.get("finetuned_recovers_recall") is True,
+             "gates.finetuned_recovers_recall: must be True "
+             "(drift-recovery gate)")
+    _require(e, gates.get("promotion_shadow_gated") is True,
+             "gates.promotion_shadow_gated: must be True "
+             "(shadow-gated promotion / auto-rollback gate)")
+    return e
+
+
 CHECKERS = {
     "BENCH_streaming.json": check_streaming,
     "BENCH_stage2.json": check_stage2,
@@ -246,6 +291,7 @@ CHECKERS = {
     "BENCH_gateway.json": check_gateway,
     "BENCH_recovery.json": check_recovery,
     "BENCH_hetero.json": check_hetero,
+    "BENCH_learning.json": check_learning,
 }
 
 
