@@ -1,0 +1,233 @@
+"""Process-pool benchmark — what real OS-process workers buy and prove.
+
+Two sections, two gates (``experiments/BENCH_procpool.json``, enforced by
+``tools/check_bench_schema.py``):
+
+* **parity** — replays one event stream (with a mid-stream hot-swap)
+  under ``backend="inline"`` and ``backend="process"`` at N=1 and N=4 and
+  compares scores, staleness, model versions, KV value bytes / versions /
+  model-versions (stamps are wall-clock and excluded), and store counters.
+  ``gates.process_parity_bit_identical`` — the tentpole correctness
+  invariant: moving compute into shard processes changes NOTHING about
+  the bits.
+* **scaling** — wall-clock replay throughput of the process backend at
+  N=4 vs N=1 on a CPU-bound stage-2 workload (wide hidden dim, deadline
+  flushes sized so every poll fires all four shards at once, children
+  pinned single-threaded so the parallelism measured is the topology's,
+  not BLAS's).  ``gates.throughput_scales_with_n`` requires >= 2x at N=4
+  — evaluated only where the host can physically parallelize
+  (``os.cpu_count() >= 4``); on smaller hosts the measured speedup is
+  still recorded and ``scaling.limited_by_cores`` marks the gate vacuous.
+
+Run:  PYTHONPATH=src python benchmarks/procpool_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Pin BLAS/XLA to one thread BEFORE jax initializes anywhere: spawn
+# children inherit this environment, so each shard process is genuinely
+# single-threaded and the N=4 vs N=1 ratio measures process parallelism.
+_PIN = {
+    "OMP_NUM_THREADS": "1",
+    "OPENBLAS_NUM_THREADS": "1",
+    "MKL_NUM_THREADS": "1",
+    "XLA_FLAGS": "--xla_cpu_multi_thread_eigen=false "
+                 "intra_op_parallelism_threads=1",
+}
+for _k, _v in _PIN.items():
+    os.environ.setdefault(_k, _v)
+
+
+def _make_world(num_users, num_rings, n_events, hidden_dim, seed=7,
+                rate_per_s=500.0, num_layers=2, mlp=(16,)):
+    import jax
+
+    from repro.core import LNNConfig, lnn_init
+    from repro.data import SynthConfig, generate_event_stream
+
+    events, g, _ = generate_event_stream(
+        SynthConfig(num_users=num_users, num_rings=num_rings,
+                    feature_noise=0.8, seed=seed),
+        rate_per_s=rate_per_s)
+    cfg = LNNConfig(num_gnn_layers=num_layers, hidden_dim=hidden_dim,
+                    feat_dim=g.order_features.shape[1], mlp_dims=mlp)
+    params = lnn_init(jax.random.PRNGKey(0), cfg)
+    return events[:n_events], cfg, params
+
+
+def _engine(params, cfg, *, backend, num_workers, max_batch, max_wait_s):
+    import warnings
+
+    from repro.stream import EngineConfig, StreamingEngine
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return StreamingEngine(
+            params, cfg,
+            EngineConfig(max_batch=max_batch, max_wait_s=max_wait_s,
+                         num_workers=num_workers, backend=backend))
+
+
+def _replay_traits(eng, events, swap=None):
+    """Drive the stream (optional mid-stream hot-swap) and return the
+    comparable bits: per-order score traits + KV state sans stamps."""
+    import numpy as np
+
+    out = []
+    for i, ev in enumerate(events):
+        if swap is not None and i == swap[0]:
+            eng.load_model(swap[1], swap[2])
+        out.extend(eng.submit(ev))
+    out.extend(eng.flush())
+    traits = [(r.request.tag.order_id, r.score, r.staleness,
+               r.model_version) for r in out]
+    kv = {k: (np.asarray(v).tobytes(), ver, mv)
+          for shard in eng.store.shard_items()
+          for k, v, ver, _st, mv in shard}
+    return traits, kv, dict(eng.store.stats)
+
+
+def run_parity_bench(*, num_users=60, num_rings=3, n_events=120,
+                     hidden_dim=16, max_batch=8) -> tuple[dict, bool]:
+    import jax
+
+    from repro.core import lnn_init
+
+    events, cfg, params = _make_world(num_users, num_rings, n_events,
+                                      hidden_dim)
+    params2 = lnn_init(jax.random.PRNGKey(1), cfg)
+    swap = (len(events) // 2, params2, 1)
+
+    record, all_identical = {}, True
+    for n in (1, 4):
+        runs = {}
+        for backend in ("inline", "process"):
+            eng = _engine(params, cfg, backend=backend, num_workers=n,
+                          max_batch=max_batch, max_wait_s=0.005)
+            try:
+                runs[backend] = _replay_traits(eng, events, swap=swap)
+            finally:
+                eng.close()
+        ti, kvi, sti = runs["inline"]
+        tp, kvp, stp = runs["process"]
+        same = (ti == tp and kvi == kvp and sti == stp)
+        all_identical = all_identical and same
+        record[str(n)] = {
+            "scores_identical": bool(ti == tp),
+            "kv_identical": bool(kvi == kvp),
+            "counters_identical": bool(sti == stp),
+            "orders": len(ti),
+            "kv_entries": len(kvi),
+        }
+    record["checked_events"] = len(events)
+    record["hot_swap_at"] = swap[0]
+    return record, all_identical
+
+
+def run_scaling_bench(*, num_users=300, num_rings=6, n_events=240,
+                      hidden_dim=256, max_batch=64,
+                      events_per_window=32) -> dict:
+    """CPU-bound stage-2 replay, process backend, N=1 vs N=4.
+
+    The arrival rate is chosen so ~``events_per_window`` land inside one
+    deadline window and size triggers never fire — every expiry then
+    flushes ALL shards in a single ``poll`` pass, which is exactly the
+    multi-process overlap path (``WorkerPool._collect``)."""
+    max_wait_s = 0.005
+    rate = events_per_window / max_wait_s
+    events, cfg, params = _make_world(
+        num_users, num_rings, n_events, hidden_dim, rate_per_s=rate,
+        mlp=(hidden_dim,))
+
+    sweep = []
+    for n in (1, 4):
+        eng = _engine(params, cfg, backend="process", num_workers=n,
+                      max_batch=max_batch, max_wait_s=max_wait_s)
+        try:
+            eng.warmup()
+            t0 = time.perf_counter()
+            out = []
+            for ev in events:
+                out.extend(eng.submit(ev))
+            out.extend(eng.flush())
+            wall = time.perf_counter() - t0
+        finally:
+            eng.close()
+        assert len(out) == len(events)
+        sweep.append({
+            "num_workers": n,
+            "wall_s": wall,
+            "events_per_s": len(events) / wall,
+        })
+
+    speedup = sweep[1]["events_per_s"] / sweep[0]["events_per_s"]
+    cores = os.cpu_count() or 1
+    return {
+        "sweep": sweep,
+        "speedup_4v1": speedup,
+        "cores": cores,
+        # a 1-core host cannot exhibit process parallelism; the gate is
+        # meaningful (and enforced) only where 4 shards can actually run
+        "limited_by_cores": cores < 4,
+        "config": {"hidden_dim": hidden_dim, "max_batch": max_batch,
+                   "max_wait_s": max_wait_s,
+                   "events_per_window": events_per_window,
+                   "thread_pin": _PIN},
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    if smoke:
+        parity, parity_ok = run_parity_bench(n_events=100)
+        scaling = run_scaling_bench(num_users=150, num_rings=4,
+                                    n_events=160, hidden_dim=128)
+    else:
+        parity, parity_ok = run_parity_bench(
+            num_users=150, num_rings=5, n_events=400, hidden_dim=32)
+        scaling = run_scaling_bench(n_events=480, hidden_dim=512)
+
+    scaling_ok = (scaling["limited_by_cores"]
+                  or scaling["speedup_4v1"] >= 2.0)
+    r = {
+        "n_events": parity["checked_events"],
+        "parity": parity,
+        "scaling": scaling,
+        "gates": {
+            "process_parity_bit_identical": bool(parity_ok),
+            "throughput_scales_with_n": bool(scaling_ok),
+        },
+    }
+
+    print("\n# Process pool (parity + scaling)")
+    for n in ("1", "4"):
+        p = parity[n]
+        print(f"  parity N={n}: scores={p['scores_identical']} "
+              f"kv={p['kv_identical']} counters={p['counters_identical']} "
+              f"({p['orders']} orders, {p['kv_entries']} KV entries)")
+    for p in scaling["sweep"]:
+        print(f"  process N={p['num_workers']}: "
+              f"{p['events_per_s']:8.1f} ev/s ({p['wall_s']:.2f}s)")
+    lim = " (gate vacuous: <4 cores)" if scaling["limited_by_cores"] else ""
+    print(f"  speedup 4v1: {scaling['speedup_4v1']:.2f}x "
+          f"on {scaling['cores']} cores{lim}")
+    print(f"  gates: {r['gates']}")
+
+    outdir = os.path.join("experiments", "smoke") if smoke else "experiments"
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, "BENCH_procpool.json"), "w") as f:
+        json.dump(r, f, indent=1)
+    return r
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI smoke (seconds, not minutes)")
+    main(smoke=ap.parse_args().smoke)

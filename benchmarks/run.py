@@ -13,9 +13,11 @@
             cost vs log length, bit-identical recovery gate)
   learning  continuous-learning loop on a drifting attack stream (recall
             recovery + shadow-gated promotion + auto-rollback gates)
+  procpool  process-backed worker pool (inline-vs-process replay parity
+            gate + N=4 vs N=1 throughput-scaling gate)
 
 ``--smoke`` runs only the serving benches (streaming + multiworker + stage2
-+ gateway + recovery + learning) at tiny sizes — seconds, not minutes — then validates the emitted
++ gateway + recovery + learning + procpool) at tiny sizes — seconds, not minutes — then validates the emitted
 ``BENCH_*.json`` records against their schemas (``tools/check_bench_schema``).
 That is the CI ``bench-smoke`` gate: it fails on crash or schema drift.
 
@@ -104,6 +106,23 @@ def _learning_rows(csv_rows, lrn) -> None:
                      ",".join(f"{k}={v}" for k, v in lrn["gates"].items())))
 
 
+def _procpool_rows(csv_rows, pp) -> None:
+    sc = pp["scaling"]
+    for p in sc["sweep"]:
+        csv_rows.append((
+            f"procpool/n{p['num_workers']}",
+            f"{p['wall_s']*1e6/max(1, pp['n_events']):.0f}",
+            f"{p['events_per_s']:.0f}eps",
+        ))
+    csv_rows.append((
+        "procpool/scaling", "",
+        f"speedup_4v1={sc['speedup_4v1']:.2f}x,cores={sc['cores']},"
+        f"limited_by_cores={sc['limited_by_cores']}",
+    ))
+    csv_rows.append(("procpool/gates", "",
+                     ",".join(f"{k}={v}" for k, v in pp["gates"].items())))
+
+
 def _gateway_rows(csv_rows, gwr) -> None:
     for name, s in gwr["scenarios"].items():
         pct = s["latency_ms"]
@@ -144,12 +163,17 @@ def run_smoke() -> None:
     lrn = learning_main(smoke=True)       # writes BENCH_learning.json
     _learning_rows(csv_rows, lrn)
 
+    from benchmarks.procpool_bench import main as procpool_main
+    pp = procpool_main(smoke=True)        # writes BENCH_procpool.json
+    _procpool_rows(csv_rows, pp)
+
     from tools.check_bench_schema import main as schema_main
     rc = schema_main([os.path.join("experiments", "smoke", name) for name in
                       ("BENCH_streaming.json", "BENCH_stage2.json",
                        "BENCH_multiworker.json", "BENCH_refresh.json",
                        "BENCH_gateway.json", "BENCH_recovery.json",
-                       "BENCH_hetero.json", "BENCH_learning.json")])
+                       "BENCH_hetero.json", "BENCH_learning.json",
+                       "BENCH_procpool.json")])
     if rc != 0:
         raise SystemExit(rc)
 
@@ -201,6 +225,10 @@ def run_full() -> None:
     from benchmarks.learning_bench import main as learning_main
     lrn = learning_main()   # writes experiments/BENCH_learning.json
     _learning_rows(csv_rows, lrn)
+
+    from benchmarks.procpool_bench import main as procpool_main
+    pp = procpool_main()   # writes experiments/BENCH_procpool.json
+    _procpool_rows(csv_rows, pp)
 
     from benchmarks.kernels_bench import main as kernels_main
     ker = kernels_main()

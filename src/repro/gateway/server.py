@@ -192,6 +192,32 @@ def service_metric_lines(snap: dict) -> list[str]:
     for key, value in sorted((snap.get("store_stats") or {}).items()):
         if isinstance(value, (int, float)) and not isinstance(value, bool):
             emit(f"repro_store_{key}_total", "counter", value)
+    # per-worker families from the ONE tear-free ServiceStats.workers
+    # snapshot (never a second racy pool read)
+    workers = snap.get("workers") or []
+    if workers:
+        for name, kind, key in (
+                ("repro_worker_queue_depth", "gauge", "queue_depth"),
+                ("repro_worker_flushes_total", "counter", "flushes"),
+                ("repro_worker_restarts_total", "counter", "restarts")):
+            lines.append(f"# TYPE {name} {kind}")
+            for w in workers:
+                v = float(w.get(key, 0))
+                lines.append(
+                    f'{name}{{worker="{w.get("worker", 0)}"}} '
+                    f"{int(v) if v.is_integer() else repr(v)}")
+        lines.append("# TYPE repro_worker_steals_total counter")
+        for w in workers:
+            wid = w.get("worker", 0)
+            for direction, key in (("in", "stolen_in"), ("out", "stolen_out")):
+                lines.append(
+                    f'repro_worker_steals_total{{worker="{wid}",'
+                    f'direction="{direction}"}} {int(w.get(key, 0))}')
+        lines.append("# TYPE repro_worker_alive gauge")
+        for w in workers:
+            lines.append(
+                f'repro_worker_alive{{worker="{w.get("worker", 0)}"}} '
+                f"{1 if w.get('alive', True) else 0}")
     return lines
 
 
@@ -393,9 +419,19 @@ class FraudGateway:
         with self.lock:
             state = self.service.state
             version = self.service.model_version
-        ok = (not self.draining) and state in _HEALTHY_STATES
+            dead = 0
+            eng = self.service.engine
+            if self.service.mode == "streaming" and eng is not None:
+                # process backend: a dead shard owner means requests routed
+                # to it would stall until its heartbeat restart — report
+                # not-ready rather than serve into the gap (inline workers
+                # are in-process and always "alive")
+                dead = sum(1 for row in eng.pool.worker_summary()
+                           if not row.get("alive", True))
+        ok = (not self.draining) and state in _HEALTHY_STATES and dead == 0
         payload = {"status": "ok" if ok else "unavailable", "state": state,
-                   "draining": self.draining, "model_version": version}
+                   "draining": self.draining, "model_version": version,
+                   "dead_workers": dead}
         return (200 if ok else 503), payload, {}, None
 
     def handle_stats(self):

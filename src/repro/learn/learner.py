@@ -56,7 +56,8 @@ class ContinuousLearner:
             optimizer=section.optimizer, lr=section.lr, steps=section.steps,
             head=section.head, gbdt_trees=section.gbdt_trees,
             k_max=eng.k_max, max_deg=eng.max_deg,
-            entity_history=eng.entity_history, max_history=eng.max_history)
+            entity_history=eng.entity_history, max_history=eng.max_history,
+            in_process=section.train_in_process)
         self.controller = PromotionController.attach(
             service,
             promote_margin=section.promote_margin,

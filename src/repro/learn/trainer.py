@@ -21,6 +21,9 @@ yielding a :class:`~repro.models.hybrid.HybridModel` candidate.
 """
 from __future__ import annotations
 
+import os
+import shutil
+import tempfile
 from dataclasses import dataclass
 
 import jax
@@ -122,6 +125,88 @@ def _pow2_at_least(n: int, floor: int = 64) -> int:
     return p
 
 
+# ------------------------------------------------- pure fine-tune primitives
+# Module-level so the inline path and the dedicated trainer process run the
+# EXACT same code — in-process fine-tunes are bit-identical to inline ones
+# (same ops, same host, same XLA), which the parity tests assert.
+def _materialize_window(cfg: LNNConfig, rows: list, *, entity_history: str,
+                        max_history, max_deg: int):
+    """Window rows ``(snapshot, arrival, entities, features, label)`` →
+    window-local DDS graph, padded to pow2 nodes (receptive cones are
+    window-local by design: the rolling window IS the context the
+    fine-tune sees, matching its serving horizon)."""
+    b = IncrementalDDSBuilder(
+        feat_dim=cfg.feat_dim, entity_history=entity_history,
+        max_history=max_history)
+    for snap, _arr, entities, features, label in sorted(
+            rows, key=lambda r: (r[0], r[1])):
+        b.add_order(entities, snap, features, label)
+    dds = b.build()
+    pg = pad_graph(dds.coo,
+                   num_nodes=_pow2_at_least(dds.coo.num_nodes),
+                   max_deg=max_deg)
+    return dds, pg
+
+
+def _fine_tune(params, cfg: LNNConfig, pg, optimizer: str, lr: float,
+               steps: int):
+    """A few steps of the local optimizer on ``lnn_loss`` over the window
+    graph; returns ``(tuned_params, losses)``."""
+    init_fn, update_fn = _OPTIMIZERS[optimizer](lr)
+    loss_grad = jax.jit(jax.value_and_grad(
+        lambda p, g: lnn_loss(p, cfg, g)))
+    opt = init_fn(params)
+    losses = []
+    for _ in range(steps):
+        loss, grads = loss_grad(params, pg)
+        params, opt = update_fn(grads, opt, params)
+        losses.append(float(loss))
+    return params, losses
+
+
+def _train_child_main(conn, spec: dict) -> None:
+    """Entry point of the dedicated fine-tune process (spawn start method).
+
+    The window ships as an ``.npz`` blob (flat entity array + offsets for
+    the ragged cone lists) and the warm start as a params checkpoint; the
+    tuned candidate travels back the same way — an npz file the parent
+    loads and feeds into the ordinary registration/promotion path.  Only
+    the loss trace crosses the pipe."""
+    try:
+        from repro.core.lnn import lnn_init
+        from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+        cfg = spec["cfg"]
+        blob = np.load(spec["window_path"])
+        feats = blob["features"]
+        labels = blob["labels"]
+        snaps = blob["snapshots"]
+        arrivals = blob["arrivals"]
+        ent_flat, ent_off = blob["ent_flat"], blob["ent_off"]
+        rows = [
+            (int(snaps[i]), float(arrivals[i]),
+             tuple(int(e) for e in ent_flat[ent_off[i]:ent_off[i + 1]]),
+             feats[i], float(labels[i]))
+            for i in range(len(labels))
+        ]
+        template = lnn_init(jax.random.PRNGKey(0), cfg)
+        warm = load_checkpoint(spec["warm_path"], template)[0]
+        _dds, pg = _materialize_window(
+            cfg, rows, entity_history=spec["entity_history"],
+            max_history=spec["max_history"], max_deg=spec["max_deg"])
+        tuned, losses = _fine_tune(
+            warm, cfg, pg, spec["optimizer"], spec["lr"], spec["steps"])
+        save_checkpoint(spec["out_path"], tuned)
+        conn.send(("ok", losses))
+    except Exception as e:   # noqa: BLE001 — the parent re-raises
+        try:
+            conn.send(("error", f"{type(e).__name__}: {e}"))
+        except OSError:
+            pass
+    finally:
+        conn.close()
+
+
 # ------------------------------------------------------------------- trainer
 class RollingWindowTrainer:
     """Accumulate tap examples; fine-tune on rolling windows.
@@ -135,7 +220,7 @@ class RollingWindowTrainer:
                  optimizer: str = "adam", lr: float = 5e-3, steps: int = 40,
                  head: str = "mlp", gbdt_trees: int = 25, k_max: int = 8,
                  max_deg: int = 32, entity_history: str = "all",
-                 max_history: int | None = None):
+                 max_history: int | None = None, in_process: bool = False):
         if optimizer not in _OPTIMIZERS:
             raise ValueError(f"optimizer must be one of {sorted(_OPTIMIZERS)}")
         if head not in ("mlp", "hybrid"):
@@ -148,6 +233,10 @@ class RollingWindowTrainer:
         self.head, self.gbdt_trees = head, int(gbdt_trees)
         self.k_max, self.max_deg = int(k_max), int(max_deg)
         self.entity_history, self.max_history = entity_history, max_history
+        # in_process=True runs each fine-tune in a dedicated spawn()ed
+        # process (off the serving GIL); the GBDT head refit stays in the
+        # parent — the booster isn't an npz-serializable pytree
+        self.in_process = bool(in_process)
         self._buffer: list = []
         self._since_fire: int | None = None   # None = never fired
         self.stats = {"examples": 0, "fires": 0, "last_window": 0,
@@ -199,39 +288,97 @@ class RollingWindowTrainer:
         self.stats["fires"] += 1
         self.stats["last_window"] = len(window)
 
-        dds, pg = self._materialize(window)
-        init_fn, update_fn = _OPTIMIZERS[self.optimizer](self.lr)
-        loss_grad = jax.jit(jax.value_and_grad(
-            lambda p, g: lnn_loss(p, self.cfg, g)))
-        opt = init_fn(params)
-        losses = []
-        for _ in range(self.steps):
-            loss, grads = loss_grad(params, pg)
-            params, opt = update_fn(grads, opt, params)
-            losses.append(float(loss))
+        if self.in_process:
+            params, losses = self._train_in_process(params, window)
+            dds = pg = None
+        else:
+            dds, pg = self._materialize(window)
+            params, losses = _fine_tune(
+                params, self.cfg, pg, self.optimizer, self.lr, self.steps)
         self.stats["last_loss"] = losses[-1]
 
         model = params
         if self.head == "hybrid":
+            if pg is None:
+                # GBDT refit runs in the parent either way; rebuild the
+                # (deterministic) window graph the child built for itself
+                dds, pg = self._materialize(window)
             model = self._fit_hybrid(params, window, dds, pg)
         return FineTuneResult(params=params, model=model, head=self.head,
                               window=len(window), steps=self.steps,
                               losses=losses)
 
     def _materialize(self, window):
-        """Window examples → window-local DDS graph, padded to pow2 nodes
-        (receptive cones are window-local by design: the rolling window IS
-        the context the fine-tune sees, matching its serving horizon)."""
-        b = IncrementalDDSBuilder(
-            feat_dim=self.cfg.feat_dim, entity_history=self.entity_history,
-            max_history=self.max_history)
-        for e in sorted(window, key=lambda e: (e.snapshot, e.arrival)):
-            b.add_order(e.entities, e.snapshot, e.features, e.label)
-        dds = b.build()
-        pg = pad_graph(dds.coo,
-                       num_nodes=_pow2_at_least(dds.coo.num_nodes),
-                       max_deg=self.max_deg)
-        return dds, pg
+        """Window examples → window-local DDS graph (see
+        :func:`_materialize_window`)."""
+        rows = [(e.snapshot, e.arrival, e.entities, e.features, e.label)
+                for e in window]
+        return _materialize_window(
+            self.cfg, rows, entity_history=self.entity_history,
+            max_history=self.max_history, max_deg=self.max_deg)
+
+    def _train_in_process(self, params, window):
+        """Run one fine-tune in a dedicated spawn()ed process.
+
+        Window examples ship as an npz blob (features/labels/snapshots/
+        arrivals + flat entities with offsets), the warm start as a params
+        checkpoint; the tuned candidate comes back as an npz the parent
+        loads into the warm start's pytree structure.  A child that dies
+        or reports an error raises — the trainer never silently falls back
+        to a stale candidate."""
+        from multiprocessing import get_context
+
+        from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+        tmp = tempfile.mkdtemp(prefix="repro-finetune-")
+        try:
+            warm_path = os.path.join(tmp, "warm.npz")
+            out_path = os.path.join(tmp, "tuned.npz")
+            window_path = os.path.join(tmp, "window.npz")
+            save_checkpoint(warm_path, params)
+            ent_flat: list[int] = []
+            ent_off = [0]
+            for e in window:
+                ent_flat.extend(int(x) for x in e.entities)
+                ent_off.append(len(ent_flat))
+            np.savez(
+                window_path,
+                features=np.stack([np.asarray(e.features, np.float32)
+                                   for e in window]),
+                labels=np.asarray([e.label for e in window], np.float32),
+                snapshots=np.asarray([e.snapshot for e in window], np.int64),
+                arrivals=np.asarray([e.arrival for e in window], np.float64),
+                ent_flat=np.asarray(ent_flat, np.int64),
+                ent_off=np.asarray(ent_off, np.int64))
+            spec = {
+                "cfg": self.cfg, "window_path": window_path,
+                "warm_path": warm_path, "out_path": out_path,
+                "optimizer": self.optimizer, "lr": self.lr,
+                "steps": self.steps, "max_deg": self.max_deg,
+                "entity_history": self.entity_history,
+                "max_history": self.max_history,
+            }
+            ctx = get_context("spawn")
+            parent_conn, child_conn = ctx.Pipe()
+            proc = ctx.Process(target=_train_child_main,
+                               args=(child_conn, spec),
+                               name="repro-finetune", daemon=True)
+            proc.start()
+            child_conn.close()
+            try:
+                status, payload = parent_conn.recv()
+            except EOFError:
+                raise RuntimeError(
+                    "fine-tune process died before returning a result")
+            finally:
+                proc.join()
+                parent_conn.close()
+            if status != "ok":
+                raise RuntimeError(f"fine-tune process failed: {payload}")
+            tuned = load_checkpoint(out_path, params)[0]
+            return tuned, payload
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
 
     def _fit_hybrid(self, params, window, dds, pg):
         """Refit the GBDT head on the tuned-then-frozen embedding: stage-1

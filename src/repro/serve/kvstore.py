@@ -220,18 +220,22 @@ class KVStore:
                     self.stats["evictions"] += 1
 
     def put_batch(self, keys, values, version: int = 0,
-                  model_version: int = 0) -> int:
+                  model_version: int = 0, stamp: float | None = None) -> int:
         """Write many (key, value) pairs under ONE lock acquisition and one
         clock read — the batch-layer refresh path.  Per-entry ``put`` pays
         lock + clock + eviction scan per embedding; a refresh writing
         thousands of entities amortizes all three here (eviction runs once
         per touched shard at the end).  Returns the number written.
+
+        ``stamp`` overrides the clock read: a shard process applies puts
+        with the stamp the parent recorded at the logical write, so TTL
+        ages and checkpointed stamps stay identical to the inline store.
         """
         keys = [int(k) for k in keys]
         version, model_version = int(version), int(model_version)
         crashpoint.fire("kv.put_batch.before")
         with self._lock:
-            stamp = self._clock()
+            stamp = self._clock() if stamp is None else float(stamp)
             touched = set()
             for k, v in zip(keys, values):
                 s = self.shard_of(k)
@@ -345,25 +349,42 @@ class KVStore:
                                expected_model_version=None):
         for i, pairs in enumerate(entity_t_lists):
             for j, (ent, t_e) in enumerate(pairs[:k_max]):
-                if self.require_typed:
-                    _reject_untagged(ent)
-                self.stats["gets"] += 1
-                t_found = self.latest_snapshot(ent, t_e)
-                if t_found is None:
-                    self.stats["misses"] += 1
-                    continue
-                e = self._entry(pack_key(ent, t_found))
-                if e is None:  # expired between index and read
-                    self.stats["misses"] += 1
-                    continue
-                emb[i, j] = e.value
-                mask[i, j] = 1.0
-                stale[i, j] = int(t_e) - int(t_found)
-                if t_found != t_e:
-                    self.stats["stale_hits"] += 1
-                if (expected_model_version is not None
-                        and e.model_version != expected_model_version):
-                    self.stats["model_stale_reads"] += 1
+                v, s = self._lookup_one(ent, t_e, expected_model_version)
+                if v is not None:
+                    emb[i, j] = v
+                    mask[i, j] = 1.0
+                    stale[i, j] = s
+
+    def _lookup_one(self, ent, t_e, expected_model_version=None):
+        """One slot of the versioned lookup: ``(value | None, staleness)``
+        with all the side effects of the batched path (get/miss/stale/LRU
+        counters).  The per-pair primitive both the inline lookup and a
+        shard process's owner-side READ protocol are built on — counter
+        sums and recency stay identical whichever side serves the slot.
+        Callers hold ``_lock``."""
+        if self.require_typed:
+            _reject_untagged(ent)
+        self.stats["gets"] += 1
+        t_found = self.latest_snapshot(ent, t_e)
+        if t_found is None:
+            self.stats["misses"] += 1
+            return None, -1
+        e = self._entry(pack_key(ent, t_found))
+        if e is None:  # expired between index and read
+            self.stats["misses"] += 1
+            return None, -1
+        if t_found != t_e:
+            self.stats["stale_hits"] += 1
+        if (expected_model_version is not None
+                and e.model_version != expected_model_version):
+            self.stats["model_stale_reads"] += 1
+        return e.value, int(t_e) - int(t_found)
+
+    def lookup_versioned_one(self, ent: int, t_e: int,
+                             expected_model_version: int | None = None):
+        """Locked single-slot lookup (cross-shard owner reads)."""
+        with self._lock:
+            return self._lookup_one(ent, t_e, expected_model_version)
 
     def __len__(self):
         with self._lock:
@@ -372,6 +393,38 @@ class KVStore:
     def keys(self):
         with self._lock:
             return [k for shard in self._shards for k in shard.keys()]
+
+    # ------------------------------------------------------- state transfer
+    def shard_items(self) -> list[list[tuple]]:
+        """Per-shard ``(key, value, version, stamp, model_version)`` tuples
+        in LRU order (oldest first) — the exact state a checkpoint snapshot
+        or a shard-process SNAPSHOT reply must carry.  Values are the live
+        arrays; callers serialize, they must not mutate."""
+        with self._lock:
+            return [[(k, e.value, e.version, e.stamp, e.model_version)
+                     for k, e in shard.items()]
+                    for shard in self._shards]
+
+    def load_items(self, shards_items: list[list[tuple]]) -> None:
+        """Install per-shard entries exactly as :meth:`shard_items` reported
+        them (restore path): shard placement, LRU order, and entry fields
+        are taken verbatim — no re-hash, no eviction, no stat counting."""
+        if len(shards_items) != self.num_shards:
+            raise ValueError(
+                f"load_items got {len(shards_items)} shards for a "
+                f"{self.num_shards}-shard store")
+        with self._lock:
+            for s, items in enumerate(shards_items):
+                shard = self._shards[s]
+                for k, v, ver, stamp, mv in items:
+                    k = int(k)
+                    shard[k] = _Entry(np.asarray(v, np.float32), int(ver),
+                                      float(stamp), int(mv))
+                    self._index_add(k)
+
+    def restore_stats(self, stats: dict) -> None:
+        """Overwrite counters from a checkpoint manifest."""
+        self.stats.update(stats)
 
     # ------------------------------------------------------------- persistence
     def save(self, path: str):

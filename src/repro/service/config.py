@@ -101,6 +101,37 @@ class EngineSection:
 
 
 @dataclass(frozen=True)
+class WorkersSection:
+    """Speed-layer worker *backend* — how workers are realized, orthogonal
+    to how many there are (``engine.num_workers``).
+
+    * ``backend="inline"`` (default) — workers simulated inside the serving
+      process: private jit caches, shared GIL and address space.  Zero
+      startup cost, the right choice for tests, replay analysis, and
+      latency-bound single-core deployments.
+    * ``backend="process"`` — each worker is a real OS process owning its
+      KV shard and jit cache (``repro.stream.procpool``); scheduling stays
+      in the parent, feature payloads ride shared-memory rings, and replay
+      scores stay **bit-identical** to inline.  Refresh stage-1 bins and
+      (with ``learn.train_in_process``) fine-tunes also move off the
+      serving GIL.  See docs/processes.md for the decision table.
+    * ``ring_bytes`` — per-worker shared-memory ring capacity for SCORE
+      feature payloads (oversized batches fall back to in-frame copies).
+    """
+
+    backend: str = "inline"         # 'inline' | 'process'
+    ring_bytes: int = 1 << 20       # shm ring capacity per worker process
+
+    def __post_init__(self):
+        if self.backend not in ("inline", "process"):
+            raise ValueError(
+                f"workers.backend must be 'inline' or 'process', "
+                f"got {self.backend!r}")
+        if self.ring_bytes < 4096:
+            raise ValueError("workers.ring_bytes must be >= 4096")
+
+
+@dataclass(frozen=True)
 class StoreSection:
     """KV store bounds and layout."""
 
@@ -161,6 +192,20 @@ class AdmissionSection:
     max_in_flight: int | None = None
     policy: str = "shed"            # 'shed' | 'block'
     block_max_wait_s: float | None = None   # wall bound on a block stall
+    # ---------------------------------------- queue-depth autoscaling
+    # watermark-with-hysteresis control over the worker count (and the
+    # steal threshold) driven by observed queue depth — see
+    # repro.stream.workers.DepthAutoscaler.  Both backends support it;
+    # the process backend reshards by respawning shard processes and
+    # re-placing KV entries under the new rendezvous layout.
+    autoscale: bool = False         # grow/shrink workers via pool.reshard
+    autoscale_min_workers: int = 1
+    autoscale_max_workers: int = 8
+    autoscale_high_depth: float = 8.0    # mean depth/worker that arms growth
+    autoscale_low_depth: float = 1.0     # mean depth/worker that arms shrink
+    autoscale_sustain: int = 16     # consecutive observations before acting
+    autoscale_cooldown: int = 64    # observations ignored after a reshard
+    adaptive_steal: bool = False    # re-derive steal_threshold from depth
 
     def __post_init__(self):
         if self.policy not in ("shed", "block"):
@@ -173,6 +218,17 @@ class AdmissionSection:
                 raise ValueError(f"admission.{name} must be >= 1 or None")
         if self.block_max_wait_s is not None and self.block_max_wait_s < 0:
             raise ValueError("admission.block_max_wait_s must be >= 0 or None")
+        if not 1 <= self.autoscale_min_workers <= self.autoscale_max_workers:
+            raise ValueError(
+                "need 1 <= admission.autoscale_min_workers <= "
+                "admission.autoscale_max_workers")
+        if self.autoscale_low_depth >= self.autoscale_high_depth:
+            raise ValueError(
+                "admission.autoscale_low_depth must be < autoscale_high_depth")
+        if self.autoscale_sustain < 1:
+            raise ValueError("admission.autoscale_sustain must be >= 1")
+        if self.autoscale_cooldown < 0:
+            raise ValueError("admission.autoscale_cooldown must be >= 0")
 
 
 @dataclass(frozen=True)
@@ -288,6 +344,11 @@ class LearnSection:
     steps: int = 40                 # optimizer steps per fine-tune
     head: str = "mlp"               # 'mlp' | 'hybrid' (GBDT head retrain)
     gbdt_trees: int = 25            # booster size for head='hybrid'
+    # run each fine-tune in a dedicated trainer process (off the serving
+    # GIL): the window ships as an npz, candidate params come back as an
+    # npz blob through the normal register/promotion path.  Deterministic:
+    # the child runs the same _train_window on the same bytes.
+    train_in_process: bool = False
     # promotion controller
     shadow_fraction: float = 1.0    # canary sampling during candidate eval
     promote_margin: float = 0.02    # candidate recall must beat incumbent by
@@ -332,6 +393,7 @@ class LearnSection:
 _SECTIONS = {
     "model": ModelSection,
     "engine": EngineSection,
+    "workers": WorkersSection,
     "store": StoreSection,
     "refresh": RefreshSection,
     "admission": AdmissionSection,
@@ -347,6 +409,7 @@ class ServiceConfig:
     mode: str = "streaming"         # 'batch' | 'streaming'
     model: ModelSection = field(default_factory=ModelSection)
     engine: EngineSection = field(default_factory=EngineSection)
+    workers: WorkersSection = field(default_factory=WorkersSection)
     store: StoreSection = field(default_factory=StoreSection)
     refresh: RefreshSection = field(default_factory=RefreshSection)
     admission: AdmissionSection = field(default_factory=AdmissionSection)
@@ -376,6 +439,7 @@ class ServiceConfig:
             store_ttl_s=s.ttl_seconds, store_shards=s.num_shards,
             num_workers=e.num_workers, service_model_s=e.service_model_s,
             steal_threshold=e.steal_threshold, shard_by_entity=s.shard_by_entity,
+            backend=self.workers.backend,
         )
 
     # ---------------------------------------------------------- serialization

@@ -111,6 +111,7 @@ class FraudService:
         self._shadow_jits: dict[int, object] = {}
         # mode-specific internals (populated by build)
         self._engine = None          # streaming
+        self._autoscaler = None      # streaming (admission.autoscale)
         self._batch_layer = None     # batch
         self._speed_layer = None     # batch
 
@@ -154,6 +155,21 @@ class FraudService:
             self._engine.refresher.set_model(
                 _stage1_params(self._params), self._model_version)
             self.store = self._engine.store
+            adm = cfg.admission
+            if adm.autoscale or adm.adaptive_steal:
+                from repro.stream.workers import DepthAutoscaler
+
+                self._autoscaler = DepthAutoscaler(
+                    self._engine.pool,
+                    min_workers=adm.autoscale_min_workers,
+                    max_workers=adm.autoscale_max_workers,
+                    high_depth=adm.autoscale_high_depth,
+                    low_depth=adm.autoscale_low_depth,
+                    sustain=adm.autoscale_sustain,
+                    cooldown=adm.autoscale_cooldown,
+                    autoscale=adm.autoscale,
+                    adaptive_steal=adm.adaptive_steal,
+                )
         else:
             from repro.models.hybrid import HybridModel
 
@@ -232,6 +248,10 @@ class FraudService:
                 self._wal.append_drain(None)
             self._engine.flush()
             self._engine.refresher.drain()
+        if self.mode == "streaming" and self._engine is not None:
+            # stop worker processes (no-op for the inline backend) even when
+            # the service never reached a servable state
+            self._engine.close()
         if self._wal is not None:
             self._wal.close()
         self._state = "closed"
@@ -693,6 +713,10 @@ class FraudService:
         self._acct["queue_depth_peak"] = max(
             self._acct["queue_depth_peak"], len(pool) + 1)
         out.extend(pool.submit(req, now))
+        if self._autoscaler is not None:
+            # a scale decision drains the queues; those results were scored
+            # under the old topology and must reach the caller
+            out.extend(self._autoscaler.observe(now))
         self._account_scored(out)
         if seq is not None:
             self._applied_seq = seq
@@ -1038,8 +1062,13 @@ class FraudService:
             st.flushes = pool.stats["flushes"]
             st.refreshes = self._engine.refresher.stats["refreshes"]
             st.entities_written = self._engine.refresher.stats["entities_written"]
-            st.extra = {"pool": dict(pool.stats),
-                        "workers": pool.worker_summary()}
+            # ONE worker_summary() call: the typed field and the legacy
+            # extra entry alias the same tear-free snapshot
+            workers = pool.worker_summary()
+            st.workers = workers
+            st.extra = {"pool": dict(pool.stats), "workers": workers}
+            if self._autoscaler is not None:
+                st.extra["autoscaler"] = dict(self._autoscaler.stats)
         elif self._batch_layer is not None:
             st.extra = {"speed_k_max": self.config.engine.k_max}
         if self._auto_ckpt is not None:

@@ -103,6 +103,11 @@ class ServiceStats:
     scores_by_version: dict = field(default_factory=dict)  # version -> scored
     shadow: dict = field(default_factory=dict)   # canary/shadow divergence state
     store_stats: dict = field(default_factory=dict)
+    # one tear-free per-worker snapshot (WorkerPool.worker_summary rows:
+    # queue depth, flushes, steals, restarts, liveness) — the gateway's
+    # repro_worker_* metric families render from THIS list, never from a
+    # second racy read of the pool
+    workers: list = field(default_factory=list)
     extra: dict = field(default_factory=dict)
 
     def to_dict(self) -> dict:

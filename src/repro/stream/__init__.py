@@ -4,9 +4,17 @@ layer (``repro.stream.workers``).  See docs/streaming.md."""
 from repro.stream.engine import EngineConfig, ReplayReport, StreamingEngine
 from repro.stream.events import CheckoutEvent, events_from_static, order_event_tuples
 from repro.stream.ingest import IngestResult, StreamIngester
-from repro.stream.microbatch import MicroBatcher, ScoredResult, ScoreRequest
+from repro.stream.microbatch import (
+    DeferredScore,
+    MicroBatcher,
+    PendingFlush,
+    ScoredResult,
+    ScoreRequest,
+)
+from repro.stream.procpool import ProcessWorkerPool, ProcStoreView, ShardServer
 from repro.stream.refresh import RefreshDriver
 from repro.stream.workers import (
+    DepthAutoscaler,
     ShardRouter,
     SpeedLayerWorker,
     Stage2Scorer,
@@ -15,14 +23,20 @@ from repro.stream.workers import (
 
 __all__ = [
     "CheckoutEvent",
+    "DeferredScore",
+    "DepthAutoscaler",
     "EngineConfig",
     "IngestResult",
     "MicroBatcher",
+    "PendingFlush",
+    "ProcStoreView",
+    "ProcessWorkerPool",
     "RefreshDriver",
     "ReplayReport",
     "ScoreRequest",
     "ScoredResult",
     "ShardRouter",
+    "ShardServer",
     "SpeedLayerWorker",
     "Stage2Scorer",
     "StreamIngester",

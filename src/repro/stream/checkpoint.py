@@ -55,7 +55,6 @@ import zlib
 
 import numpy as np
 
-from repro.serve.kvstore import _Entry
 from repro.service.types import ScoreRequest, ScoreResponse
 from repro.stream.events import CheckoutEvent
 from repro.utils import crashpoint
@@ -426,20 +425,22 @@ def snapshot_state(service, applied_seq: int) -> tuple[dict, dict]:
     arrays["dirty_pairs"] = np.asarray(dirty, np.int64).reshape(-1, 2)
 
     # KV shards in iteration (= LRU) order, with shard boundaries: restore
-    # must reproduce eviction order, not just contents
-    with store._lock:
-        items: list = []
-        shard_off = [0]
-        for shard in store._shards:
-            items.extend(shard.items())
-            shard_off.append(len(items))
-    arrays["kv_keys"] = np.asarray([k for k, _ in items], np.int64)
-    arrays["kv_values"] = (np.stack([e.value for _, e in items])
+    # must reproduce eviction order, not just contents.  shard_items() is
+    # polymorphic — the process backend's store proxy quiesces each shard
+    # process and collects its state through SNAPSHOT frames, so one code
+    # path checkpoints both backends bit-identically.
+    shards = store.shard_items()
+    items: list = [it for shard in shards for it in shard]
+    shard_off = [0]
+    for shard in shards:
+        shard_off.append(shard_off[-1] + len(shard))
+    arrays["kv_keys"] = np.asarray([it[0] for it in items], np.int64)
+    arrays["kv_values"] = (np.stack([it[1] for it in items])
                            if items else np.zeros((0, store.dim), np.float32))
-    arrays["kv_versions"] = np.asarray([e.version for _, e in items], np.int64)
-    arrays["kv_stamps"] = np.asarray([e.stamp for _, e in items], np.float64)
+    arrays["kv_versions"] = np.asarray([it[2] for it in items], np.int64)
+    arrays["kv_stamps"] = np.asarray([it[3] for it in items], np.float64)
     arrays["kv_model_versions"] = np.asarray(
-        [e.model_version for _, e in items], np.int64)
+        [it[4] for it in items], np.int64)
     arrays["kv_shard_off"] = np.asarray(shard_off, np.int64)
 
     queued = [(w.wid, r) for w in pool.workers
@@ -489,6 +490,11 @@ def snapshot_state(service, applied_seq: int) -> tuple[dict, dict]:
             ],
         },
     }
+    scaler = getattr(service, "_autoscaler", None)
+    if scaler is not None:
+        # hysteresis counters + rolling depth window: WAL-replayed traffic
+        # must reproduce every scale decision exactly
+        manifest["autoscaler"] = scaler.state_dict()
     return manifest, arrays
 
 
@@ -507,6 +513,12 @@ def apply_checkpoint(service, manifest: dict, arrays: dict) -> None:
     ing, store, pool, refr = (eng.ingester, eng.store, eng.pool,
                               eng.refresher)
 
+    # an autoscaled pool may have checkpointed at a different worker count
+    # than the freshly-built config default: reshard (workers + router +
+    # entity-affine store shards together) before any state is imposed
+    if len(manifest["pool"]["workers"]) != len(pool.workers):
+        pool.reshard(len(manifest["pool"]["workers"]))
+
     # --- ingester: replay the order log through the builder + partitioner
     ents = _unragged(arrays["order_ent_flat"], arrays["order_ent_off"])
     for i in range(len(arrays["order_snapshot"])):
@@ -520,23 +532,24 @@ def apply_checkpoint(service, manifest: dict, arrays: dict) -> None:
     ing._dirty = {(int(e), int(t)) for e, t in arrays["dirty_pairs"]}
     ing.stats.update(manifest["ingester"]["stats"])
 
-    # --- KV store: per-shard insertion order IS the LRU order
-    with store._lock:
-        shard_off = arrays["kv_shard_off"]
-        if len(shard_off) - 1 != store.num_shards:
-            raise CheckpointError(
-                f"checkpoint has {len(shard_off) - 1} KV shards, store has "
-                f"{store.num_shards}")
-        for s in range(store.num_shards):
-            for i in range(int(shard_off[s]), int(shard_off[s + 1])):
-                k = int(arrays["kv_keys"][i])
-                store._shards[s][k] = _Entry(
-                    np.ascontiguousarray(arrays["kv_values"][i], np.float32),
-                    int(arrays["kv_versions"][i]),
-                    float(arrays["kv_stamps"][i]),
-                    int(arrays["kv_model_versions"][i]))
-                store._index_add(k)
-        store.stats.update(manifest["store"]["stats"])
+    # --- KV store: per-shard insertion order IS the LRU order.
+    # load_items/restore_stats are polymorphic — the process backend's
+    # store proxy ships each shard's slice to its owner process.
+    shard_off = arrays["kv_shard_off"]
+    if len(shard_off) - 1 != store.num_shards:
+        raise CheckpointError(
+            f"checkpoint has {len(shard_off) - 1} KV shards, store has "
+            f"{store.num_shards}")
+    store.load_items([
+        [(int(arrays["kv_keys"][i]),
+          np.ascontiguousarray(arrays["kv_values"][i], np.float32),
+          int(arrays["kv_versions"][i]),
+          float(arrays["kv_stamps"][i]),
+          int(arrays["kv_model_versions"][i]))
+         for i in range(int(shard_off[s]), int(shard_off[s + 1]))]
+        for s in range(len(shard_off) - 1)
+    ])
+    store.restore_stats(manifest["store"]["stats"])
 
     # --- refresh driver cadence + counters
     rm = manifest["refresher"]
@@ -580,6 +593,10 @@ def apply_checkpoint(service, manifest: dict, arrays: dict) -> None:
     service._shadow = manifest["shadow"]
     service._shadow_acc = float(manifest["shadow_acc"])
     service._state = manifest["state"]
+
+    scaler = getattr(service, "_autoscaler", None)
+    if scaler is not None and manifest.get("autoscaler") is not None:
+        scaler.load_state(manifest["autoscaler"])
 
 
 # -------------------------------------------------------------- disk layout

@@ -80,6 +80,10 @@ class EngineConfig:
     # None = auto: entity-affine KV shards (num_shards == num_workers) when
     # num_workers > 1, classic key-spread shards otherwise
     shard_by_entity: bool | None = None
+    # "inline" = workers simulated in-process (classic); "process" = each
+    # worker is an OS process owning its KV shard and jit cache, scheduling
+    # stays in the parent (repro.stream.procpool) — replay bit-identical
+    backend: str = "inline"
 
 
 class StreamingEngine:
@@ -117,11 +121,14 @@ class StreamingEngine:
         self.cfg = cfg
         self.model_version = 0
         self.ecfg = engine_cfg or EngineConfig()
+        backend = self.ecfg.backend
+        if backend not in ("inline", "process"):
+            raise ValueError(
+                f"unknown workers backend {backend!r} (inline | process)")
         by_entity = self.ecfg.shard_by_entity
         if by_entity is None:
             by_entity = self.ecfg.num_workers > 1
-        self.store = store or KVStore(
-            cfg.hidden_dim,
+        store_kwargs = dict(
             capacity=self.ecfg.store_capacity,
             ttl_seconds=self.ecfg.store_ttl_s,
             # entity-affine mode: one KV shard per worker, placed by the
@@ -139,15 +146,36 @@ class StreamingEngine:
             entity_history=self.ecfg.entity_history,
             max_history=self.ecfg.max_history,
         )
-        self.pool = WorkerPool(
-            params, cfg, self.store,
-            num_workers=self.ecfg.num_workers,
-            k_max=self.ecfg.k_max,
-            max_batch=self.ecfg.max_batch,
-            max_wait_s=self.ecfg.max_wait_s,
-            service_model_s=self.ecfg.service_model_s,
-            steal_threshold=self.ecfg.steal_threshold,
-        )
+        if backend == "process":
+            if store is not None:
+                raise ValueError(
+                    "backend='process' owns its KV shards inside the worker "
+                    "processes — an injected store cannot be used")
+            from repro.stream.procpool import ProcessWorkerPool
+
+            self.pool = ProcessWorkerPool(
+                params, cfg, dict(dim=cfg.hidden_dim, **store_kwargs),
+                num_workers=self.ecfg.num_workers,
+                k_max=self.ecfg.k_max,
+                max_batch=self.ecfg.max_batch,
+                max_wait_s=self.ecfg.max_wait_s,
+                service_model_s=self.ecfg.service_model_s,
+                steal_threshold=self.ecfg.steal_threshold,
+            )
+            # the parent-side facade over the children's shards: same read/
+            # write/checkpoint surface as the inline KVStore
+            self.store = self.pool.store
+        else:
+            self.store = store or KVStore(cfg.hidden_dim, **store_kwargs)
+            self.pool = WorkerPool(
+                params, cfg, self.store,
+                num_workers=self.ecfg.num_workers,
+                k_max=self.ecfg.k_max,
+                max_batch=self.ecfg.max_batch,
+                max_wait_s=self.ecfg.max_wait_s,
+                service_model_s=self.ecfg.service_model_s,
+                steal_threshold=self.ecfg.steal_threshold,
+            )
         self.refresher = RefreshDriver(
             _stage1_params(params), cfg, self.store, self.ingester,
             max_deg=self.ecfg.max_deg,
@@ -156,6 +184,10 @@ class StreamingEngine:
             router=self.pool.router,
             community_local=self.ecfg.community_local,
             community_size=self.ecfg.community_size,
+            # process backend: padded stage-1 bins compute in the shard
+            # processes, off the serving GIL (bit-identical outputs)
+            stage1_executor=(self.pool.refresh_bins
+                             if backend == "process" else None),
         )
 
     # ------------------------------------------------------------- speed layer
@@ -241,6 +273,13 @@ class StreamingEngine:
         results.extend(self.flush())
         self.refresher.drain()
         return ReplayReport(results=results, engine=self)
+
+    # --------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Release backend resources: joins outstanding refreshes and stops
+        the worker processes (a no-op for the inline backend)."""
+        self.refresher.drain()
+        self.pool.shutdown()
 
 
 @dataclass

@@ -53,6 +53,60 @@ def bucket_size(n: int, max_batch: int) -> int:
     return min(b, max_batch)
 
 
+class DeferredScore:
+    """A score_fn result still in flight (process-backed scorers).
+
+    An inline ``score_fn`` returns ``(probs, staleness[, model_version])``
+    synchronously; a process-backed scorer posts the padded batch to its
+    owner process and returns one of these instead.  ``wait()`` blocks
+    until the reply frame lands and returns the same tuple the inline call
+    would have.  :meth:`MicroBatcher.flush` turns a deferred result into a
+    :class:`PendingFlush`, which the pool resolves before any result is
+    released — delivery order and accounting stay inline-identical while
+    several posted flushes overlap in flight across worker processes.
+    """
+
+    def __init__(self, wait):
+        self._wait = wait
+
+    def wait(self):
+        return self._wait()
+
+
+class PendingFlush:
+    """A flush whose scores are still crossing a process boundary.
+
+    Carries everything :meth:`MicroBatcher.flush` had already decided —
+    the popped batch, its real row count, the trigger stamp — so
+    ``resolve()`` can finish result construction exactly as the inline
+    path would have.  Truthiness mirrors a non-empty result list, so the
+    worker's per-kind flush accounting is unchanged.
+    """
+
+    def __init__(self, batcher, batch, n, now, deferred, t0):
+        self.batcher = batcher
+        self.batch = batch
+        self.n = n
+        self.now = now
+        self.deferred = deferred
+        self.worker = None          # stamped by the worker that flushed
+        self._t0 = t0
+
+    def __bool__(self) -> bool:
+        return True
+
+    def resolve(self) -> list:
+        """Block on the reply and build the ScoredResults (parent side)."""
+        probs, staleness, model_version = self.deferred.wait()
+        service = time.perf_counter() - self._t0
+        out = self.batcher._results(self.batch, self.n, self.now, probs,
+                                    staleness, int(model_version), service)
+        if self.worker is not None:
+            for r in out:
+                r.worker = self.worker
+        return out
+
+
 class MicroBatcher:
     """Queue + flush policy for speed-layer micro-batches.
 
@@ -163,8 +217,12 @@ class MicroBatcher:
         return out
 
     # ------------------------------------------------------------------ flush
-    def flush(self, now: float | None = None) -> list[ScoredResult]:
+    def flush(self, now: float | None = None):
         """Score everything queued as one padded fixed-shape batch.
+
+        Returns the ``ScoredResult`` list, or a :class:`PendingFlush` when
+        the scorer answered with a :class:`DeferredScore` (process backend
+        — the pool resolves it before releasing results).
 
         The pop is atomic and re-checks emptiness: a concurrent drain (work
         steal, another flush) between the trigger firing and this pop must
@@ -191,13 +249,23 @@ class MicroBatcher:
         t0 = time.perf_counter()
         # scorers may return (probs, staleness) or, when version-aware,
         # (probs, staleness, model_version) — the version whose jit cache
-        # served this flush (hot-swap observability)
+        # served this flush (hot-swap observability) — or a DeferredScore
+        # when the batch was posted to a worker process
         out = self.score_fn(feats, key_lists)
+        if isinstance(out, DeferredScore):
+            return PendingFlush(self, batch, n, now, out, t0)
         service = time.perf_counter() - t0
         probs, staleness = out[0], out[1]
         model_version = int(out[2]) if len(out) > 2 else 0
-        crashpoint.fire("flush.after_score")
+        return self._results(batch, n, now, probs, staleness, model_version,
+                             service)
 
+    def _results(self, batch, n, now, probs, staleness, model_version,
+                 service) -> list[ScoredResult]:
+        """Post-score half of a flush — shared by the synchronous path and
+        :meth:`PendingFlush.resolve` so accounting and result construction
+        cannot drift between backends."""
+        crashpoint.fire("flush.after_score")
         self.stats["flushes"] += 1
         return [
             ScoredResult(

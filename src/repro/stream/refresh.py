@@ -88,6 +88,7 @@ class RefreshDriver:
         router=None,
         community_local: bool = True,
         community_size: int = 4096,
+        stage1_executor=None,
     ):
         self.params = params
         self.cfg = cfg
@@ -102,6 +103,14 @@ class RefreshDriver:
         self.community_size = max(1, int(community_size))
         self.version = 0
         self.model_version = 0
+        # optional off-GIL stage-1 backend:
+        # ``executor(padded_graphs, entity_hints, model_version) -> [h]``
+        # (the process pool's refresh_bins — each padded bin computes in the
+        # shard process owning the bin's first dirty entity).  None = the
+        # inline jit below.  Padding, bin-packing, and row gathering stay
+        # here either way, so executor outputs are bit-identical by the
+        # same argument as scoring (pure fixed-shape compute).
+        self.stage1_executor = stage1_executor
         self._stage1 = jax.jit(lambda p, g: lnn_stage1(p, self.cfg, g))
         self._windows_since_refresh = 0
         self._lock = threading.Lock()
@@ -233,29 +242,48 @@ class RefreshDriver:
             groups.setdefault(self.router.worker_of(pair[0]), []).append(pair)
         return [(s, sorted(groups[s])) for s in sorted(groups)]
 
-    def _stage1_embeddings(self, params, pending, work) -> tuple[dict, int, int]:
+    def _run_stage1(self, pgs: list, entity_hints: list, params,
+                    model_version: int) -> list[np.ndarray]:
+        """One stage-1 forward per padded graph: via the executor (shard
+        processes, off the serving GIL) when one is attached, else the
+        inline jit — identical outputs either way."""
+        if self.stage1_executor is not None:
+            return self.stage1_executor(pgs, entity_hints, int(model_version))
+        return [np.asarray(self._stage1(params, pg)) for pg in pgs]
+
+    def _stage1_embeddings(self, params, model_version, pending,
+                           work) -> tuple[dict, int, int]:
         """Run stage 1 over ``work`` and gather the dirty pairs' rows.
 
         Returns ``({(ent, t): row}, nodes_padded, launches)``.  Each padded
         graph gets a power-of-two node budget so the jit cache holds
-        O(log N) shapes over an unbounded stream, not one per refresh."""
+        O(log N) shapes over an unbounded stream, not one per refresh.
+        Two passes: pad every bin first, then launch them all through
+        ``_run_stage1`` — an executor sees the whole refresh at once and
+        can overlap the bins across shard processes."""
         emb: dict = {}
         if isinstance(work, list):          # community-local bins
-            total = 0
+            pgs, hints, total = [], [], 0
             for sub, pairs in work:
                 budget = _pow2_at_least(sub.coo.num_nodes)
-                pg = pad_graph(sub.coo, num_nodes=budget, max_deg=self.max_deg)
-                h = np.asarray(self._stage1(params, pg))
+                pgs.append(pad_graph(sub.coo, num_nodes=budget,
+                                     max_deg=self.max_deg))
+                # dispatch hint: the bin's first dirty entity — community-
+                # local bins land on the shard process owning their entities
+                hints.append(pairs[0][0] if pairs else 0)
+                total += budget
+            hs = self._run_stage1(pgs, hints, params, model_version)
+            for h, (sub, pairs) in zip(hs, work):
                 for ent, t in pairs:
                     nid = sub.entity_snap_ids.get((ent, t))
                     if nid is not None:
                         emb[(ent, t)] = h[nid]
-                total += budget
             return emb, total, len(work)
         dds = work                           # whole-graph path
         budget = _pow2_at_least(dds.coo.num_nodes)
         pg = pad_graph(dds.coo, num_nodes=budget, max_deg=self.max_deg)
-        h = np.asarray(self._stage1(params, pg))
+        hint = pending[0][0] if pending else 0
+        h = self._run_stage1([pg], [hint], params, model_version)[0]
         for ent, t in pending:
             nid = dds.entity_snap_ids.get((ent, t))
             if nid is not None:
@@ -267,7 +295,7 @@ class RefreshDriver:
         crashpoint.fire("refresh.before_stage1")
         t0 = time.monotonic()
         emb, nodes_padded, launches = self._stage1_embeddings(
-            params, pending, work)
+            params, model_version, pending, work)
         groups = self._shard_groups(pending)
         crashpoint.fire("refresh.before_puts")
         with self._lock:

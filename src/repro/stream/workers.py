@@ -42,6 +42,7 @@ from repro.models.hybrid import HybridModel
 from repro.serve.kvstore import KVStore, entity_shard
 from repro.stream.microbatch import (
     MicroBatcher,
+    PendingFlush,
     ScoredResult,
     ScoreRequest,
     bucket_size,
@@ -179,6 +180,23 @@ class Stage2Scorer:
         emb, mask, stale = self.store.lookup_batch_versioned(
             entity_t_lists, self.k_max, expected_model_version=version
         )
+        return self._score(params, version, stage2, hybrid,
+                           feats, entity_t_lists, emb, mask, stale)
+
+    def score_slots(self, feats: np.ndarray, entity_t_lists: list,
+                    emb: np.ndarray, mask: np.ndarray, stale: np.ndarray):
+        """Score a batch whose KV slots were already resolved — the shard
+        process path: the parent pre-reads cross-shard slots from their
+        owners and the owner process fills its local slots, then calls
+        this with the merged ``(emb, mask, stale)``.  Numerically identical
+        to ``__call__`` by construction (same ``_score`` tail)."""
+        params, version, stage2, hybrid = (
+            self.params, self.model_version, self._stage2, self._hybrid)
+        return self._score(params, version, stage2, hybrid,
+                           feats, entity_t_lists, emb, mask, stale)
+
+    def _score(self, params, version, stage2, hybrid, feats,
+               entity_t_lists, emb, mask, stale):
         f = np.ascontiguousarray(feats, np.float32)
         st = self._slot_types(entity_t_lists) if self._typed else None
         if hybrid:
@@ -232,7 +250,8 @@ class SpeedLayerWorker:
         # the victim's original (long-missed) triggers
         self.stamp_floor = 0.0
         self.stats = {"stolen_in": 0, "stolen_out": 0,
-                      "max_queue_depth": 0, "depth_sum": 0, "depth_samples": 0}
+                      "max_queue_depth": 0, "depth_sum": 0,
+                      "depth_samples": 0, "restarts": 0}
 
     def __len__(self) -> int:
         return len(self.batcher)
@@ -259,8 +278,14 @@ class SpeedLayerWorker:
         out = self.batcher.flush(stamp)
         if out:
             self.batcher.stats[kind] += 1
-            for r in out:
-                r.worker = self.wid
+            if isinstance(out, PendingFlush):
+                # process backend: the batch is in flight to this worker's
+                # shard process; the pool resolves it before any release
+                out.worker = self.wid
+                out = [out]
+            else:
+                for r in out:
+                    r.worker = self.wid
             if self.service_model_s > 0.0:
                 self.busy_until = stamp + self.service_model_s
         return out
@@ -369,6 +394,20 @@ class WorkerPool:
         return sum(len(w) for w in self.workers)
 
     # ------------------------------------------------------------------ pump
+    def _collect(self, results: list) -> list[ScoredResult]:
+        """Resolve any in-flight process flushes before results enter the
+        reorder buffer.  Inline flushes are already ScoredResults, so this
+        is the identity for the in-process backend; the process backend's
+        parallelism comes from several posted flushes resolving here
+        together after one pump pass — delivery order, checkpoint state,
+        and accounting stay inline-identical."""
+        if not any(isinstance(r, PendingFlush) for r in results):
+            return results
+        out: list[ScoredResult] = []
+        for r in results:
+            out.extend(r.resolve() if isinstance(r, PendingFlush) else [r])
+        return out
+
     def poll(self, now: float) -> list[ScoredResult]:
         """Advance the virtual clock: fire every due trigger, then let idle
         workers steal from backed-up shards."""
@@ -376,7 +415,7 @@ class WorkerPool:
         for w in self.workers:
             results.extend(w.pump(now))
         results.extend(self._steal_pass(now))
-        self._reorder.add(results)
+        self._reorder.add(self._collect(results))
         return self._reorder.release()
 
     def submit(self, request: ScoreRequest, now: float) -> list[ScoredResult]:
@@ -399,7 +438,7 @@ class WorkerPool:
         results = w.pump(now)
         for worker in self.workers:
             worker.sample_depth()
-        self._reorder.add(results)
+        self._reorder.add(self._collect(results))
         return self._reorder.release()
 
     def _steal_pass(self, now: float) -> list[ScoredResult]:
@@ -484,7 +523,7 @@ class WorkerPool:
         if len(victim) == 0:
             return []
         results = victim._flush_at(now, "forced_flushes")
-        self._reorder.add(results)
+        self._reorder.add(self._collect(results))
         return self._reorder.release()
 
     def drain_to_depth(self, max_depth: int, now: float,
@@ -521,7 +560,7 @@ class WorkerPool:
         results: list[ScoredResult] = []
         for w in self.workers:
             results.extend(w.drain(now))
-        self._reorder.add(results)
+        self._reorder.add(self._collect(results))
         out = self._reorder.release()
         assert len(self._reorder) == 0, "reorder buffer retained results"
         return out
@@ -529,6 +568,11 @@ class WorkerPool:
     def warmup(self) -> None:
         for w in self.workers:
             w.scorer.warmup(w.batcher.max_batch)
+
+    def shutdown(self) -> None:
+        """Release backend resources.  The inline pool holds none; the
+        process backend overrides this to stop its shard processes and
+        unlink shared memory (``FraudService.close`` calls it)."""
 
     # ----------------------------------------------------------------- stats
     @property
@@ -560,5 +604,110 @@ class WorkerPool:
                 "stolen_out": w.stats["stolen_out"],
                 "max_queue_depth": w.stats["max_queue_depth"],
                 "mean_queue_depth": mean_depth,
+                "queue_depth": len(w),
+                "restarts": w.stats.get("restarts", 0),
+                "alive": True,
             })
         return out
+
+
+class DepthAutoscaler:
+    """Queue-depth-driven pool sizing + adaptive steal threshold.
+
+    Observes total queued depth once per submission (virtual-clock
+    telemetry, so replays are deterministic) and applies classic
+    watermark-with-hysteresis control:
+
+    * mean depth per worker above ``high_depth`` for ``sustain``
+      consecutive observations -> grow by one worker
+      (``WorkerPool.reshard``), up to ``max_workers``;
+    * below ``low_depth`` for ``sustain`` observations -> shrink by one,
+      down to ``min_workers``;
+    * after any reshard, ``cooldown`` observations pass before another
+      decision — reshard drains the queues, so depth right after a scale
+      event says nothing about steady state.
+
+    With ``adaptive_steal`` the pool's ``steal_threshold`` is re-derived
+    each observation from a rolling depth window: twice the rolling mean
+    depth per worker, floored at ``max_batch`` — backed-up shards shed
+    work sooner under sustained pressure, and stealing quiets down when
+    queues are shallow.  All state is plain counters + a bounded window,
+    exposed via ``state_dict``/``load_state`` so checkpoints capture it
+    and replay reproduces every scale decision bit-identically.
+    """
+
+    WINDOW = 32
+
+    def __init__(self, pool: WorkerPool, *, min_workers: int = 1,
+                 max_workers: int = 8, high_depth: float = 8.0,
+                 low_depth: float = 1.0, sustain: int = 16,
+                 cooldown: int = 64, autoscale: bool = True,
+                 adaptive_steal: bool = False):
+        if not 1 <= min_workers <= max_workers:
+            raise ValueError("need 1 <= min_workers <= max_workers")
+        if low_depth >= high_depth:
+            raise ValueError("low_depth must be < high_depth")
+        self.pool = pool
+        self.min_workers = int(min_workers)
+        self.max_workers = int(max_workers)
+        self.high_depth = float(high_depth)
+        self.low_depth = float(low_depth)
+        self.sustain = max(1, int(sustain))
+        self.cooldown = max(0, int(cooldown))
+        self.autoscale = bool(autoscale)
+        self.adaptive_steal = bool(adaptive_steal)
+        self._above = 0
+        self._below = 0
+        self._cool = 0
+        self._window: list[int] = []
+        self.stats = {"scale_ups": 0, "scale_downs": 0, "observations": 0}
+
+    def observe(self, now: float) -> list[ScoredResult]:
+        """One control step.  Returns results drained by a reshard (they
+        were scored under the old topology and must reach the caller)."""
+        pool = self.pool
+        depth = len(pool)
+        n = pool.num_workers
+        self.stats["observations"] += 1
+        self._window.append(depth)
+        if len(self._window) > self.WINDOW:
+            self._window.pop(0)
+        if self.adaptive_steal:
+            mean = sum(self._window) / len(self._window)
+            pool.steal_threshold = max(
+                pool.max_batch, int(2.0 * mean / max(1, n)))
+        if not self.autoscale:
+            return []
+        if self._cool > 0:
+            self._cool -= 1
+            return []
+        per_worker = depth / max(1, n)
+        self._above = self._above + 1 if per_worker > self.high_depth else 0
+        self._below = self._below + 1 if per_worker < self.low_depth else 0
+        target = n
+        if self._above >= self.sustain and n < self.max_workers:
+            target = n + 1
+            self.stats["scale_ups"] += 1
+        elif self._below >= self.sustain and n > self.min_workers:
+            target = n - 1
+            self.stats["scale_downs"] += 1
+        if target == n:
+            return []
+        self._above = self._below = 0
+        self._cool = self.cooldown
+        return pool.reshard(target)
+
+    # ----------------------------------------------------------- durability
+    def state_dict(self) -> dict:
+        """Control state for the checkpoint manifest — restoring it makes
+        WAL-replayed traffic reproduce every scale decision exactly."""
+        return {"above": self._above, "below": self._below,
+                "cool": self._cool, "window": list(self._window),
+                "stats": dict(self.stats)}
+
+    def load_state(self, d: dict) -> None:
+        self._above = int(d.get("above", 0))
+        self._below = int(d.get("below", 0))
+        self._cool = int(d.get("cool", 0))
+        self._window = [int(x) for x in d.get("window", [])]
+        self.stats.update(d.get("stats", {}))

@@ -41,6 +41,10 @@ CRASH_POINTS = (
     "checkpoint.before",
     "checkpoint.mid",
     "checkpoint.after",
+    # process-backend only: fires in the parent just before a SCORE frame is
+    # posted to a shard process; the harness converts it into a SIGKILL of
+    # that child (tests/test_procpool.py) — the inline pool never crosses it
+    "worker_kill",
 )
 
 _KNOWN = frozenset(CRASH_POINTS)

@@ -26,16 +26,24 @@ uninterrupted run by the callers — bit-identical or bust.
 """
 from __future__ import annotations
 
+import numpy as np
+
 from repro.service import FraudService
 from repro.utils import crashpoint
 from repro.utils.crashpoint import SimulatedCrash
 
 
 def store_contents(store) -> dict:
-    """key -> (embedding bytes, model version) for every entry, every shard."""
+    """key -> (embedding bytes, model version) for every entry, every shard.
+
+    Goes through the public ``shard_items()`` surface so it works for both
+    the in-process :class:`~repro.serve.kvstore.KVStore` and the
+    process-backend :class:`~repro.stream.procpool.ProcStoreView` (whose
+    shards live in worker processes).  Stamps are wall-clock and excluded —
+    parity is value bytes + versions."""
     return {
-        k: (e.value.tobytes(), e.model_version)
-        for shard in store._shards for k, e in shard.items()
+        k: (np.asarray(v).tobytes(), mv)
+        for shard in store.shard_items() for k, v, _ver, _st, mv in shard
     }
 
 

@@ -271,6 +271,66 @@ def test_restore_keeps_logging_so_recoveries_chain(tiny_world, tmp_path):
     wal.close()
 
 
+@pytest.mark.parametrize("backend", ["inline", "process"])
+def test_checkpoint_restore_roundtrip_backends(tiny_world, tmp_path, backend):
+    """Mid-stream checkpoint → abandon → restore → finish: merged scores
+    and KV bytes equal an uninterrupted run, for BOTH worker backends.
+    With backend='process' the checkpoint gathers shard state out of the
+    worker processes and restore re-seeds a fresh set of them."""
+    from faultinject import merge_responses, store_contents
+
+    events, cfg, params = tiny_world
+
+    def build():
+        sc = ServiceConfig(
+            mode="streaming", model=ModelSection.from_lnn_config(cfg),
+        ).replace(engine={"num_workers": 2, "max_batch": 4},
+                  workers={"backend": backend})
+        return FraudService(sc, params=params).build()
+
+    oracle = build()
+    try:
+        base = []
+        for ev in events:
+            base.extend(oracle.submit(ev))
+        base.extend(oracle.drain())
+        base_scores = merge_responses({}, base)
+        base_store = store_contents(oracle.store)
+    finally:
+        oracle.close()
+
+    root = str(tmp_path / "root")
+    svc = build().enable_wal(root)
+    delivered = []
+    for ev in events[:12]:
+        delivered.extend(svc.submit(ev))
+    svc.checkpoint()
+    for ev in events[12:16]:
+        delivered.extend(svc.submit(ev))
+    # abandon mid-stream (the crash): no flush, no drain — just release
+    # the child processes and the WAL handle the restore will reopen
+    svc.engine.pool.shutdown()
+    svc._wal.close()
+
+    svc2 = FraudService.restore(root)
+    try:
+        merged = merge_responses({}, delivered)
+        merge_responses(merged, svc2.last_recovery["responses"])
+        resume = svc2.engine.ingester.num_events
+        assert resume == 16
+        rest = []
+        for ev in events[resume:]:
+            rest.extend(svc2.submit(ev))
+        rest.extend(svc2.drain())
+        merge_responses(merged, rest)
+        assert merged == base_scores, \
+            f"{backend}: scores diverged across checkpoint/restore"
+        assert store_contents(svc2.store) == base_store, \
+            f"{backend}: KV bytes diverged across checkpoint/restore"
+    finally:
+        svc2.close()
+
+
 def test_restore_rejects_future_format(tiny_world, tmp_path):
     events, cfg, params = tiny_world
     root = str(tmp_path)

@@ -26,7 +26,13 @@ from repro.service import FraudService, ModelSection, ServiceConfig
 from repro.utils import crashpoint
 from repro.utils.crashpoint import CRASH_POINTS
 
-from faultinject import run_uninterrupted, run_with_crash
+from faultinject import (
+    drive,
+    merge_responses,
+    run_uninterrupted,
+    run_with_crash,
+    store_contents,
+)
 
 N_EVENTS = 60
 SWAP_AT = 25          # hot-swap to version 1 after submitting events[25]
@@ -50,6 +56,11 @@ _HITS = {
     "checkpoint.mid": 1,
     "checkpoint.after": 1,
 }
+
+#: "worker_kill" is a *shard-process* death the pool absorbs (SIGKILL +
+#: restore + exactly-once re-dispatch), not a parent crash the WAL harness
+#: recovers from — it gets its own process-backend test below
+_PARENT_POINTS = [p for p in CRASH_POINTS if p != "worker_kill"]
 
 
 @pytest.fixture(scope="module")
@@ -104,14 +115,48 @@ def _sweep(world, baselines, tmp_path, point, num_workers):
         f"{point}: KV-store bytes diverged after recovery"
 
 
-@pytest.mark.parametrize("point", CRASH_POINTS)
+@pytest.mark.parametrize("point", _PARENT_POINTS)
 def test_crash_matrix_single_worker(world, baselines, tmp_path, point):
     _sweep(world, baselines, tmp_path, point, num_workers=1)
 
 
-@pytest.mark.parametrize("point", CRASH_POINTS)
+@pytest.mark.parametrize("point", _PARENT_POINTS)
 def test_crash_matrix_four_workers(world, baselines, tmp_path, point):
     _sweep(world, baselines, tmp_path, point, num_workers=4)
+
+
+@pytest.mark.parametrize("num_workers", [1, 4])
+def test_worker_kill_process_backend(world, baselines, num_workers):
+    """SIGKILL a shard process mid-stream (the ``worker_kill`` crash point
+    turns the k-th SCORE post into a kill of its target child).  The pool
+    must restore the shard from its last snapshot + put-journal suffix and
+    re-dispatch the in-flight flush exactly once: scores AND KV bytes stay
+    bit-identical to the inline oracle, with the restart visible in the
+    per-worker stats."""
+    events, cfg, params, swap_params = world
+    sc = ServiceConfig(
+        mode="streaming", model=ModelSection.from_lnn_config(cfg),
+    ).replace(engine={"num_workers": num_workers, "max_batch": 4},
+              workers={"backend": "process"})
+    svc = FraudService(sc, params=params).build()
+    try:
+        crashpoint.arm("worker_kill", hit=8)
+        try:
+            responses = drive(svc, events, swap=(SWAP_AT, swap_params, 1))
+        finally:
+            crashpoint.disarm()
+        pool = svc.engine.pool
+        restarts = sum(row["restarts"] for row in pool.worker_summary())
+        assert restarts >= 1, "armed worker_kill never killed a child"
+        assert pool.dead_workers() == 0
+        base_scores, base_store = baselines[num_workers]
+        scores = merge_responses({}, responses)
+        assert scores == base_scores, \
+            "scores diverged across worker kill + restore"
+        assert store_contents(svc.store) == base_store, \
+            "KV-store bytes diverged across worker kill + restore"
+    finally:
+        svc.close()
 
 
 def test_no_crash_wal_run_matches_oracle(world, baselines, tmp_path):

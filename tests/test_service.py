@@ -448,6 +448,9 @@ def test_service_stats_json_roundtrip():
                 "sampled": 45, "divergence_sum": 0.5, "divergence_max": 0.1,
                 "last_divergence": 0.01, "alerts": 1, "alert_active": True},
         store_stats={"hits": 10, "model_stale_reads": 11},
+        workers=[{"worker": 0, "queue_depth": 2, "flushes": 5,
+                  "stolen_in": 1, "stolen_out": 0, "restarts": 0,
+                  "alive": True}],
         extra={"pool": {"steals": 1}},
     )
     defaults = ServiceStats()

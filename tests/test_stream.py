@@ -316,17 +316,25 @@ def test_deadline_flush_racing_concurrent_drain_is_empty_noop():
 
 
 # ------------------------------------------- multi-worker replay parity
+@pytest.mark.parametrize("backend", ["inline", "process"])
 @pytest.mark.parametrize("num_workers", [1, 2, 4])
-def test_replay_parity_nworkers_bit_identical(stream_world, num_workers):
+def test_replay_parity_nworkers_bit_identical(stream_world, num_workers,
+                                              backend):
     """Acceptance: N-worker WorkerPool scores are BIT-identical to the
     single-worker StreamingEngine for N in {1, 2, 4} — same events, same
-    refresh cadence, arbitrary per-worker flush interleavings."""
+    refresh cadence, arbitrary per-worker flush interleavings — for BOTH
+    the inline backend and the process backend (each worker a real OS
+    process owning its KV shard)."""
     events, g, cfg, params = stream_world
     ref = StreamingEngine(params, cfg, EngineConfig(max_batch=8))
     s_ref = ref.replay(events).scores_by_order()
     eng = StreamingEngine(params, cfg,
-                          EngineConfig(max_batch=8, num_workers=num_workers))
-    rep = eng.replay(events)
+                          EngineConfig(max_batch=8, num_workers=num_workers,
+                                       backend=backend))
+    try:
+        rep = eng.replay(events)
+    finally:
+        eng.close()
     s = rep.scores_by_order()
     assert set(s) == set(s_ref)
     assert all(s[o] == s_ref[o] for o in s_ref), \

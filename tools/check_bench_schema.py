@@ -27,6 +27,7 @@ DEFAULT_RECORDS = [
     "experiments/BENCH_recovery.json",
     "experiments/BENCH_hetero.json",
     "experiments/BENCH_learning.json",
+    "experiments/BENCH_procpool.json",
 ]
 
 PCTS = ("p50", "p95", "p99")
@@ -283,6 +284,44 @@ def check_learning(d: dict) -> list[str]:
     return e
 
 
+def check_procpool(d: dict) -> list[str]:
+    e: list[str] = []
+    _require(e, _num(d.get("n_events")), "n_events: finite number required")
+    par = d.get("parity") or {}
+    _require(e, _num(par.get("checked_events")), "parity.checked_events: number")
+    _require(e, _num(par.get("hot_swap_at")), "parity.hot_swap_at: number")
+    for n in ("1", "4"):
+        rec = par.get(n) or {}
+        for k in ("scores_identical", "kv_identical", "counters_identical"):
+            _require(e, isinstance(rec.get(k), bool),
+                     f"parity[{n}].{k}: bool required")
+        for k in ("orders", "kv_entries"):
+            _require(e, _num(rec.get(k)), f"parity[{n}].{k}: number")
+    sc = d.get("scaling") or {}
+    sweep = sc.get("sweep")
+    _require(e, isinstance(sweep, list) and len(sweep) == 2,
+             "scaling.sweep: list of the N=1 and N=4 runs")
+    for i, p in enumerate(sweep or []):
+        for k in ("num_workers", "wall_s", "events_per_s"):
+            _require(e, _num(p.get(k)), f"scaling.sweep[{i}].{k}: number")
+    for k in ("speedup_4v1", "cores"):
+        _require(e, _num(sc.get(k)), f"scaling.{k}: number")
+    _require(e, isinstance(sc.get("limited_by_cores"), bool),
+             "scaling.limited_by_cores: bool required")
+    # the two process-plane invariants are gates, not statistics: the
+    # process backend must replay bit-identically to inline, and four
+    # shard processes must actually buy >= 2x where the host has cores
+    # to run them (limited_by_cores records when that is unmeasurable)
+    gates = d.get("gates") or {}
+    _require(e, gates.get("process_parity_bit_identical") is True,
+             "gates.process_parity_bit_identical: must be True "
+             "(process-vs-inline replay-parity gate)")
+    _require(e, gates.get("throughput_scales_with_n") is True,
+             "gates.throughput_scales_with_n: must be True "
+             "(N=4 >= 2x N=1 scaling gate)")
+    return e
+
+
 CHECKERS = {
     "BENCH_streaming.json": check_streaming,
     "BENCH_stage2.json": check_stage2,
@@ -292,6 +331,7 @@ CHECKERS = {
     "BENCH_recovery.json": check_recovery,
     "BENCH_hetero.json": check_hetero,
     "BENCH_learning.json": check_learning,
+    "BENCH_procpool.json": check_procpool,
 }
 
 
